@@ -1,0 +1,39 @@
+"""Figs 6-7: sensitivity of Cluster MHRA to alpha — runtime/energy trade-off
+and the task-assignment distribution per endpoint."""
+from __future__ import annotations
+
+from collections import Counter
+
+from benchmarks.common import run_strategy
+
+
+def run(alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), n_per=128):
+    rows = []
+    for a in alphas:
+        ex, res = run_strategy("cluster_mhra", alpha=a, n_per=n_per)
+        dist = Counter(res.schedule.assignments.values())
+        rows.append(dict(
+            alpha=a, runtime_s=res.makespan_s,
+            energy_kj=res.measured_energy_j / 1e3,
+            assignment={k: dist.get(k, 0) for k in ("desktop", "theta", "ic", "faster")},
+        ))
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'alpha':>6}{'runtime_s':>11}{'energy_kJ':>11}   assignment")
+    for r in rows:
+        print(f"{r['alpha']:>6.1f}{r['runtime_s']:>11.1f}{r['energy_kj']:>11.1f}"
+              f"   {r['assignment']}")
+    lo, hi = rows[0], rows[-1]
+    return [
+        ("fig6_runtime_ratio_a1_vs_a0", 0.0,
+         f"{hi['runtime_s'] / max(lo['runtime_s'], 1e-9):.2f}x"),
+        ("fig6_energy_ratio_a1_vs_a0", 0.0,
+         f"{hi['energy_kj'] / max(lo['energy_kj'], 1e-9):.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+from repro.core.endpoint import table1_testbed
+from repro.core.executor import GreenFaaSExecutor
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import SEBS_FUNCTIONS, TestbedSim
+
+
+def make_workload(n_per: int = 256):
+    """The paper's synthetic workload: n_per invocations of each of the
+    7 SeBS functions, inputs initially on desktop (shared/cacheable)."""
+    tasks = []
+    i = 0
+    for fn in SEBS_FUNCTIONS:
+        for _ in range(n_per):
+            tasks.append(
+                TaskSpec(id=f"t{i}", fn=fn, inputs=(("desktop", 1, 200e6, True),))
+            )
+            i += 1
+    return tasks
+
+
+def run_strategy(strategy, alpha=0.5, site=None, n_per=256, seed=1, warm=True):
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=seed)
+    ex = GreenFaaSExecutor(eps, sim, alpha=alpha, strategy=strategy, site=site)
+    if warm:
+        ex.warmup(list(SEBS_FUNCTIONS), per_endpoint=2)
+    res = ex.run_batch(make_workload(n_per))
+    return ex, res

@@ -1,0 +1,100 @@
+"""§Perf hillclimb driver: lower a cell under sharding/remat variants and
+compare the three roofline terms.  Shallow fixed depth + unrolled scans so
+variant deltas are exact (same depth across variants => same scale factor).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --exp decode_shard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "hillclimb"
+
+# experiment -> (arch, shape, depth, variants{name: lower_cell kwargs})
+EXPERIMENTS = {
+    # decode weight-gather pathology: who moves, weights or activations?
+    "decode_shard": (
+        "deepseek-67b", "decode_32k", 8,
+        {
+            "baseline": {},
+            # replicate the FSDP dim at serve: weights resident, no per-step
+            # gather over `data`
+            "replicate_embed": {"rule_overrides": {"embed": ()}},
+            # shard kv/ffn weight rows over data but replicate activations'
+            # batch: activations move (tiny), weights stay
+            "batch_repl": {"rule_overrides": {"batch": ()}},
+        },
+    ),
+    # dense training: remat policy + act_seq trade-offs
+    "train_dense": (
+        "deepseek-67b", "train_4k", 2,
+        {
+            "baseline": {},
+            # save matmul outputs instead of recomputing everything
+            "remat_dots": {"remat_policy": "dots"},
+            # keep activations seq-replicated (no act_seq all-gathers)
+            "no_seqshard": {"rule_overrides": {"act_seq": ()}},
+            "dots_no_seqshard": {
+                "remat_policy": "dots", "rule_overrides": {"act_seq": ()},
+            },
+        },
+    ),
+    # MoE: dispatch group size + capacity factor
+    "moe_dispatch": (
+        "moonshot-v1-16b-a3b", "train_4k", 2,
+        {
+            "baseline": {},
+            "group_256": {"moe_group": 256},
+            "group_1024": {"moe_group": 1024},
+            "group_4096": {"moe_group": 4096},
+        },
+    ),
+}
+
+
+def run_exp(name: str, mesh_multi: bool = False):
+    from repro.launch.dryrun import lower_cell
+
+    arch, shape, depth, variants = EXPERIMENTS[name]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    rows = {}
+    for vname, kw in variants.items():
+        fp = RESULTS / f"{name}__{vname}.json"
+        if fp.exists():
+            rows[vname] = json.loads(fp.read_text())
+            print(f"[skip] {name}/{vname}")
+            continue
+        print(f"[hillclimb] {name}/{vname}", flush=True)
+        res = lower_cell(
+            arch, shape, mesh_multi, verbose=False, depth=depth, unroll=True, **kw
+        )
+        fp.write_text(json.dumps(res, indent=1))
+        rows[vname] = res
+    print(f"\n=== {name} ({arch}:{shape} @depth {depth}) ===")
+    print(f"{'variant':<18}{'TFLOP/dev':>10}{'GB_acc':>8}{'coll_GB':>9}"
+          f"{'temp_GB':>8}  collectives")
+    for vname, r in rows.items():
+        coll = ", ".join(
+            f"{k}:{v['bytes']/1e9:.2f}GB" for k, v in r.get("collectives", {}).items()
+        )
+        print(f"{vname:<18}{r['flops_per_device']/1e12:>10.2f}"
+              f"{r['bytes_accessed_per_device']/1e9:>8.1f}"
+              f"{r['collective_bytes_per_device']/1e9:>9.2f}"
+              f"{r.get('memory', {}).get('temp_size_in_bytes', 0)/1e9:>8.1f}  {coll}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="decode_shard", choices=list(EXPERIMENTS) + ["all"])
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+    exps = list(EXPERIMENTS) if args.exp == "all" else [args.exp]
+    for e in exps:
+        run_exp(e, args.multi)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Table V: comparison of task placement strategies (runtime, energy,
+transfer energy, EDP, W-ED2P — normalized to the column minimum)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import run_strategy
+
+ROWS = [
+    ("desktop", "single_site", dict(site="desktop")),
+    ("theta", "single_site", dict(site="theta")),
+    ("ic", "single_site", dict(site="ic")),
+    ("faster", "single_site", dict(site="faster")),
+    ("round_robin", "round_robin", {}),
+    ("mhra_a0.5", "mhra", dict(alpha=0.5)),
+    ("cmhra_a1.0", "cluster_mhra", dict(alpha=1.0)),
+    ("cmhra_a0.2", "cluster_mhra", dict(alpha=0.2)),
+]
+
+
+def run(n_per: int = 256) -> list[dict]:
+    out = []
+    for label, strat, kw in ROWS:
+        t0 = time.perf_counter()
+        _, res = run_strategy(strat, n_per=n_per, **kw)
+        out.append(dict(
+            strategy=label,
+            runtime_s=res.makespan_s,
+            energy_kj=res.measured_energy_j / 1e3,
+            transfer_kj=res.transfer_j / 1e3,
+            edp=res.edp(),
+            w_ed2p=res.w_ed2p(),
+            bench_wall_s=time.perf_counter() - t0,
+        ))
+    edp_min = min(r["edp"] for r in out)
+    e2_min = min(r["w_ed2p"] for r in out)
+    for r in out:
+        r["edp_norm"] = r["edp"] / edp_min
+        r["w_ed2p_norm"] = r["w_ed2p"] / e2_min
+    return out
+
+
+def main(n_per: int = 256) -> list[tuple]:
+    rows = run(n_per)
+    print(f"{'strategy':<14}{'runtime_s':>10}{'energy_kJ':>11}"
+          f"{'xfer_kJ':>9}{'EDP':>7}{'W-ED2P':>8}")
+    for r in rows:
+        print(f"{r['strategy']:<14}{r['runtime_s']:>10.1f}{r['energy_kj']:>11.1f}"
+              f"{r['transfer_kj']:>9.2f}{r['edp_norm']:>7.2f}{r['w_ed2p_norm']:>8.2f}")
+    best_alt = min(r["edp_norm"] for r in rows[:5])
+    cm = next(r for r in rows if r["strategy"] == "cmhra_a0.2")
+    derived = (best_alt - cm["edp_norm"]) / best_alt  # EDP gain vs best alt
+    return [("table5_placement", sum(r["bench_wall_s"] for r in rows) * 1e6 / max(len(rows), 1), f"edp_gain_vs_best_alt={derived:.2f}")]
+
+
+if __name__ == "__main__":
+    main()

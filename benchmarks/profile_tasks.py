@@ -1,0 +1,50 @@
+"""Figs 1-3: per-(function, machine) runtime / energy / power profiles from
+the testbed, normalized per task across machines (Fig. 3 style)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.endpoint import table1_testbed
+from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS, TestbedSim
+
+
+def run():
+    sim = TestbedSim(table1_testbed())
+    machines = [e.name for e in sim.endpoints]
+    table = {}
+    for fn in SEBS_FUNCTIONS:
+        per = {}
+        for m in machines:
+            rt, w, _ = sim.task_truth(fn, m)
+            per[m] = (rt, rt * w, w)
+        table[fn] = per
+    return table, machines
+
+
+def main():
+    table, machines = run()
+    print(f"{'function':<20}" + "".join(f"{m:>22}" for m in machines))
+    print(f"{'':<20}" + "".join(f"{'rt_s / E_J / P_W':>22}" for _ in machines))
+    for fn, per in table.items():
+        row = "".join(
+            f"{per[m][0]:>8.1f}/{per[m][1]:>6.1f}/{per[m][2]:>5.1f}" for m in machines
+        )
+        print(f"{fn:<20}{row}")
+    # Fig-1 headline checks: pagerank FASTER vs IC
+    pr = table["graph_pagerank"]
+    speed = pr["ic"][0] / pr["faster"][0]
+    energy = pr["ic"][1] / pr["faster"][1]
+    # Fig-3: no machine dominates (each machine is best at >=1 function)
+    best_at = {m: 0 for m in machines}
+    for fn, per in table.items():
+        best_at[min(machines, key=lambda m: per[m][0])] += 1
+    nodominate = sum(1 for v in best_at.values() if v > 0)
+    return [
+        ("fig1_pagerank_speed_ratio", 0.0, f"faster_vs_ic={speed:.0f}x"),
+        ("fig1_pagerank_energy_ratio", 0.0, f"faster_vs_ic={energy:.0f}x"),
+        ("fig3_machines_best_at_something", 0.0, f"{nodominate}/{len(machines)}"),
+    ]
+
+
+if __name__ == "__main__":
+    main()

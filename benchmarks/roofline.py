@@ -1,0 +1,112 @@
+"""Deliverable (g): roofline terms per (arch x shape) from the dry-run.
+
+  compute_s    = HLO_FLOPs_per_device / 197e12        (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_device / 819e9         (HBM BW)
+  collective_s = collective_bytes_per_device / 50e9   (ICI link BW)
+
+FLOPs/bytes use the depth-extrapolated values (while-loop bodies are
+counted once by XLA cost analysis; see launch/dryrun.py).  MODEL_FLOPS is
+6*N*D (train) / 2*N*D (inference), N_active for MoE.  The 'fraction'
+column is compute_s / max(terms): 1.0 = perfectly compute-bound.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.models.common import param_count
+from repro.models.registry import SHAPES, get_api, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def active_params(cfg) -> int:
+    """N_active: MoE counts top_k of n_experts expert params."""
+    api = get_api(cfg.name)
+    n = api.n_params()
+    if cfg.n_experts and cfg.top_k:
+        from repro.models.moe import moe_specs
+
+        expert_total = sum(
+            int(__import__("numpy").prod(s.shape))
+            for k, s in moe_specs(cfg).items()
+            if k in ("wi", "wg", "wo")
+        ) * cfg.n_layers
+        n -= expert_total * (cfg.n_experts - cfg.top_k) // cfg.n_experts
+    return n
+
+
+def model_flops_per_device(cfg, shape_name: str, n_devices: int) -> float:
+    seq, gb, kind = SHAPES[shape_name]
+    n = active_params(cfg)
+    if kind == "train":
+        tokens = seq * gb
+        return 6.0 * n * tokens / n_devices
+    if kind == "prefill":
+        tokens = seq * gb
+        return 2.0 * n * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * n * gb / n_devices
+
+
+def load_cells(mesh: str = "single", results: pathlib.Path | None = None):
+    cells = []
+    for fp in sorted((results or RESULTS).glob(f"*__{mesh}.json")):
+        d = json.loads(fp.read_text())
+        ex = d.get("extrapolated")
+        if ex:
+            # clamp: slope noise on tiny cells can extrapolate below the
+            # single-compile measurement
+            flops = max(ex["flops_extrap"], d["flops_per_device"], 0.0)
+            mem = max(ex["bytes_extrap"], d["bytes_accessed_per_device"], 0.0)
+            coll = max(ex["coll_bytes_extrap"], 0.0)
+        else:
+            flops = d["flops_per_device"]
+            mem = d["bytes_accessed_per_device"]
+            coll = d["collective_bytes_per_device"]
+        cfg = get_config(d["arch"])
+        mf = model_flops_per_device(cfg, d["shape"], d["n_devices"])
+        terms = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": mem / HBM_BW,
+            "collective_s": coll / ICI_BW,
+        }
+        dom = max(terms, key=terms.get)
+        cells.append(dict(
+            arch=d["arch"], shape=d["shape"], **terms,
+            dominant=dom.replace("_s", ""),
+            model_flops=mf,
+            useful_ratio=mf / max(flops, 1.0),
+            fraction=terms["compute_s"] / max(max(terms.values()), 1e-12),
+            temp_gb=d.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+            arg_gb=d.get("memory", {}).get("argument_size_in_bytes", 0) / 1e9,
+        ))
+    return cells
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("no dry-run results found — run: python -m repro.launch.dryrun")
+        return [("roofline", 0.0, "no_data")]
+    print(f"{'arch':<24}{'shape':<13}{'comp_s':>8}{'mem_s':>8}{'coll_s':>8}"
+          f"{'dom':>6}{'frac':>6}{'useful':>8}{'temp_GB':>8}")
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        print(f"{c['arch']:<24}{c['shape']:<13}{c['compute_s']:>8.3f}"
+              f"{c['memory_s']:>8.3f}{c['collective_s']:>8.3f}"
+              f"{c['dominant'][:5]:>6}{c['fraction']:>6.2f}"
+              f"{c['useful_ratio']:>8.2f}{c['temp_gb']:>8.1f}")
+    worst = min(cells, key=lambda c: c["fraction"])
+    return [
+        ("roofline_cells", 0.0, f"n={len(cells)}"),
+        ("roofline_worst_fraction", 0.0,
+         f"{worst['arch']}:{worst['shape']}={worst['fraction']:.2f}"),
+    ]
+
+
+if __name__ == "__main__":
+    main()

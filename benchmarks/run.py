@@ -1,0 +1,78 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV at the end (one row per headline
+metric).  --full uses the paper-size workload (1792 tasks); the default
+uses reduced sizes so the whole suite finishes quickly on one CPU core.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    n_per = 48 if args.quick else 256
+    n_alpha = 32 if args.quick else 128
+
+    from benchmarks import (
+        alpha_sweep,
+        molecular_design,
+        monitoring_overhead,
+        placement_strategies,
+        profile_tasks,
+        roofline,
+        scheduler_overhead,
+    )
+
+    suites = {
+        "profile_tasks": lambda: profile_tasks.main(),
+        "monitoring_overhead": lambda: monitoring_overhead.main(),
+        "scheduler_overhead": lambda: scheduler_overhead.main(),
+        "placement_strategies": lambda: placement_strategies.main(n_per=n_per),
+        "alpha_sweep": lambda: alpha_sweep.main() if not args.quick else _alpha(n_alpha),
+        "molecular_design": lambda: molecular_design.main(),
+        "roofline": lambda: roofline.main(),
+    }
+
+    def _alpha(n):
+        from benchmarks import alpha_sweep as a
+
+        rows = a.run(n_per=n)
+        lo, hi = rows[0], rows[-1]
+        return [
+            ("fig6_runtime_ratio_a1_vs_a0", 0.0,
+             f"{hi['runtime_s'] / max(lo['runtime_s'], 1e-9):.2f}x"),
+            ("fig6_energy_ratio_a1_vs_a0", 0.0,
+             f"{hi['energy_kj'] / max(lo['energy_kj'], 1e-9):.2f}x"),
+        ]
+
+    rows: list[tuple] = []
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            out = fn() or []
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"[bench {name}] FAILED: {e!r}", file=sys.stderr)
+            out = [(name, 0.0, f"FAILED:{type(e).__name__}")]
+        wall = time.perf_counter() - t0
+        rows.append((f"{name}_wall", wall * 1e6, f"{wall:.1f}s"))
+        rows.extend(out)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

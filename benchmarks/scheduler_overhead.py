@@ -1,0 +1,71 @@
+"""Table IV: scheduling overhead of RR / MHRA / Cluster MHRA at 256 and
+2048 tasks (seconds per batch + ms per task)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.endpoint import table1_testbed
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import TaskSpec, cluster_mhra, mhra, round_robin
+from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS
+from repro.core.transfer import TransferModel
+
+
+def _seeded_store(eps):
+    store = TaskProfileStore(eps)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            rt, w = BASE_PROFILES[fn][ep.name]
+            for _ in range(3):
+                store.record(fn, ep.name, rt, rt * w)
+    return store
+
+
+def _tasks(n):
+    return [TaskSpec(id=f"t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)]) for i in range(n)]
+
+
+def run(sizes=(256, 2048), repeats=3):
+    eps = table1_testbed()
+    store = _seeded_store(eps)
+    tm = TransferModel(eps)
+    strategies = {
+        "round_robin": lambda ts: round_robin(ts, eps, store, tm),
+        "mhra": lambda ts: mhra(ts, eps, store, tm, alpha=0.5),
+        "cluster_mhra": lambda ts: cluster_mhra(ts, eps, store, tm, alpha=0.5),
+    }
+    rows = []
+    for n in sizes:
+        tasks = _tasks(n)
+        for name, fn in strategies.items():
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                fn(tasks)
+                times.append(time.perf_counter() - t0)
+            t = float(np.median(times))
+            rows.append(dict(strategy=name, n_tasks=n, seconds=t,
+                             ms_per_task=t / n * 1e3))
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'strategy':<14}{'tasks':>7}{'time_s':>10}{'ms/task':>9}")
+    for r in rows:
+        print(f"{r['strategy']:<14}{r['n_tasks']:>7}{r['seconds']:>10.4f}"
+              f"{r['ms_per_task']:>9.3f}")
+    m = {(r["strategy"], r["n_tasks"]): r["seconds"] for r in rows}
+    speedup256 = m[("mhra", 256)] / max(m[("cluster_mhra", 256)], 1e-9)
+    out = []
+    for r in rows:
+        out.append((f"table4_{r['strategy']}_{r['n_tasks']}",
+                    r["seconds"] * 1e6, f"ms_per_task={r['ms_per_task']:.3f}"))
+    out.append(("table4_cmhra_speedup_256", 0.0, f"mhra/cmhra={speedup256:.1f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Molecular-design active-learning workflow (paper §IV-B.2 / Fig. 9),
+with REAL JAX compute for the ML stages: the surrogate model is trained
+and evaluated in JAX while GreenFaaS schedules every wave across machines.
+
+The search: find x maximizing an (expensive, simulated) 'ionization
+energy' f(x).  Each wave: quantum-chemistry simulations (sim-executed
+tasks) -> surrogate training (real JAX) -> batched inference (real JAX)
+-> pick next candidates.
+
+    PYTHONPATH=src python examples/molecular_design.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))  # benchmarks/
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.molecular_design import MOLDESIGN_PROFILES, SIGS, _endpoints
+from repro.core.executor import GreenFaaSExecutor
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import TestbedSim
+
+
+def true_property(x):  # the 'quantum chemistry' ground truth
+    return np.sin(3 * x[..., 0]) * np.cos(2 * x[..., 1]) + 0.5 * x[..., 2]
+
+
+def init_mlp(rng, dims=(8, 64, 64, 1)):
+    params = []
+    for i, (a, b) in enumerate(zip(dims, dims[1:])):
+        k1, rng = jax.random.split(rng)
+        params.append((jax.random.normal(k1, (a, b)) / jnp.sqrt(a), jnp.zeros(b)))
+    return params
+
+
+def mlp(params, x):
+    for w, b in params[:-1]:
+        x = jax.nn.tanh(x @ w + b)
+    w, b = params[-1]
+    return (x @ w + b)[..., 0]
+
+
+@jax.jit
+def train_steps(params, X, y, lr=1e-2, steps=200):
+    def loss_fn(p):
+        return jnp.mean((mlp(p, X) - y) ** 2)
+
+    def body(p, _):
+        g = jax.grad(loss_fn)(p)
+        p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return p, loss_fn(p)
+
+    params, losses = jax.lax.scan(body, params, jnp.arange(steps))
+    return params, losses[-1]
+
+
+def main(waves: int = 4, sims_per_wave: int = 48, pool: int = 4096) -> None:
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    endpoints = _endpoints()
+    sim = TestbedSim(endpoints, profiles=MOLDESIGN_PROFILES, signatures=SIGS, seed=0)
+    ex = GreenFaaSExecutor(endpoints, sim, alpha=0.3, strategy="cluster_mhra")
+    ex.warmup(list(MOLDESIGN_PROFILES), per_endpoint=2)
+
+    candidates = rng.uniform(-1, 1, size=(pool, 8))
+    X_known = candidates[:sims_per_wave]
+    y_known = true_property(X_known)
+    params = init_mlp(key)
+    tid, total_rt, total_e = 0, 0.0, 0.0
+    best = float(y_known.max())
+
+    for w in range(waves):
+        # --- schedule this wave through GreenFaaS (sim time/energy) ---
+        wave = [TaskSpec(id=f"s{tid + i}", fn="simulate") for i in range(sims_per_wave)]
+        wave += [TaskSpec(id=f"t{tid}", fn="train"),
+                 TaskSpec(id=f"i{tid}", fn="infer")]
+        tid += len(wave)
+        res = ex.run_batch(wave)
+        total_rt += res.makespan_s
+        total_e += res.measured_energy_j
+
+        # --- real ML compute for train + infer stages ---
+        params, mse = train_steps(
+            params, jnp.asarray(X_known, jnp.float32), jnp.asarray(y_known, jnp.float32)
+        )
+        preds = mlp(params, jnp.asarray(candidates, jnp.float32))
+        pick = np.asarray(jnp.argsort(-preds)[:sims_per_wave])
+        X_new = candidates[pick]
+        y_new = true_property(X_new)  # 'simulation' results
+        X_known = np.concatenate([X_known, X_new])
+        y_known = np.concatenate([y_known, y_new])
+        best = max(best, float(y_new.max()))
+        print(f"wave {w}: surrogate mse={float(mse):.4f}  best={best:.3f}  "
+              f"wave_time={res.makespan_s:.1f}s  wave_energy={res.measured_energy_j/1e3:.1f}kJ")
+
+    print(f"\ntotal (GreenFaaS cluster_mhra): {total_rt:.1f} s, {total_e/1e3:.1f} kJ")
+    sched = res.schedule.assignments
+    from collections import Counter
+
+    print("last-wave placement:", dict(Counter(sched.values())))
+    print(f"best molecule property found: {best:.3f} "
+          f"(theoretical max ~{true_property(np.array([[0.52, 0.0, 1.0]+[0]*5]))[0]+0.5:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — GreenFaaS (CS.DC 2024) on JAX/TPU.
+
+Public API:
+    repro.core       — the paper: monitoring, attribution, Cluster MHRA
+    repro.models     — 10-architecture substrate
+    repro.kernels    — Pallas TPU kernels (flash attn, decode, scan, ssd)
+    repro.fleet      — GreenFaaS <-> TPU fleet integration
+    repro.launch     — mesh / dryrun / train / serve entry points
+"""
+__version__ = "1.0.0"

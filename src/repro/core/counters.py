@@ -1,0 +1,76 @@
+"""Counter / task-record abstractions (the perf-counter layer of §III-C/D).
+
+On the CPU testbed the counter vector mirrors the paper's perfmon set:
+    [LLC_MISSES, INSTRUCTIONS_RETIRED, CPU_CYCLES, REF_CYCLES]
+On TPU endpoints the analogous dynamic-power features are HLO-derived:
+    [FLOPs_executed, HBM_bytes, ICI_bytes, duty_cycle]
+Both are just per-process/per-job vectors X fed to the linear power model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+CPU_COUNTERS = ("LLC_MISSES", "INSTRUCTIONS_RETIRED", "CPU_CYCLES", "REF_CYCLES")
+TPU_COUNTERS = ("FLOPS", "HBM_BYTES", "ICI_BYTES", "DUTY")
+
+
+@dataclasses.dataclass
+class CounterSample:
+    """One resource-monitor poll: per-process counter rates at time t."""
+    t: float
+    # process id -> counter vector (rates, i.e. per-second deltas)
+    procs: dict[int, np.ndarray]
+
+
+@dataclasses.dataclass
+class PowerSample:
+    """One energy-monitor poll of a node (RAPL/Cray/NVML/BMC analogue)."""
+    t: float
+    watts: float
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """What the wrapper around every task reports back (paper §III-C) plus
+    the attribution results filled in by the pipeline (§III-D)."""
+    task_id: str
+    fn: str
+    endpoint: str
+    worker_pid: int
+    t_start: float
+    t_end: float
+    energy_j: float | None = None      # attributed dynamic energy
+    node_energy_j: float | None = None # incl. idle share
+    transfer_j: float = 0.0
+    user: str = "user0"
+
+    @property
+    def runtime(self) -> float:
+        return self.t_end - self.t_start
+
+
+def merge_counter_windows(
+    samples: Sequence[CounterSample], pid: int, t0: float, t1: float
+) -> np.ndarray:
+    """Total counters for process pid over [t0, t1], trapezoidal on rates."""
+    pts = [(s.t, s.procs.get(pid)) for s in samples if s.procs.get(pid) is not None]
+    pts = [(t, v) for t, v in pts if t0 - 2.0 <= t <= t1 + 2.0]
+    if not pts:
+        return np.zeros(4)
+    if len(pts) == 1:
+        return pts[0][1] * (t1 - t0)
+    total = np.zeros_like(pts[0][1], dtype=float)
+    for (ta, va), (tb, vb) in zip(pts, pts[1:]):
+        lo, hi = max(ta, t0), min(tb, t1)
+        if hi <= lo:
+            continue
+        # linear interpolation of rates inside the overlap
+        fa = (lo - ta) / (tb - ta)
+        fb = (hi - ta) / (tb - ta)
+        va_i = va + (vb - va) * fa
+        vb_i = va + (vb - va) * fb
+        total += 0.5 * (va_i + vb_i) * (hi - lo)
+    return total

@@ -1,0 +1,70 @@
+"""GreenFaaS task/energy database (the 'cloud-hosted DB' of §III-C).
+
+In-memory with JSON persistence; the report/bookmarklet layer queries it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from collections import defaultdict
+
+from repro.core.counters import TaskRecord
+
+
+class TaskDB:
+    def __init__(self, path: str | None = None):
+        self.path = pathlib.Path(path) if path else None
+        self.records: list[TaskRecord] = []
+        if self.path and self.path.exists():
+            self.load()
+
+    def add(self, rec: TaskRecord) -> None:
+        self.records.append(rec)
+
+    def extend(self, recs) -> None:
+        self.records.extend(recs)
+
+    # --- queries used by the web report ------------------------------------
+    def energy_by_endpoint(self) -> dict[str, float]:
+        out: dict[str, float] = defaultdict(float)
+        for r in self.records:
+            out[r.endpoint] += r.energy_j or 0.0
+        return dict(out)
+
+    def energy_by_user(self, user: str) -> dict[str, float]:
+        out: dict[str, float] = defaultdict(float)
+        for r in self.records:
+            if r.user == user:
+                out[r.endpoint] += r.energy_j or 0.0
+        return dict(out)
+
+    def node_energy_by_endpoint(self) -> dict[str, float]:
+        out: dict[str, float] = defaultdict(float)
+        for r in self.records:
+            out[r.endpoint] += r.node_energy_j or 0.0
+        return dict(out)
+
+    def by_function(self) -> dict[str, dict[str, float]]:
+        out: dict[str, dict[str, float]] = defaultdict(lambda: defaultdict(float))
+        cnt: dict[str, dict[str, int]] = defaultdict(lambda: defaultdict(int))
+        for r in self.records:
+            if r.energy_j is not None:
+                out[r.fn][r.endpoint] += r.energy_j
+                cnt[r.fn][r.endpoint] += 1
+        return {
+            fn: {ep: e / cnt[fn][ep] for ep, e in eps.items()}
+            for fn, eps in out.items()
+        }
+
+    # --- persistence --------------------------------------------------------
+    def save(self) -> None:
+        assert self.path is not None
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.path.write_text(json.dumps(
+            [dataclasses.asdict(r) for r in self.records]
+        ))
+
+    def load(self) -> None:
+        data = json.loads(self.path.read_text())
+        self.records = [TaskRecord(**d) for d in data]

@@ -1,0 +1,60 @@
+"""Energy report — the web-bookmarklet analogue (§III-G).
+
+Renders per-endpoint / per-user energy usage from the TaskDB as HTML (the
+bookmarklet injected the same numbers into the Globus web app) and as a
+terminal table.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.core.database import TaskDB
+
+
+def text_report(db: TaskDB, user: str | None = None) -> str:
+    lines = ["GreenFaaS energy report", "=" * 48]
+    by_ep = db.energy_by_endpoint()
+    node = db.node_energy_by_endpoint()
+    lines.append(f"{'endpoint':<12}{'tasks kJ':>12}{'node kJ':>12}")
+    for ep in sorted(by_ep):
+        lines.append(
+            f"{ep:<12}{by_ep[ep] / 1e3:>12.2f}{node.get(ep, 0.0) / 1e3:>12.2f}"
+        )
+    if user:
+        lines.append(f"\nuser {user}:")
+        for ep, e in sorted(db.energy_by_user(user).items()):
+            lines.append(f"  {ep:<12}{e / 1e3:>10.2f} kJ")
+    lines.append("\nper-function mean attributed J (by endpoint):")
+    for fn, eps in sorted(db.by_function().items()):
+        row = "  ".join(f"{ep}={e:.1f}" for ep, e in sorted(eps.items()))
+        lines.append(f"  {fn:<20}{row}")
+    return "\n".join(lines)
+
+
+def html_report(db: TaskDB, path: str, user: str | None = None) -> str:
+    by_ep = db.energy_by_endpoint()
+    node = db.node_energy_by_endpoint()
+    rows = "".join(
+        f"<tr><td>{ep}</td><td>{by_ep[ep]/1e3:.2f}</td>"
+        f"<td>{node.get(ep, 0.0)/1e3:.2f}</td></tr>"
+        for ep in sorted(by_ep)
+    )
+    fn_rows = "".join(
+        f"<tr><td>{fn}</td>" + "".join(
+            f"<td>{e:.1f}</td>" for _, e in sorted(eps.items())
+        ) + "</tr>"
+        for fn, eps in sorted(db.by_function().items())
+    )
+    html = f"""<!doctype html><html><head><title>GreenFaaS energy</title>
+<style>body{{font-family:sans-serif}}table{{border-collapse:collapse}}
+td,th{{border:1px solid #999;padding:4px 10px}}</style></head><body>
+<h2>GreenFaaS endpoint energy usage</h2>
+<table><tr><th>endpoint</th><th>task energy (kJ)</th><th>node energy (kJ)</th></tr>
+{rows}</table>
+<h3>mean attributed energy per function (J)</h3>
+<table>{fn_rows}</table>
+</body></html>"""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(html)
+    return html

@@ -1,0 +1,298 @@
+"""MHRA + Cluster MHRA schedulers (paper §III-F, Algorithm 1) and the
+Round-Robin / single-site baselines evaluated in Table V.
+
+Objective:  O = alpha * E_tot/SF1 + (1-alpha) * C_max/SF2
+  E_tot = sum_n [ idle_power * allocated-span(+startup) + sum dyn task E ]
+          + transfer energy;  desktop-style endpoints charge idle over the
+          whole workflow span (paper: power drawn whether or not tasks run).
+  SF1/SF2 = pessimistic all-on-one-machine estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.clustering import agglomerative_cluster
+from repro.core.endpoint import EndpointSpec
+from repro.core.predictor import Prediction, TaskProfileStore
+from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    id: str
+    fn: str
+    inputs: tuple = ()          # tuple of TransferRequest templates (src, files, bytes, shared)
+    user: str = "user0"
+
+
+@dataclasses.dataclass
+class Schedule:
+    assignments: dict[str, str]
+    objective: float
+    energy_j: float
+    makespan_s: float
+    transfer_j: float
+    heuristic: str = ""
+    timeline: dict[str, tuple[float, float]] = dataclasses.field(default_factory=dict)
+
+    def edp(self) -> float:
+        return self.energy_j * self.makespan_s
+
+    def w_ed2p(self) -> float:
+        return self.energy_j * self.makespan_s ** 2
+
+
+HEURISTICS = (
+    "shortest_runtime_first",
+    "longest_runtime_first",
+    "highest_energy_first",
+    "lowest_energy_first",
+)
+
+
+class _State:
+    """Incremental greedy-scheduling state over endpoint timelines."""
+
+    def __init__(self, endpoints: Sequence[EndpointSpec], transfer: TransferModel):
+        self.eps = list(endpoints)
+        self.transfer = transfer
+        self.slots = {e.name: [0.0] * e.cores for e in endpoints}  # min-heaps
+        for h in self.slots.values():
+            heapq.heapify(h)
+        self.first_start = {e.name: None for e in endpoints}
+        self.last_end = {e.name: 0.0 for e in endpoints}
+        self.dyn_energy = {e.name: 0.0 for e in endpoints}
+        self.transfer_j = 0.0
+        self.cached: set[tuple[str, str]] = set()
+        self.timeline: dict[str, tuple[float, float]] = {}
+
+    def clone(self) -> "_State":
+        s = _State.__new__(_State)
+        s.eps, s.transfer = self.eps, self.transfer
+        s.slots = {k: list(v) for k, v in self.slots.items()}
+        s.first_start = dict(self.first_start)
+        s.last_end = dict(self.last_end)
+        s.dyn_energy = dict(self.dyn_energy)
+        s.transfer_j = self.transfer_j
+        s.cached = set(self.cached)
+        s.timeline = {}  # previews don't need task-level timelines
+        return s
+
+    def assign(
+        self,
+        unit: Sequence[TaskSpec],
+        ep: EndpointSpec,
+        preds: dict[str, Prediction],
+        record_timeline: bool = False,
+    ) -> None:
+        name = ep.name
+        # transfers for this unit's inputs (batched; shared files cached)
+        reqs, t_bytes, t_files = [], 0.0, 0
+        for t in unit:
+            for src, n_files, nbytes, shared in t.inputs:
+                if src == name:
+                    continue
+                key = (name, f"{src}:{n_files}:{nbytes}")
+                if shared and key in self.cached:
+                    continue
+                if shared:
+                    self.cached.add(key)
+                self.transfer_j += (
+                    self.transfer.hops(src, name) * nbytes * E_INC_J_PER_BYTE
+                )
+                t_bytes += nbytes
+                t_files += n_files
+        ready = self.transfer.predict_seconds(t_files, t_bytes)
+        if ep.has_batch_scheduler:
+            ready += ep.queue_delay_s
+        slots = self.slots[name]
+        for t in unit:
+            p = preds[t.id]
+            start = max(heapq.heappop(slots), ready)
+            end = start + p.runtime_s
+            heapq.heappush(slots, end)
+            if self.first_start[name] is None or start < self.first_start[name]:
+                self.first_start[name] = start
+            self.last_end[name] = max(self.last_end[name], end)
+            self.dyn_energy[name] += p.energy_j
+            if record_timeline:
+                self.timeline[t.id] = (start, end)
+
+    def metrics(self) -> tuple[float, float, float]:
+        """(E_tot, C_max, transfer_j)."""
+        c_max = max([v for v in self.last_end.values()] + [0.0])
+        e_tot = self.transfer_j
+        for ep in self.eps:
+            n = ep.name
+            if self.first_start[n] is None:
+                if not ep.has_batch_scheduler:
+                    # always-on endpoint idles through the workflow regardless
+                    e_tot += ep.idle_power_w * c_max
+                continue
+            if ep.has_batch_scheduler:
+                span = self.last_end[n] - self.first_start[n]
+                e_tot += ep.idle_power_w * span + ep.startup_energy_j
+            else:
+                e_tot += ep.idle_power_w * c_max
+            e_tot += self.dyn_energy[n]
+        return e_tot, c_max, self.transfer_j
+
+
+def _unit_stats(unit, endpoints, preds):
+    rt = float(np.mean([preds[t.id].runtime_s for t in unit]))
+    en = float(np.mean([preds[t.id].energy_j for t in unit]))
+    return rt * len(unit), en * len(unit)
+
+
+def _sort_units(units, key: str, endpoints, preds):
+    stats = [_unit_stats(u, endpoints, preds) for u in units]
+    if key == "shortest_runtime_first":
+        order = np.argsort([s[0] for s in stats])
+    elif key == "longest_runtime_first":
+        order = np.argsort([-s[0] for s in stats])
+    elif key == "highest_energy_first":
+        order = np.argsort([-s[1] for s in stats])
+    elif key == "lowest_energy_first":
+        order = np.argsort([s[1] for s in stats])
+    else:
+        raise ValueError(key)
+    return [units[i] for i in order]
+
+
+def _predict_all(tasks, endpoints, store: TaskProfileStore):
+    return {
+        ep.name: {t.id: store.predict(t.fn, ep.name) for t in tasks}
+        for ep in endpoints
+    }
+
+
+def mhra(
+    tasks: Sequence[TaskSpec],
+    endpoints: Sequence[EndpointSpec],
+    store: TaskProfileStore,
+    transfer: TransferModel,
+    alpha: float = 0.5,
+    heuristics: Sequence[str] = HEURISTICS,
+    clusters: list[list[int]] | None = None,
+) -> Schedule:
+    """Multi-Heuristic Resource Allocation. With clusters given, this is
+    Cluster MHRA's greedy stage (one decision per cluster)."""
+    per_ep = _predict_all(tasks, endpoints, store)
+    if clusters is None:
+        units = [[t] for t in tasks]
+    else:
+        units = [[tasks[i] for i in c] for c in clusters]
+    best: Schedule | None = None
+    for h in heuristics:
+        # predictions used for ordering: endpoint-mean
+        mean_preds = {
+            t.id: Prediction(
+                float(np.mean([per_ep[e.name][t.id].runtime_s for e in endpoints])),
+                float(np.mean([per_ep[e.name][t.id].energy_j for e in endpoints])),
+                True,
+            )
+            for t in tasks
+        }
+        ordered = _sort_units(units, h, endpoints, mean_preds)
+        sched = _greedy_multi_ep(
+            ordered, endpoints, per_ep, transfer, alpha, tasks, h
+        )
+        if best is None or sched.objective < best.objective:
+            best = sched
+    return best
+
+
+def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks, heuristic):
+    # SF normalizers from endpoint-specific predictions
+    sf1 = sf2 = 0.0
+    for ep in endpoints:
+        st = _State([ep], transfer)
+        st.assign(list(tasks), ep, per_ep[ep.name])
+        e, c, _ = st.metrics()
+        sf1, sf2 = max(sf1, e), max(sf2, c)
+    sf1, sf2 = max(sf1, 1e-9), max(sf2, 1e-9)
+
+    state = _State(endpoints, transfer)
+    assignments: dict[str, str] = {}
+    for unit in units:
+        best_obj, best_ep = np.inf, None
+        for ep in endpoints:
+            trial = state.clone()
+            trial.assign(unit, ep, per_ep[ep.name])
+            e, c, _ = trial.metrics()
+            obj = alpha * e / sf1 + (1 - alpha) * c / sf2
+            if obj < best_obj:
+                best_obj, best_ep = obj, ep
+        state.assign(unit, best_ep, per_ep[best_ep.name], record_timeline=True)
+        for t in unit:
+            assignments[t.id] = best_ep.name
+    e, c, tj = state.metrics()
+    obj = alpha * e / sf1 + (1 - alpha) * c / sf2
+    return Schedule(assignments, obj, e, c, tj, heuristic, state.timeline)
+
+
+def cluster_mhra(
+    tasks: Sequence[TaskSpec],
+    endpoints: Sequence[EndpointSpec],
+    store: TaskProfileStore,
+    transfer: TransferModel,
+    alpha: float = 0.5,
+    heuristics: Sequence[str] = HEURISTICS,
+    max_cluster_size: int = 40,
+) -> Schedule:
+    """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
+    per_ep = _predict_all(tasks, endpoints, store)
+    feats = np.array(
+        [
+            [v for ep in endpoints for v in (
+                per_ep[ep.name][t.id].runtime_s, per_ep[ep.name][t.id].energy_j
+            )]
+            for t in tasks
+        ]
+    )
+    energies = np.array(
+        [np.mean([per_ep[ep.name][t.id].energy_j for ep in endpoints]) for t in tasks]
+    )
+    cap = min(
+        [ep.startup_energy_j for ep in endpoints if ep.has_batch_scheduler]
+        or [np.inf]
+    )
+    clusters = agglomerative_cluster(
+        feats, energies, cap, max_cluster_size=max_cluster_size
+    )
+    return mhra(tasks, endpoints, store, transfer, alpha, heuristics, clusters)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (Table V rows)
+# ---------------------------------------------------------------------------
+
+
+def fixed_assignment(
+    tasks, endpoints, store, transfer, pick: Callable[[int, TaskSpec], str]
+) -> Schedule:
+    per_ep = _predict_all(tasks, endpoints, store)
+    by_ep = {e.name: e for e in endpoints}
+    state = _State(endpoints, transfer)
+    assignments = {}
+    for i, t in enumerate(tasks):
+        name = pick(i, t)
+        state.assign([t], by_ep[name], per_ep[name], record_timeline=True)
+        assignments[t.id] = name
+    e, c, tj = state.metrics()
+    return Schedule(assignments, np.nan, e, c, tj, "fixed", state.timeline)
+
+
+def round_robin(tasks, endpoints, store, transfer) -> Schedule:
+    names = [e.name for e in endpoints]
+    return fixed_assignment(
+        tasks, endpoints, store, transfer, lambda i, t: names[i % len(names)]
+    )
+
+
+def single_site(tasks, endpoints, store, transfer, site: str) -> Schedule:
+    return fixed_assignment(tasks, endpoints, store, transfer, lambda i, t: site)

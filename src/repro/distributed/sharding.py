@@ -1,0 +1,151 @@
+"""Logical-axis -> mesh-axis rules and sharding helpers (MaxText-style)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default physical rules.  "pod" only exists on the multi-pod mesh; rules
+# mapping to missing axes are dropped automatically.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),          # FSDP
+    "mlp": ("model",),           # TP
+    "heads": ("model",),         # TP (only set when divisible; see ArchConfig)
+    "kv_heads": (),              # replicated
+    "vocab": ("model",),
+    "experts": ("model",),       # EP
+    "ssm_inner": ("model",),
+    "state": (),
+    "layers": (),
+    "seq": (),                   # training activations default
+    "act_seq": ("model",),       # context/sequence-parallel activations
+    "kv_seq": ("model",),        # decode KV-cache sequence sharding
+    "capacity": (),
+    "frames": (),
+}
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Carries the mesh + rules; models call .act() to constrain activations."""
+    mesh: Mesh | None = None
+    rules: dict[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+    # per-run overrides, e.g. {"heads": ()} for seq_cp archs
+    overrides: dict[str, tuple[str, ...]] = dataclasses.field(default_factory=dict)
+    # dry-run cost lowering: unroll inner chunk scans so cost_analysis counts
+    # every chunk (while-loop bodies are otherwise counted once)
+    unroll_inner: bool = False
+    # execution knobs threaded through the model stack (hillclimb targets)
+    remat_policy: str = "nothing"   # nothing | dots
+    moe_group: int | None = None    # MoE dispatch group size override
+
+    def _mesh_axes(self) -> set[str]:
+        return set(self.mesh.axis_names) if self.mesh is not None else set()
+
+    def spec(self, axes: Sequence[str | None]) -> P:
+        avail = self._mesh_axes()
+        rules = {**self.rules, **self.overrides}
+        parts, used = [], set()
+        for ax in axes:
+            if ax is None:
+                parts.append(None)
+                continue
+            phys = tuple(a for a in rules.get(ax, ()) if a in avail and a not in used)
+            used.update(phys)
+            parts.append(phys if len(phys) > 1 else (phys[0] if phys else None))
+        return P(*parts)
+
+    def sharding(self, axes: Sequence[str | None]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(axes))
+
+    def _axis_size(self, name) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(name, tuple):
+            n = 1
+            for a in name:
+                n *= sizes[a]
+            return n
+        return sizes[name]
+
+    def sharding_for_shape(
+        self, axes: Sequence[str | None], shape: Sequence[int]
+    ) -> NamedSharding:
+        """Like .sharding() but drops axes that do not divide the dim evenly."""
+        assert self.mesh is not None
+        spec = self.spec(axes)
+        parts = []
+        for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if part is not None and dim % self._axis_size(part) != 0:
+                part = None
+            parts.append(part)
+        return NamedSharding(self.mesh, P(*parts))
+
+    def act(self, x: jax.Array, *axes: str | None) -> jax.Array:
+        """Constrain an activation to its logical sharding (no-op w/o mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding_for_shape(axes, x.shape)
+        )
+
+    def tree_shardings(self, axes_tree: Any) -> Any:
+        """Map a tree of logical-axis tuples to NamedShardings."""
+        return jax.tree.map(
+            lambda axes: self.sharding(axes),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+
+def ctx_for(cfg, mesh: Mesh | None, rule_overrides: dict | None = None) -> ShardCtx:
+    """ShardCtx for an arch: resolves its attention strategy against the mesh."""
+    overrides: dict[str, tuple[str, ...]] = {}
+    if mesh is not None and "model" in mesh.axis_names:
+        model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        if cfg.n_heads and cfg.resolve_attn_strategy(model_size) == "seq_cp":
+            overrides["heads"] = ()
+            overrides["seq"] = ("model",)
+    if rule_overrides:
+        overrides.update(rule_overrides)
+    return ShardCtx(mesh=mesh, overrides=overrides)
+
+
+def serve_rule_overrides(cfg, mesh: Mesh, n_params: int, cache_bytes: int) -> dict:
+    """Decode-time sharding policy (§Perf iterations 3-4): if the TP-sharded
+    bf16 weights + this device's cache share fit in HBM, replicate the
+    FSDP ('embed') dim so weights stay resident — eliminating the per-step
+    weight all-gather.  Falls back to FSDP sharding when too large."""
+    if getattr(cfg, "n_experts", 0):
+        # MoE: expert weights are already EP-sharded on the model axis;
+        # replicating their embed dim regresses memory with no collective
+        # win (measured on moonshot decode — EXPERIMENTS.md §Perf it.4 note)
+        return {}
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    n_dev = mesh.devices.size
+    weights = 2 * n_params / model           # bf16, TP-sharded only
+    cache_per_dev = cache_bytes / n_dev      # cache stays fully sharded
+    budget = 12e9                            # leave headroom of 16 GB HBM
+    if weights + cache_per_dev <= budget:
+        return {"embed": ()}
+    return {}
+
+
+def param_shardings(ctx: ShardCtx, specs: Any) -> Any:
+    """NamedSharding tree for a ParamSpec tree (shape-aware)."""
+    from repro.models.common import is_spec
+
+    return jax.tree.map(
+        lambda s: ctx.sharding_for_shape(s.axes, s.shape), specs, is_leaf=is_spec
+    )
+
+
+NULL_CTX = ShardCtx(mesh=None)
+

@@ -1,0 +1,111 @@
+"""train_step / serve_step builders with sharding-aware compilation.
+
+build_train_step(api, opt_cfg, shd)   -> step(state, batch) -> (state, metrics)
+build_prefill_step(api, shd)          -> step(params, batch) -> (logits, cache)
+build_decode_step(api, shd)           -> step(params, tokens, cache, pos)
+
+All functions are pure; the launcher jits them with in/out shardings from
+the ShardCtx.  Optional gradient accumulation splits the global batch into
+microbatches scanned in fp32 accumulation (one gradient reduction per step).
+Optional gradient compression quantizes the accumulated gradient to int8 +
+per-leaf scale before the (pod-crossing) reduction — see fleet/compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardCtx
+from repro.models.registry import ModelAPI
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(api: ModelAPI, rng) -> dict:
+    params = api.init(rng)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_train_state(api: ModelAPI) -> dict:
+    params = api.abstract()
+    zeros = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), params)
+    return {
+        "params": params,
+        "opt": {
+            "m": zeros,
+            "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def train_state_axes(api: ModelAPI) -> dict:
+    axes = api.axes()
+    return {"params": axes, "opt": {"m": axes, "v": axes, "step": ()}}
+
+
+def build_train_step(
+    api: ModelAPI,
+    opt_cfg: AdamWConfig,
+    shd: ShardCtx,
+    microbatches: int = 1,
+):
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, batch, shd=shd)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        # scan over microbatches, fp32 accumulation, single reduction
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(acc, mbatch):
+            (loss, metrics), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads
+            )
+            return acc, (loss, metrics)
+
+        acc, (losses, metricses) = jax.lax.scan(
+            body, zero, mb, unroll=microbatches if shd.unroll_inner else 1
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        loss = jnp.mean(losses)
+        metrics = jax.tree.map(jnp.mean, metricses)
+        return loss, metrics, grads
+
+    def step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state["params"], state["opt"]
+        )
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, out
+
+    return step
+
+
+def build_prefill_step(api: ModelAPI, shd: ShardCtx):
+    def step(params, batch):
+        return api.prefill(params, batch, shd=shd)
+
+    return step
+
+
+def build_decode_step(api: ModelAPI, shd: ShardCtx):
+    def step(params, tokens, cache, pos):
+        return api.decode_step(params, tokens, cache, pos, shd=shd)
+
+    return step

@@ -1,0 +1,105 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+Grid: (batch, kv_heads, kv_blocks) — the group of q heads sharing a kv
+head (GQA) is processed together as a (group, d) q tile, so the MXU sees
+a (group x d) @ (d x block_k) matmul per block.  Online-softmax partials
+(m, l, acc) live in VMEM scratch across kv blocks; `cache_len` masks the
+unwritten cache tail (scalar-prefetch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # scalar-prefetch (b,)
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale: float, block_k: int, nk: int,
+):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[bi]
+    # skip blocks entirely beyond the live cache
+    @pl.when(ki * block_k < cache_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (group, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (block_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (group, block_k)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < cache_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)             # (block_k, d)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, cache_len: jax.Array,
+    *, block_k: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """q: (b, 1, h, d); caches: (b, S, kv, d); cache_len: (b,) int32."""
+    b, one, h, d = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    scale = d ** -0.5
+
+    qg = q.reshape(b, kvh, group, d)                     # (b, kv, group, d)
+    kT = jnp.swapaxes(k_cache, 1, 2)                     # (b, kv, S, d)
+    vT = jnp.swapaxes(v_cache, 1, 2)
+
+    grid = (b, kvh, nk)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, group, d), lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ki, lens: (bi, hi, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ki, lens: (bi, hi, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, group, d), lambda bi, hi, ki, lens: (bi, hi, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((group, d), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, d), q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, kT, vT)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,19 @@
+"""jit'd public op: flash-decode with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.decode_attention import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k=512):
+    if dispatch.use_pallas() and k_cache.shape[1] % min(block_k, k_cache.shape[1]) == 0:
+        return kernel.decode_attention(
+            q, k_cache, v_cache, cache_len, block_k=block_k,
+            interpret=dispatch.interpret(),
+        )
+    return ref.decode_attention_ref(q, k_cache, v_cache, cache_len)

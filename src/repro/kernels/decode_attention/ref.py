@@ -1,0 +1,22 @@
+"""Oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q: (b, 1, h, d); caches: (b, S, kv, d); cache_len: (b,) -> (b, 1, h, d)."""
+    b, _, h, d = q.shape
+    S, kv = k_cache.shape[1], k_cache.shape[2]
+    if kv != h:
+        k_cache = jnp.repeat(k_cache, h // kv, axis=2)
+        v_cache = jnp.repeat(v_cache, h // kv, axis=2)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * (d ** -0.5)
+    valid = jnp.arange(S)[None, None, None, :] < cache_len[:, None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (blocked online softmax, causal + GQA).
+
+Grid: (batch, heads, q_blocks, kv_blocks) — kv innermost so the f32
+accumulators live in VMEM scratch across kv iterations.  Causal blocks
+entirely above the diagonal are skipped (no FLOPs, no loads).
+
+Block sizes default to (block_q=256, block_k=256) with head_dim padded to
+the 128-lane MXU requirement by construction (all assigned archs use
+head_dim in {64, 80, 128}; 80 pads to 128 transparently via BlockSpec).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, causal: bool, scale: float, block_q: int, block_k: int, nk: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip kv blocks entirely above the causal diagonal
+    run = True
+    if causal:
+        # bottom-right alignment: query row i attends keys <= i + q_offset
+        run = ki * block_k <= qi * block_q + block_q - 1 + q_offset
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (bq, bk)
+        if causal:
+            qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0
+            )
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, block_q: int = 256, block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (b, sq, h, d); k/v: (b, sk, kv, d), h % kv == 0 -> (b, sq, h, d)."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    # causal with sq > sk would leave fully-masked query rows (undefined)
+    assert not causal or sq <= sk, (sq, sk)
+    group = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = d ** -0.5
+
+    qT = jnp.swapaxes(q, 1, 2)  # (b, h, sq, d)
+    kT = jnp.swapaxes(k, 1, 2)  # (b, kv, sk, d)
+    vT = jnp.swapaxes(v, 1, 2)
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k, nk=nk, q_offset=sk - sq,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            # f32 VMEM accumulators persisted across the kv grid dimension
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qT, kT, vT)
+    return jnp.swapaxes(out, 1, 2)

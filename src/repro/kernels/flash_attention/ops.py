@@ -1,0 +1,19 @@
+"""jit'd public op: flash attention with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, block_q=256, block_k=256):
+    if dispatch.use_pallas() and q.shape[1] % min(block_q, q.shape[1]) == 0:
+        return kernel.flash_attention(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=dispatch.interpret(),
+        )
+    return ref.attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,21 @@
+"""jit'd public op: Mamba1 selective scan with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.selective_scan import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk"))
+def selective_scan(x, dt, A, B, C, D, *, block_d=512, chunk=128):
+    ok = x.shape[2] % min(block_d, x.shape[2]) == 0 and \
+         x.shape[1] % min(chunk, x.shape[1]) == 0
+    if dispatch.use_pallas() and ok:
+        return kernel.selective_scan(
+            x, dt, A, B, C, D, block_d=block_d, chunk=chunk,
+            interpret=dispatch.interpret(),
+        )
+    return ref.selective_scan_ref(x, dt, A, B, C, D)

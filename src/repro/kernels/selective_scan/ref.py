@@ -1,0 +1,28 @@
+"""Oracle for the Mamba1 selective scan (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, B, C, D):
+    """x/dt: (b, L, d); A: (d, n); B/C: (b, L, n); D: (d,) -> (b, L, d).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = (h_t C_t) + D x_t
+    """
+    b, L, d = x.shape
+    n = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A)                       # (b, L, d, n)
+    bu = (dtf * xf)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, t):
+        h = a[:, t] * h + bu[:, t]
+        y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32)[:, t])
+        return h, y
+
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    y = jnp.moveaxis(ys, 0, 1) + xf * D
+    return y.astype(x.dtype)

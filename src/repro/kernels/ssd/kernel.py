@@ -1,0 +1,111 @@
+"""Pallas TPU Mamba2 SSD (state-space dual), chunked matmul form.
+
+Grid: (batch, heads, chunks) — chunks innermost; the inter-chunk state
+S (n x hd) is VMEM-resident across chunks.  Per chunk everything is a
+matmul sized to the MXU (chunk=128, n=64, hd=64..128):
+
+    G   = C B^T                (Q x Q, via n contraction)
+    M   = G * exp(cum_t-cum_s) * tril
+    y   = M @ (dt*x)  +  (C * exp(cum)) @ S
+    S   = exp(total) S + B^T @ (dt*x * exp(total-cum))
+
+This is the TPU-native rethink of the Mamba2 CUDA kernel: instead of
+warp-level scans, the recurrence is blocked into MXU matmuls with a tiny
+sequential chunk loop — the part a systolic array cannot parallelize.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, lg_ref, B_ref, C_ref, y_ref, state_ref,
+    S_ref,
+    *, chunk: int, nc: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_ref[...] = jnp.zeros_like(S_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, hd) already dt-weighted
+    lg = lg_ref[0, 0].astype(jnp.float32)        # (1, Q) log-decay per token
+    B = B_ref[0].astype(jnp.float32)             # (Q, n)
+    C = C_ref[0].astype(jnp.float32)             # (Q, n)
+
+    cum = jnp.cumsum(lg[0])                      # (Q,)
+    total = cum[-1]
+    # intra-chunk quadratic term
+    G = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (Q, Q)
+    L = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, G.shape, 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, G.shape, 1)
+    )
+    M = jnp.where(tri, G * jnp.exp(L), 0.0)
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (Q, hd)
+    # inter-chunk: entering state contribution
+    Cw = C * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(
+        Cw, S_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # state update
+    xw = x * jnp.exp(total - cum)[:, None]
+    S_new = jax.lax.dot_general(
+        B, xw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (n, hd)
+    S_ref[...] = jnp.exp(total) * S_ref[...] + S_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        state_ref[0, 0] = S_ref[...]
+
+
+def ssd(
+    xdt, loga, B, C, *, chunk: int = 128, interpret: bool = False,
+):
+    """xdt: (b, L, nh, hd) = dt-weighted inputs; loga: (b, L, nh) = dt*A;
+    B/C: (b, L, n).  Returns (y (b, L, nh, hd), state (b, nh, n, hd))."""
+    b, L, nh, hd = xdt.shape
+    n = B.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    nc = L // chunk
+
+    xT = jnp.transpose(xdt, (0, 2, 1, 3))        # (b, nh, L, hd)
+    lgT = jnp.transpose(loga, (0, 2, 1))[:, :, None, :]  # (b, nh, 1, L)
+
+    grid = (b, nh, nc)
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda bi, hi, ci: (bi, hi, 0, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, n, hd), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, L, hd), xdt.dtype),
+            jax.ShapeDtypeStruct((b, nh, n, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, hd), jnp.float32)],
+        interpret=interpret,
+    )(xT, lgT, B, C)
+    return jnp.transpose(y, (0, 2, 1, 3)), state

@@ -1,0 +1,18 @@
+"""jit'd public op: Mamba2 SSD with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.ssd import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_op(xdt, loga, B, C, *, chunk=128):
+    """Pre-weighted form: xdt = x*dt, loga = dt*A (see kernel docstring)."""
+    if dispatch.use_pallas() and xdt.shape[1] % min(chunk, xdt.shape[1]) == 0:
+        return kernel.ssd(xdt, loga, B, C, chunk=chunk,
+                          interpret=dispatch.interpret())
+    return ref.ssd_preweighted_ref(xdt, loga, B, C)

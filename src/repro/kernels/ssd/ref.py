@@ -1,0 +1,54 @@
+"""Oracle for the Mamba2 SSD recurrence (sequential, per-head scalar A)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xh, dt, A_log, B, C, h0=None):
+    """xh: (b, L, nh, hd); dt: (b, L, nh); A_log: (nh,); B/C: (b, L, n)
+    -> (y (b, L, nh, hd), final_state (b, nh, n, hd)).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t . h_t
+    """
+    b, L, nh, hd = xh.shape
+    n = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))
+    xf = xh.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t] * A)                           # (b, nh)
+        bx = jnp.einsum(
+            "bn,bhd->bhnd", B[:, t].astype(jnp.float32),
+            xf[:, t] * dtf[:, t][..., None],
+        )
+        h = a[..., None, None] * h + bx
+        y = jnp.einsum("bn,bhnd->bhd", C[:, t].astype(jnp.float32), h)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, n, hd), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h
+
+
+def ssd_preweighted_ref(xdt, loga, B, C, h0=None):
+    """Sequential oracle on the pre-weighted inputs the kernel consumes:
+    xdt = x*dt, loga = dt*A (both already softplus'd/negated upstream)."""
+    b, L, nh, hd = xdt.shape
+    n = B.shape[-1]
+    xf = xdt.astype(jnp.float32)
+    lg = loga.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(lg[:, t])                                 # (b, nh)
+        bx = jnp.einsum("bn,bhd->bhnd", B[:, t].astype(jnp.float32), xf[:, t])
+        h = a[..., None, None] * h + bx
+        y = jnp.einsum("bn,bhnd->bhd", C[:, t].astype(jnp.float32), h)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, n, hd), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1).astype(xdt.dtype), h

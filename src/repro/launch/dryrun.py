@@ -1,0 +1,422 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes and record memory/cost/collective analysis.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+#         --shape train_4k --mesh single
+#
+# Outputs one JSON blob per cell under benchmarks/results/dryrun/.
+# The XLA_FLAGS line above MUST run before any jax import (device count is
+# locked at first backend init) — hence its position at the very top.
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardCtx, ctx_for, param_shardings
+from repro.distributed.steps import (
+    abstract_train_state,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    train_state_axes,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import is_spec
+from repro.models.registry import SHAPES, get_api, get_config, input_specs, shape_cells
+from repro.optim.adamw import AdamWConfig
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|[a-z0-9_\[\],{}/ ]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b",
+)
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO (these
+    are per-device local shapes)."""
+    out: dict[str, dict] = {}
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.search(
+            r"= *(\(?[a-z0-9_\[\],{} ]+\)?) (all-reduce|all-gather|"
+            r"reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", line
+        )
+        if not m or (m.group(3) == "-done"):
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(m.group(1))
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+    return out
+
+
+def _axes_shardings(ctx: ShardCtx, axes_tree, abstract_tree):
+    return jax.tree.map(
+        lambda axes, ab: ctx.sharding_for_shape(axes, ab.shape),
+        axes_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    verbose=True,
+    rule_overrides: dict | None = None,
+    batch_axes: tuple | None = None,
+    unroll: bool = False,
+    depth: int | None = None,
+    remat_policy: str = "nothing",
+    moe_group: int | None = None,
+    cfg_overrides: dict | None = None,
+    microbatches: int = 1,
+) -> dict:
+    """rule_overrides / batch_axes / depth support §Perf hillclimb variants:
+    override logical->mesh rules, activation batch sharding, or lower a
+    shallow unrolled variant for exact cost accounting."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    if depth is not None:
+        kw = {"n_layers": depth}
+        if cfg.family == "encdec":
+            kw["n_enc_layers"] = depth
+        cfg = _dc.replace(cfg, **kw)
+    from repro.models.registry import build_api
+
+    api = build_api(cfg) if depth is not None else get_api(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ctx_for(cfg, mesh, rule_overrides=rule_overrides)
+    ctx = _dc.replace(
+        ctx, unroll_inner=unroll, remat_policy=remat_policy, moe_group=moe_group
+    )
+    if batch_axes is None:
+        batch_axes = ("batch",)
+    seq, gb, kind = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+
+    t0 = time.time()
+    if kind == "train":
+        state = abstract_train_state(api)
+        st_axes = train_state_axes(api)
+        state_sh = {
+            "params": param_shardings(ctx, api.specs()),
+            "opt": {
+                "m": param_shardings(ctx, api.specs()),
+                "v": param_shardings(ctx, api.specs()),
+                "step": ctx.sharding_for_shape((), ()),
+            },
+        }
+        batch_sh = {
+            k: ctx.sharding_for_shape(
+                batch_axes + (None,) * (len(v.shape) - len(batch_axes)), v.shape
+            )
+            for k, v in specs.items()
+        }
+        step = build_train_step(api, AdamWConfig(), ctx, microbatches=microbatches)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh)
+            ).lower(state, specs)
+    elif kind == "prefill":
+        params = _bf16(api.abstract())
+        params_sh = param_shardings(ctx, api.specs())
+        batch_sh = {
+            k: ctx.sharding_for_shape(
+                batch_axes + (None,) * (len(v.shape) - len(batch_axes)), v.shape
+            )
+            for k, v in specs.items()
+        }
+        step = build_prefill_step(api, ctx)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, batch_sh)
+            ).lower(params, specs)
+    else:  # decode
+        # serve-mode sharding policy (§Perf iterations 3-4): weights stay
+        # resident (embed dim replicated) when they + cache fit in HBM
+        if rule_overrides is None:
+            from repro.distributed.sharding import serve_rule_overrides
+
+            cache_bytes = sum(
+                int(__import__("numpy").prod(a.shape)) * a.dtype.itemsize
+                for a in jax.tree.leaves(specs["cache"])
+            )
+            sro = serve_rule_overrides(cfg, mesh, api.n_params(), cache_bytes)
+            if sro:
+                ctx = _dc.replace(ctx, overrides={**ctx.overrides, **sro})
+        params = _bf16(api.abstract())
+        params_sh = param_shardings(ctx, api.specs())
+        cache_ax = api.cache_axes()
+        cache_sh = {
+            k: jax.tree.map(
+                lambda ab, a=cache_ax[k]: ctx.sharding_for_shape(a, ab.shape),
+                specs["cache"][k],
+            )
+            for k in specs["cache"]
+        }
+        tok_sh = ctx.sharding_for_shape(batch_axes + (None,), specs["tokens"].shape)
+        pos_sh = ctx.sharding_for_shape((), ())
+        step = build_decode_step(api, ctx)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, tok_sh, cache_sh, pos_sh)
+            ).lower(params, specs["tokens"], specs["cache"], specs["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_d = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            mem_d[f] = int(getattr(mem, f))
+        except Exception:
+            pass
+    coll = parse_collectives(compiled.as_text())
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "n_devices": int(n_dev),
+        "kind": kind,
+        "seq": seq,
+        "global_batch": gb,
+        "flops_per_device": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        "memory": mem_d,
+        "collectives": coll,
+        "collective_bytes_per_device": int(sum(v["bytes"] for v in coll.values())),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "n_params": api.n_params(),
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items() if k != "memory"}, indent=1))
+        print("memory:", mem_d)
+    return result
+
+
+def _bf16(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+        ),
+        tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cost extrapolation.
+#
+# XLA's cost_analysis counts while-loop bodies ONCE, so a rolled layer scan
+# underreports FLOPs/collective bytes by ~n_layers.  We therefore lower two
+# SHALLOW, FULLY-UNROLLED depth variants (L1, L2) of each cell and fit
+#   cost(L) = a + b*L
+# exactly (per-layer structure is homogeneous), then evaluate at the real
+# depth.  The full-depth rolled compile remains the official artifact (and
+# provides the memory analysis, which is trip-count independent).
+# ---------------------------------------------------------------------------
+
+
+def _depth_variants(cfg):
+    import dataclasses
+
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        return [
+            (dataclasses.replace(cfg, n_layers=e), e),
+            (dataclasses.replace(cfg, n_layers=2 * e), 2 * e),
+        ]
+    if cfg.family == "encdec":
+        return [
+            (dataclasses.replace(cfg, n_layers=1, n_enc_layers=1), 1),
+            (dataclasses.replace(cfg, n_layers=2, n_enc_layers=2), 2),
+        ]
+    import dataclasses as dc
+
+    return [
+        (dc.replace(cfg, n_layers=1), 1),
+        (dc.replace(cfg, n_layers=2), 2),
+    ]
+
+
+def _lower_for_cost(cfg, shape_name: str, multi_pod: bool):
+    """Lower+compile one unrolled shallow variant; return metric dict."""
+    import dataclasses
+
+    from repro.models.registry import build_api
+
+    api = build_api(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = dataclasses.replace(ctx_for(cfg, mesh), unroll_inner=True)
+    seq, gb, kind = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    if kind == "train":
+        state = abstract_train_state(api)
+        state_sh = {
+            "params": param_shardings(ctx, api.specs()),
+            "opt": {
+                "m": param_shardings(ctx, api.specs()),
+                "v": param_shardings(ctx, api.specs()),
+                "step": ctx.sharding_for_shape((), ()),
+            },
+        }
+        batch_sh = {
+            k: ctx.sharding_for_shape(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+            for k, v in specs.items()
+        }
+        step = build_train_step(api, AdamWConfig(), ctx)
+        with mesh:
+            compiled = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(
+                state, specs
+            ).compile()
+    elif kind == "prefill":
+        params = _bf16(api.abstract())
+        params_sh = param_shardings(ctx, api.specs())
+        batch_sh = {
+            k: ctx.sharding_for_shape(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+            for k, v in specs.items()
+        }
+        step = build_prefill_step(api, ctx)
+        with mesh:
+            compiled = jax.jit(step, in_shardings=(params_sh, batch_sh)).lower(
+                params, specs
+            ).compile()
+    else:
+        params = _bf16(api.abstract())
+        params_sh = param_shardings(ctx, api.specs())
+        cache_ax = api.cache_axes()
+        cache_sh = {
+            k: jax.tree.map(
+                lambda ab, a=cache_ax[k]: ctx.sharding_for_shape(a, ab.shape),
+                specs["cache"][k],
+            )
+            for k in specs["cache"]
+        }
+        tok_sh = ctx.sharding_for_shape(("batch", None), specs["tokens"].shape)
+        step = build_decode_step(api, ctx)
+        with mesh:
+            compiled = jax.jit(
+                step,
+                in_shardings=(params_sh, tok_sh, cache_sh, ctx.sharding_for_shape((), ())),
+            ).lower(params, specs["tokens"], specs["cache"], specs["pos"]).compile()
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(sum(v["bytes"] for v in coll.values())),
+        "coll": coll,
+    }
+
+
+def extrapolate_cost(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    (cfg1, l1), (cfg2, l2) = _depth_variants(cfg)
+    m1 = _lower_for_cost(cfg1, shape_name, multi_pod)
+    m2 = _lower_for_cost(cfg2, shape_name, multi_pod)
+    L = cfg.n_layers
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        slope = (m2[key] - m1[key]) / (l2 - l1)
+        out[key + "_extrap"] = m1[key] + slope * (L - l1)
+    # per-kind collective extrapolation
+    kinds = set(m1["coll"]) | set(m2["coll"])
+    out["coll_extrap"] = {}
+    for kd in kinds:
+        b1 = m1["coll"].get(kd, {"bytes": 0})["bytes"]
+        b2 = m2["coll"].get(kd, {"bytes": 0})["bytes"]
+        out["coll_extrap"][kd] = b1 + (b2 - b1) / (l2 - l1) * (L - l1)
+    out["depths"] = (l1, l2)
+    out["raw"] = {"l1": m1, "l2": m2}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--extrap-multi", action="store_true",
+                    help="also run cost extrapolation on the multi-pod mesh")
+    args = ap.parse_args()
+
+    from repro.models.registry import ARCH_IDS
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        cells = shape_cells(arch) if args.shape == "all" else [args.shape]
+        for shape in cells:
+            meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                fp = outdir / f"{tag}.json"
+                if fp.exists():
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[dryrun] {tag}", flush=True)
+                try:
+                    res = lower_cell(arch, shape, mp)
+                    if not mp or args.extrap_multi:
+                        # roofline table is single-pod; extrapolate there
+                        res["extrapolated"] = extrapolate_cost(arch, shape, mp)
+                    fp.write_text(json.dumps(res, indent=1))
+                except Exception as e:  # a failure here is a bug in the system
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e!r}", file=sys.stderr, flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        sys.exit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""GQA attention: params, chunked train/prefill path, decode path.
+
+The chunked XLA path (scan over query chunks, online softmax handled by
+full-row softmax per chunk) mirrors the memory behaviour of the Pallas
+flash kernel so dry-run memory analysis is realistic.  kernels/ops.py
+switches to the Pallas kernels on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.common import ParamSpec, rms_norm, rope
+from repro.models.config import ArchConfig
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ArchConfig, cross: bool = False) -> dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed"), fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), (None,), init="zeros")
+        specs["k_norm"] = ParamSpec((hd,), (None,), init="zeros")
+    return specs
+
+
+def project_qkv(p, x, cfg: ArchConfig, positions, shd: ShardCtx, use_rope=True):
+    """x: (b, s, d) -> q (b, s, h, hd), k/v (b, s, kv, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # "seq" vs "heads" mapping is strategy-dependent (ShardCtx.overrides):
+    #   head_tp: heads->model, seq replicated (Megatron TP)
+    #   seq_cp : seq->model, heads replicated (context parallelism)
+    q = shd.act(q, "batch", "seq", "heads", None)
+    k = shd.act(k, "batch", "seq", "kv_heads", None)
+    v = shd.act(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(b, s, kv, hd) -> (b, s, h, hd) by repeating kv groups."""
+    kv = k.shape[-2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=-2)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int = 512,
+    shd: ShardCtx = NULL_CTX,
+) -> jax.Array:
+    """Memory-bounded attention: scan over q chunks, full kv rows per chunk.
+
+    q: (b, sq, h, hd); k/v: (b, sk, h_kv, hd).  Returns (b, sq, h, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    from repro.kernels import dispatch
+
+    if dispatch.use_pallas() and shd.mesh is None and sq % 128 == 0 and sk % 128 == 0:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(q, k, v, causal=causal)
+        return shd.act(out, "batch", "seq", "heads", None)
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, sq)
+    n_chunks = sq // q_chunk if sq % q_chunk == 0 else 1
+    if sq % q_chunk != 0:
+        q_chunk = sq
+
+    kT = jnp.swapaxes(k, 1, 2)  # (b, h, sk, hd)
+    vT = jnp.swapaxes(v, 1, 2)
+
+    def one_chunk(ci, qc):
+        # qc: (b, q_chunk, h, hd)
+        qcT = jnp.swapaxes(qc, 1, 2)  # (b, h, qc, hd)
+        scores = jnp.einsum(
+            "bhqk,bhsk->bhqs", qcT, kT, preferred_element_type=jnp.float32
+        ) * scale
+        if causal:
+            qpos = ci * q_chunk + jnp.arange(q_chunk)
+            kpos = jnp.arange(sk)
+            mask = qpos[:, None] >= kpos[None, :]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqs,bhsk->bhqk", probs, vT)
+        return jnp.swapaxes(out, 1, 2)  # (b, qc, h, hd)
+
+    if n_chunks == 1:
+        return one_chunk(0, q)
+
+    qs = q.reshape(b, n_chunks, q_chunk, h, hd)
+
+    def body(_, ci):
+        return None, one_chunk(ci, qs[:, ci])
+
+    _, outs = jax.lax.scan(
+        body, None, jnp.arange(n_chunks),
+        unroll=n_chunks if (shd.unroll_inner and n_chunks <= 64) else 1,
+    )
+    # outs: (n_chunks, b, q_chunk, h, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+    return shd.act(out, "batch", "seq", "heads", None)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    shd: ShardCtx = NULL_CTX,
+) -> jax.Array:
+    """Single-token attention against a (b, S, kv, hd) cache.
+
+    The cache is annotated kv_seq->model; XLA turns the softmax reductions
+    into small all-reduces (flash-decode pattern).
+    """
+    b, one, h, hd = q.shape
+    k_cache = shd.act(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = shd.act(v_cache, "batch", "kv_seq", "kv_heads", None)
+    from repro.kernels import dispatch
+
+    if dispatch.use_pallas() and shd.mesh is None and k_cache.shape[1] % 128 == 0:
+        from repro.kernels.decode_attention.ops import decode_attention as dec_op
+
+        return dec_op(q, k_cache, v_cache, cache_len)
+    # Grouped GQA einsum — NO kv expansion (a jnp.repeat here would move
+    # group x the cache bytes through HBM every step; §Perf iteration 5).
+    kv = k_cache.shape[2]
+    g = h // kv
+    S = k_cache.shape[1]
+    qg = q.reshape(b, kv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    # Pin the flash-decode dataflow: scores/probs stay sharded along the
+    # cache seq dim (partial softmax per shard + small all-reduces).  Without
+    # this, head-TP weights back-propagate a heads sharding into the einsums
+    # and GSPMD reshards the whole cache seq->heads every layer (§Perf it.3).
+    scores = shd.act(scores, "batch", None, None, "kv_seq")
+    valid = jnp.arange(S)[None, None, None, :] < cache_len[:, None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    probs = shd.act(probs, "batch", None, None, "kv_seq")
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
+    out = shd.act(out, "batch", None, None, None)
+    return out.reshape(b, 1, h, hd)
+
+
+def attn_output(p, o: jax.Array, x_dtype) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x_dtype))

@@ -1,0 +1,173 @@
+"""Shared model substrate: param specs, logical axes, norms, RoPE.
+
+Params are described by ParamSpec trees so the same definition serves
+three uses: real initialization (tests/examples), abstract shapes
+(multi-pod dry-run, no allocation), and logical-axis shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Logical axes.  Physical mapping lives in distributed/sharding.py.
+# ---------------------------------------------------------------------------
+# "layers"   — stacked scan dimension (never sharded)
+# "embed"    — d_model rows of weight matrices      -> FSDP ("data")
+# "mlp"      — ffn hidden                           -> TP ("model")
+# "heads"    — query heads                          -> TP ("model") when divisible
+# "kv_heads" — kv heads (GQA, usually < TP degree)  -> replicated
+# "vocab"    — embedding/vocab rows                 -> TP ("model")
+# "experts"  — MoE experts                          -> EP ("model")
+# "ssm_inner"— mamba inner channels                 -> TP ("model")
+# "state"    — ssm state dim                        -> replicated
+# scalars / norm scales: ("embed",) or (None,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    dtype: Any = jnp.float32
+    fan_in: int | None = None     # overrides scale for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Mapping[str, Any]  # nested dict of ParamSpec / arrays
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.fan_in
+    if fan_in is None:
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+    if spec.init == "embed":
+        scale = 1.0
+    elif spec.init == "small":
+        scale = 0.02
+    else:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: ParamTree, rng: jax.Array) -> ParamTree:
+    """Materialize a ParamSpec tree into real arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: ParamTree) -> ParamTree:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def param_axes(specs: ParamTree) -> ParamTree:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs: ParamTree) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(specs, is_leaf=is_spec)
+    )
+
+
+def stacked(spec: ParamSpec, n_layers: int) -> ParamSpec:
+    """Stack a per-layer spec along a leading scan axis."""
+    return dataclasses.replace(
+        spec, shape=(n_layers,) + spec.shape, axes=("layers",) + spec.axes
+    )
+
+
+def stack_tree(tree: ParamTree, n_layers: int) -> ParamTree:
+    return jax.tree.map(lambda s: stacked(s, n_layers), tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., seq, half)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(seq: int, dim: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    half = dim // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, true_vocab: int
+) -> jax.Array:
+    """Mean CE over positions with label >= 0. Padded vocab entries masked.
+
+    Written to stay efficient when the vocab dim is sharded: the label
+    logit is extracted with an iota-mask-sum (partial + all-reduce under
+    GSPMD) instead of take_along_axis (which would gather full logits).
+    """
+    logits = logits.astype(jnp.float32)
+    vocab = logits.shape[-1]
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    if vocab > true_vocab:
+        logits = jnp.where(viota < true_vocab, logits, -1e30)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    sel = viota == jnp.clip(labels, 0)[..., None]
+    ll = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

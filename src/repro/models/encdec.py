@@ -1,0 +1,228 @@
+"""Encoder-decoder LM (whisper-tiny backbone).
+
+The audio frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (b, enc_len, d_model) — the conv feature
+extractor is out of scope. LayerNorm + GELU + sinusoidal positions, MHA.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models import attention as attn
+from repro.models.common import (
+    ParamSpec,
+    cross_entropy_loss,
+    layer_norm,
+    pad_vocab,
+    sinusoidal_pos_emb,
+    stack_tree,
+)
+from repro.models.config import ArchConfig
+from repro.models.mlp import mlp_apply, mlp_specs
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _ur(shd):
+    return True if shd.unroll_inner else 1
+
+
+def _ln_spec(d):
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def _ln(p, x, eps):
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _enc_layer_specs(cfg: ArchConfig):
+    return {
+        "ln1": _ln_spec(cfg.d_model),
+        "attn": attn.attn_specs(cfg),
+        "ln2": _ln_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig):
+    return {
+        "ln1": _ln_spec(cfg.d_model),
+        "self_attn": attn.attn_specs(cfg),
+        "ln2": _ln_spec(cfg.d_model),
+        "cross_attn": attn.attn_specs(cfg),
+        "ln3": _ln_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg: ArchConfig) -> dict[str, Any]:
+    vp = pad_vocab(cfg.vocab)
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), init="embed"),
+        "enc_layers": stack_tree(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "enc_ln": _ln_spec(d),
+        "dec_layers": stack_tree(_dec_layer_specs(cfg), cfg.n_layers),
+        "dec_ln": _ln_spec(d),
+        "unembed": ParamSpec((d, vp), ("embed", "vocab")),
+    }
+
+
+def encode(params, cfg: ArchConfig, frames, *, shd: ShardCtx = NULL_CTX):
+    """frames: (b, enc_len, d) stub embeddings -> (b, enc_len, d)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model).astype(COMPUTE_DTYPE)
+    x = shd.act(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, pl):
+        h = _ln(pl["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.project_qkv(pl["attn"], h, cfg, positions, shd, use_rope=False)
+        o = attn.chunked_attention(q, k, v, causal=False, shd=shd)
+        x = x + attn.attn_output(pl["attn"], o, x.dtype)
+        h = _ln(pl["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(pl["mlp"], h, cfg, shd)
+        return x, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=_ur(shd))
+    return _ln(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _cross_kv(pl_cross, enc_out, cfg, shd):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, pl_cross["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, pl_cross["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def decode_train(params, cfg: ArchConfig, tokens, enc_out, *, shd: ShardCtx = NULL_CTX):
+    """Teacher-forced decoder forward -> logits (b, s, vp)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    x = x + sinusoidal_pos_emb(s, cfg.d_model).astype(COMPUTE_DTYPE)
+    x = shd.act(x, "batch", "act_seq", None)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, pl):
+        h = _ln(pl["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.project_qkv(pl["self_attn"], h, cfg, positions, shd, use_rope=False)
+        o = attn.chunked_attention(q, k, v, causal=True, shd=shd)
+        x = x + attn.attn_output(pl["self_attn"], o, x.dtype)
+        h = _ln(pl["ln2"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, pl["cross_attn"]["wq"].astype(h.dtype))
+        ck, cv = _cross_kv(pl["cross_attn"], enc_out, cfg, shd)
+        o = attn.chunked_attention(q, ck, cv, causal=False, shd=shd)
+        x = x + attn.attn_output(pl["cross_attn"], o, x.dtype)
+        h = _ln(pl["ln3"], x, cfg.norm_eps)
+        x = x + mlp_apply(pl["mlp"], h, cfg, shd)
+        return x, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=_ur(shd))
+    x = _ln(params["dec_ln"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return shd.act(logits, "batch", None, "vocab")
+
+
+def encdec_loss(params, cfg: ArchConfig, batch, *, shd: ShardCtx = NULL_CTX, remat=True):
+    enc_out = encode(params, cfg, batch["frames"], shd=shd)
+    logits = decode_train(params, cfg, batch["tokens"], enc_out, shd=shd)
+    loss = cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+    return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=COMPUTE_DTYPE):
+    L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.enc_len, kv, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.enc_len, kv, hd), dtype),
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    cx = ("layers", "batch", None, "kv_heads", None)
+    return {"k": ax, "v": ax, "cross_k": cx, "cross_v": cx}
+
+
+def encdec_prefill(
+    params, cfg: ArchConfig, frames, tokens, *, shd: ShardCtx = NULL_CTX
+):
+    """Encode audio + teacher-forced prompt; returns (last logits, cache)."""
+    enc_out = encode(params, cfg, frames, shd=shd)
+    b, s = tokens.shape
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    x = x + sinusoidal_pos_emb(s, cfg.d_model).astype(COMPUTE_DTYPE)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, pl):
+        h = _ln(pl["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.project_qkv(pl["self_attn"], h, cfg, positions, shd, use_rope=False)
+        o = attn.chunked_attention(q, k, v, causal=True, shd=shd)
+        x = x + attn.attn_output(pl["self_attn"], o, x.dtype)
+        h = _ln(pl["ln2"], x, cfg.norm_eps)
+        q2 = jnp.einsum("bsd,dhk->bshk", h, pl["cross_attn"]["wq"].astype(h.dtype))
+        ck, cv = _cross_kv(pl["cross_attn"], enc_out, cfg, shd)
+        o = attn.chunked_attention(q2, ck, cv, causal=False, shd=shd)
+        x = x + attn.attn_output(pl["cross_attn"], o, x.dtype)
+        h = _ln(pl["ln3"], x, cfg.norm_eps)
+        x = x + mlp_apply(pl["mlp"], h, cfg, shd)
+        return x, (k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE),
+                   ck.astype(COMPUTE_DTYPE), cv.astype(COMPUTE_DTYPE))
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"], unroll=_ur(shd))
+    x = _ln(params["dec_ln"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+    axes = cache_axes(cfg)
+    cache = {k: shd.act(v, *axes[k]) for k, v in cache.items()}
+    return logits[:, -1], cache
+
+
+def encdec_decode_step(
+    params, cfg: ArchConfig, tokens, cache, pos, *, shd: ShardCtx = NULL_CTX
+):
+    pos = jnp.asarray(pos, jnp.int32)
+    b = tokens.shape[0]
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    x = x + sinusoidal_pos_emb(1, cfg.d_model, offset=pos).astype(COMPUTE_DTYPE)
+
+    def body(x, layer):
+        pl, kc, vc, ck, cv = layer
+        h = _ln(pl["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.project_qkv(
+            pl["self_attn"], h, cfg, pos[None, None], shd, use_rope=False
+        )
+        from repro.models.lm import _cache_update
+
+        kc = _cache_update(kc, k, pos)
+        vc = _cache_update(vc, v, pos)
+        cache_len = jnp.full((b,), pos + 1, jnp.int32)
+        o = attn.decode_attention(q, kc, vc, cache_len, shd=shd)
+        x = x + attn.attn_output(pl["self_attn"], o, x.dtype)
+        h = _ln(pl["ln2"], x, cfg.norm_eps)
+        q2 = jnp.einsum("bsd,dhk->bshk", h, pl["cross_attn"]["wq"].astype(h.dtype))
+        enc_len = jnp.full((b,), ck.shape[1], jnp.int32)
+        o = attn.decode_attention(q2, ck, cv, enc_len, shd=shd)
+        x = x + attn.attn_output(pl["cross_attn"], o, x.dtype)
+        h = _ln(pl["ln3"], x, cfg.norm_eps)
+        x = x + mlp_apply(pl["mlp"], h, cfg, shd)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]), unroll=_ur(shd)
+    )
+    x = _ln(params["dec_ln"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    new_cache = dict(cache, k=ks, v=vs)
+    return logits, new_cache

@@ -1,0 +1,471 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM families.
+
+One scan-over-layers spine; per-family layer bodies.  Entry points:
+  lm_loss        — training loss (next-token CE + MoE aux)
+  lm_prefill     — forward over a prompt -> (last logits, caches)
+  lm_decode_step — single-token step against caches
+
+Zamba2 (hybrid) groups the layer scan as (n_apps, every) so the shared
+attention block runs exactly once per group (no wasted compute in HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ParamSpec,
+    cross_entropy_loss,
+    pad_vocab,
+    rms_norm,
+    sinusoidal_pos_emb,
+    stack_tree,
+)
+from repro.models.config import ArchConfig
+from repro.models.mlp import mlp_apply, mlp_specs
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _ur(shd):
+    """Layer scans unroll during dry-run cost lowering (see dryrun.py)."""
+    return True if shd.unroll_inner else 1
+
+
+def _remat_policy(shd):
+    if shd.remat_policy == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _norm_spec(d):
+    return ParamSpec((d,), ("embed",), init="zeros")
+
+
+def _layer_specs(cfg: ArchConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": _norm_spec(d),
+            "attn": attn.attn_specs(cfg),
+            "ln2": _norm_spec(d),
+            "mlp": mlp_specs(cfg),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": _norm_spec(d),
+            "attn": attn.attn_specs(cfg),
+            "ln2": _norm_spec(d),
+            "moe": moe_mod.moe_specs(cfg),
+        }
+    if cfg.family == "ssm":
+        return {"ln": _norm_spec(d), "mamba": ssm_mod.mamba1_specs(cfg)}
+    if cfg.family == "hybrid":
+        return {"ln": _norm_spec(d), "mamba": ssm_mod.mamba2_specs(cfg)}
+    raise ValueError(cfg.family)
+
+
+def _wide_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Zamba2 shared block sees concat(h, x0): attention input width 2d."""
+    return dataclasses.replace(cfg, d_model=2 * cfg.d_model, head_dim=cfg.hd)
+
+
+def _shared_block_specs(cfg: ArchConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    specs = attn.attn_specs(_wide_cfg(cfg))
+    # output projection maps back to d (residual width), not 2d
+    specs["wo"] = ParamSpec(
+        (cfg.n_heads, cfg.hd, d), ("heads", None, "embed"), fan_in=cfg.n_heads * cfg.hd
+    )
+    return {
+        "ln1": ParamSpec((2 * d,), ("embed",), init="zeros"),
+        "attn": specs,
+        "ln2": _norm_spec(d),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def lm_specs(cfg: ArchConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    vp = pad_vocab(cfg.vocab)
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), init="embed"),
+        "final_norm": _norm_spec(d),
+        "unembed": ParamSpec((d, vp), ("embed", "vocab")),
+        "layers": stack_tree(_layer_specs(cfg), cfg.n_layers),
+    }
+    if cfg.shared_attn_every:
+        assert cfg.n_layers % cfg.shared_attn_every == 0
+        specs["shared"] = _shared_block_specs(cfg)
+    return specs
+
+
+def n_shared_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every if cfg.shared_attn_every else 0
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (full-sequence). Each returns (x, aux, cache_entry_or_None)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(pl, x, cfg, positions, shd, collect):
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q, k, v = attn.project_qkv(pl["attn"], h, cfg, positions, shd)
+    o = attn.chunked_attention(q, k, v, causal=True, shd=shd)
+    x = x + attn.attn_output(pl["attn"], o, x.dtype)
+    return x, ((k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE)) if collect else None)
+
+
+def _dense_layer(pl, x, cfg, positions, shd, collect):
+    x, kv = _attn_block(pl, x, cfg, positions, shd, collect)
+    h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(pl["mlp"], h, cfg, shd)
+    return x, jnp.zeros((), jnp.float32), kv
+
+
+def _moe_layer(pl, x, cfg, positions, shd, collect):
+    x, kv = _attn_block(pl, x, cfg, positions, shd, collect)
+    h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    out, aux = moe_mod.moe_apply(pl["moe"], h, cfg, shd, group_size=shd.moe_group)
+    return x + out, aux, kv
+
+
+def _ssm_layer(pl, x, cfg, positions, shd, collect):
+    h = rms_norm(x, pl["ln"], cfg.norm_eps)
+    out, state = ssm_mod.mamba1_apply(pl["mamba"], h, cfg, shd, return_cache=collect)
+    return x + out, jnp.zeros((), jnp.float32), state
+
+
+def _hybrid_layer(pl, x, cfg, positions, shd, collect):
+    h = rms_norm(x, pl["ln"], cfg.norm_eps)
+    out, state = ssm_mod.mamba2_apply(pl["mamba"], h, cfg, shd, return_cache=collect)
+    return x + out, jnp.zeros((), jnp.float32), state
+
+
+_LAYER_FNS = {
+    "dense": _dense_layer,
+    "vlm": _dense_layer,
+    "moe": _moe_layer,
+    "ssm": _ssm_layer,
+    "hybrid": _hybrid_layer,
+}
+
+
+def _shared_block(ps, x, x0, cfg, positions, shd, collect):
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(cat, ps["ln1"], cfg.norm_eps)
+    q, k, v = attn.project_qkv(ps["attn"], h, _wide_cfg(cfg), positions, shd)
+    o = attn.chunked_attention(q, k, v, causal=True, shd=shd)
+    x = x + attn.attn_output(ps["attn"], o, x.dtype)
+    h2 = rms_norm(x, ps["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(ps["mlp"], h2, cfg, shd)
+    kv = (k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE)) if collect else None
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg, tokens, shd, vision_embeds=None, pos_offset=0):
+    emb = params["embed"].astype(COMPUTE_DTYPE)
+    x = emb[tokens]  # (b, s, d)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(COMPUTE_DTYPE), x[:, nv:]], axis=1)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model, pos_offset).astype(
+            COMPUTE_DTYPE
+        )
+    return shd.act(x, "batch", "act_seq", None)
+
+
+def _group_layers(layers, n_apps, every):
+    return jax.tree.map(
+        lambda a: a.reshape((n_apps, every) + a.shape[1:]), layers
+    )
+
+
+def lm_forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    *,
+    shd: ShardCtx = NULL_CTX,
+    vision_embeds=None,
+    remat: bool = True,
+    collect_cache: bool = False,
+):
+    """Returns (logits, aux, cache_stack_or_None)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    x = embed_tokens(params, cfg, tokens, shd, vision_embeds)
+    x0 = x
+    layer_fn = _LAYER_FNS[cfg.family]
+    every = cfg.shared_attn_every
+
+    def layer_body(carry, pl):
+        x, aux = carry
+        x, aux_i, entry = layer_fn(pl, x, cfg, positions, shd, collect_cache)
+        x = shd.act(x, "batch", "act_seq", None)
+        return (x, aux + aux_i), entry
+
+    if remat:
+        layer_body = jax.checkpoint(layer_body, policy=_remat_policy(shd))
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    shared_kvs = None
+    if every:
+        grouped = _group_layers(params["layers"], n_shared_apps(cfg), every)
+
+        def group_body(carry, gl):
+            x, aux = carry
+            x, skv = _shared_block(
+                params["shared"], x, x0, cfg, positions, shd, collect_cache
+            )
+            (x, aux), entries = jax.lax.scan(layer_body, (x, aux), gl, unroll=_ur(shd))
+            return (x, aux), (entries, skv)
+
+        if remat:
+            group_body = jax.checkpoint(group_body, policy=_remat_policy(shd))
+        carry, (entries, shared_kvs) = jax.lax.scan(group_body, carry, grouped, unroll=_ur(shd))
+        if collect_cache:
+            entries = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), entries
+            )
+    else:
+        carry, entries = jax.lax.scan(layer_body, carry, params["layers"], unroll=_ur(shd))
+    x, aux = carry
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    # vocab->model (NOT act_seq): keeps fp32 logits + CE fully vocab-sharded
+    logits = shd.act(logits, "batch", None, "vocab")
+    cache = (entries, shared_kvs) if collect_cache else None
+    return logits, aux, cache
+
+
+def lm_loss(
+    params, cfg: ArchConfig, batch: dict, *, shd: ShardCtx = NULL_CTX, remat=True
+):
+    logits, aux, _ = lm_forward(
+        params,
+        cfg,
+        batch["tokens"],
+        shd=shd,
+        vision_embeds=batch.get("vision_embeds"),
+        remat=remat,
+    )
+    loss = cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=COMPUTE_DTYPE):
+    L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {
+            "k": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+        }
+    if cfg.family == "ssm":
+        c = ssm_mod.mamba1_init_cache(cfg, batch, dtype)
+        return {k: jnp.zeros((L,) + v.shape, v.dtype) for k, v in c.items()}
+    if cfg.family == "hybrid":
+        c = ssm_mod.mamba2_init_cache(cfg, batch, dtype)
+        base = {k: jnp.zeros((L,) + v.shape, v.dtype) for k, v in c.items()}
+        napp = n_shared_apps(cfg)
+        base["shared_k"] = jnp.zeros((napp, batch, max_len, kv, hd), dtype)
+        base["shared_v"] = jnp.zeros((napp, batch, max_len, kv, hd), dtype)
+        return base
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg: ArchConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+        return {"k": ax, "v": ax}
+    if cfg.family == "ssm":
+        return {
+            "conv": ("layers", "batch", None, "ssm_inner"),
+            "h": ("layers", "batch", "ssm_inner", "state"),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "conv": ("layers", "batch", None, None),
+            "h": ("layers", "batch", "heads", "state", None),
+            "shared_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "shared_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        }
+    raise ValueError(cfg.family)
+
+
+def _cache_update(cache, new, pos):
+    """Write one token at `pos` into a (b, S, kv, hd) cache.
+
+    Uses an iota-select, NOT dynamic_update_slice: a dynamic-position
+    update into a seq-sharded dim makes GSPMD gather/rewrite the whole
+    cache per layer (measured: 2.3 GB/layer on deepseek decode — see
+    EXPERIMENTS.md §Perf iteration 2).  The select is local per shard."""
+    S = cache.shape[1]
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, 1), 1) == pos)
+    return jnp.where(sel, new.astype(cache.dtype), cache)
+
+
+def _decode_attn(pl_attn, x_norm, cfg_like, kc, vc, pos, shd, qk_cfg):
+    q, k, v = attn.project_qkv(pl_attn, x_norm, qk_cfg, pos[None, None], shd)
+    kc = _cache_update(kc, k, pos)
+    vc = _cache_update(vc, v, pos)
+    cache_len = jnp.full((q.shape[0],), pos + 1, jnp.int32)
+    o = attn.decode_attention(q, kc, vc, cache_len, shd=shd)
+    return attn.attn_output(pl_attn, o, x_norm.dtype), kc, vc
+
+
+def lm_decode_step(
+    params, cfg: ArchConfig, tokens, cache, pos, *, shd: ShardCtx = NULL_CTX
+):
+    """tokens: (b, 1) int32; pos: scalar int32 -> (logits (b,1,V), new_cache)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    x = embed_tokens(params, cfg, tokens, shd, pos_offset=pos)
+    x0 = x
+    every = cfg.shared_attn_every
+
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def body(x, layer):
+            pl, kc, vc = layer
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            out, kc, vc = _decode_attn(pl["attn"], h, cfg, kc, vc, pos, shd, cfg)
+            x = x + out
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, _ = moe_mod.moe_apply(pl["moe"], h, cfg, shd)
+            else:
+                ff = mlp_apply(pl["mlp"], h, cfg, shd)
+            return x + ff, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]), unroll=_ur(shd))
+        new_cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+
+        def body(x, layer):
+            pl, conv, h = layer
+            hh = rms_norm(x, pl["ln"], cfg.norm_eps)
+            out, c2 = ssm_mod.mamba1_decode_step(
+                pl["mamba"], hh, {"conv": conv, "h": h}, cfg, shd
+            )
+            return x + out, (c2["conv"], c2["h"])
+
+        x, (convs, hs) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["h"]), unroll=_ur(shd)
+        )
+        new_cache = {"conv": convs, "h": hs}
+
+    elif cfg.family == "hybrid":
+        napp = n_shared_apps(cfg)
+        grouped = _group_layers(params["layers"], napp, every)
+        gconv = jax.tree.map(
+            lambda a: a.reshape((napp, every) + a.shape[1:]), cache["conv"]
+        )
+        gh = jax.tree.map(lambda a: a.reshape((napp, every) + a.shape[1:]), cache["h"])
+
+        def mamba_body(x, layer):
+            pl, conv, h = layer
+            hh = rms_norm(x, pl["ln"], cfg.norm_eps)
+            out, c2 = ssm_mod.mamba2_decode_step(
+                pl["mamba"], hh, {"conv": conv, "h": h}, cfg, shd
+            )
+            return x + out, (c2["conv"], c2["h"])
+
+        def group_body(x, layer):
+            gl, conv, h, kc, vc = layer
+            cat = jnp.concatenate([x, x0], axis=-1)
+            hh = rms_norm(cat, params["shared"]["ln1"], cfg.norm_eps)
+            out, kc, vc = _decode_attn(
+                params["shared"]["attn"], hh, cfg, kc, vc, pos, shd, _wide_cfg(cfg)
+            )
+            x = x + out
+            h2 = rms_norm(x, params["shared"]["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(params["shared"]["mlp"], h2, cfg, shd)
+            x, (convs, hs) = jax.lax.scan(mamba_body, x, (gl, conv, h), unroll=_ur(shd))
+            return x, (convs, hs, kc, vc)
+
+        x, (convs, hs, sk, sv) = jax.lax.scan(
+            group_body, x, (grouped, gconv, gh, cache["shared_k"], cache["shared_v"]),
+            unroll=_ur(shd),
+        )
+        new_cache = {
+            "conv": convs.reshape((cfg.n_layers,) + convs.shape[2:]),
+            "h": hs.reshape((cfg.n_layers,) + hs.shape[2:]),
+            "shared_k": sk,
+            "shared_v": sv,
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    logits = shd.act(logits, "batch", None, "vocab")
+    return logits, new_cache
+
+
+def lm_prefill(
+    params,
+    cfg: ArchConfig,
+    tokens,
+    *,
+    shd: ShardCtx = NULL_CTX,
+    vision_embeds=None,
+    max_len: int | None = None,
+):
+    """Forward over a prompt; returns (last-position logits, cache at len s)."""
+    b, s = tokens.shape
+    logits, _, collected = lm_forward(
+        params, cfg, tokens, shd=shd, vision_embeds=vision_embeds,
+        remat=False, collect_cache=True,
+    )
+    entries, shared_kvs = collected
+    if cfg.family in ("dense", "vlm", "moe"):
+        ks, vs = entries
+        cache = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+        cache = {"conv": entries["conv"], "h": entries["h"]}
+    elif cfg.family == "hybrid":
+        sk, sv = shared_kvs
+        cache = {
+            "conv": entries["conv"],
+            "h": entries["h"],
+            "shared_k": sk,
+            "shared_v": sv,
+        }
+    else:
+        raise ValueError(cfg.family)
+    if max_len is not None and max_len > s:
+        cache = extend_cache(cfg, cache, max_len)
+    axes = cache_axes(cfg)
+    cache = {k: shd.act(v, *axes[k]) for k, v in cache.items()}
+    return logits[:, -1], cache
+
+
+def extend_cache(cfg: ArchConfig, cache: dict, max_len: int) -> dict:
+    """Pad seq-indexed cache buffers out to max_len (for decode after prefill)."""
+    out = {}
+    for name, arr in cache.items():
+        if name in ("k", "v", "shared_k", "shared_v"):
+            pad = max_len - arr.shape[2]
+            arr = jnp.pad(arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        out[name] = arr
+    return out

@@ -1,0 +1,39 @@
+"""Dense feed-forward blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.common import ParamSpec
+from repro.models.config import ArchConfig
+
+
+def mlp_specs(cfg: ArchConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wi": ParamSpec((d, f), ("embed", "mlp")),
+            "wg": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "bi": ParamSpec((f,), ("mlp",), init="zeros"),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+        "bo": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_apply(p, x: jax.Array, cfg: ArchConfig, shd: ShardCtx = NULL_CTX):
+    dt = x.dtype
+    if cfg.mlp_act == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+        h = shd.act(h, "batch", None, "mlp")
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt)) + p["bi"].astype(dt)
+    h = jax.nn.gelu(h)
+    h = shd.act(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt)) + p["bo"].astype(dt)

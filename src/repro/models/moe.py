@@ -1,0 +1,93 @@
+"""Top-k MoE with capacity-based einsum dispatch (GShard-style) + EP.
+
+Dispatch/combine use one-hot einsums whose contraction length is bounded
+by grouping the sequence into `group_size` chunks: dispatch FLOPs scale as
+2*cf*group_size/(3*d_ff) of the expert FLOPs, so the group size is a
+first-class performance knob (see EXPERIMENTS.md §Perf).
+Experts are sharded over the "model" mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.common import ParamSpec
+from repro.models.config import ArchConfig
+
+
+def moe_specs(cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None), init="small"),
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed"), fan_in=f),
+    }
+
+
+def default_group_size(cfg: ArchConfig, seq: int) -> int:
+    """Pick a dispatch group so dispatch+combine ~<=30% of expert FLOPs."""
+    target = max(128, int(0.45 * cfg.d_ff / cfg.capacity_factor))
+    g = 1
+    while g * 2 <= min(seq, target):
+        g *= 2
+    return g
+
+
+def moe_apply(
+    p,
+    x: jax.Array,
+    cfg: ArchConfig,
+    shd: ShardCtx = NULL_CTX,
+    group_size: int | None = None,
+):
+    """x: (b, s, d) -> (out (b, s, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    dt = x.dtype
+
+    g = group_size or default_group_size(cfg, s)
+    g = min(g, s)
+    if s % g != 0:
+        g = s
+    ng = s // g
+    cap = max(k, int(-(-cf * g * k // e)))
+
+    xg = x.reshape(b * ng, g, d)
+    logits = jnp.einsum(
+        "tsd,de->tse", xg, p["router"].astype(dt), preferred_element_type=jnp.float32
+    )
+    gates = jax.nn.softmax(logits, axis=-1)  # (T, g, e) fp32
+    topv, topi = jax.lax.top_k(gates, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): e * sum_e mean(frac) * mean(prob)
+    me = jnp.mean(gates, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k
+    aux = e * jnp.sum(me * ce)
+
+    dispatch = jnp.zeros((b * ng, g, e, cap), dt)
+    combine = jnp.zeros((b * ng, g, e, cap), jnp.float32)
+    counts = jnp.zeros((b * ng, 1, e), jnp.int32)
+    for i in range(k):
+        mask = jax.nn.one_hot(topi[..., i], e, dtype=jnp.int32)  # (T, g, e)
+        pos = jnp.cumsum(mask, axis=1) - 1 + counts
+        keep = (pos < cap) & (mask > 0)
+        counts = counts + jnp.sum(mask, axis=1, keepdims=True)
+        oh = jax.nn.one_hot(jnp.where(keep, pos, -1), cap, dtype=jnp.float32)
+        d_i = mask[..., None].astype(jnp.float32) * oh
+        dispatch = dispatch + d_i.astype(dt)
+        combine = combine + d_i * topv[..., i][..., None, None]
+
+    dispatch = shd.act(dispatch, "batch", None, "experts", None)
+    xe = jnp.einsum("tsec,tsd->etcd", dispatch, xg)  # (e, T, cap, d)
+    xe = shd.act(xe, "experts", "batch", None, None)
+    hi = jnp.einsum("etcd,edf->etcf", xe, p["wi"].astype(dt))
+    hg = jnp.einsum("etcd,edf->etcf", xe, p["wg"].astype(dt))
+    ye = jnp.einsum("etcf,efd->etcd", jax.nn.silu(hg) * hi, p["wo"].astype(dt))
+    ye = shd.act(ye, "experts", "batch", None, None)
+    out = jnp.einsum("tsec,etcd->tsd", combine.astype(dt), ye)
+    return out.reshape(b, s, d), aux

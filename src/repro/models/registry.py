@@ -1,0 +1,158 @@
+"""Uniform model API over all families + shape-cell input specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.common import abstract_params, init_params, param_axes, param_count
+from repro.models.config import ArchConfig
+
+ARCH_IDS = [
+    "whisper-tiny",
+    "llama4-scout-17b-a16e",
+    "moonshot-v1-16b-a3b",
+    "qwen3-14b",
+    "granite-3-2b",
+    "starcoder2-7b",
+    "deepseek-67b",
+    "zamba2-2.7b",
+    "internvl2-26b",
+    "falcon-mamba-7b",
+]
+
+# (seq_len, global_batch, kind)
+SHAPES: dict[str, tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+    )
+    return mod.CONFIG
+
+
+def shape_cells(arch_id: str) -> list[str]:
+    """Shape cells that lower for this arch (long_500k only if sub-quadratic)."""
+    cfg = get_config(arch_id)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    specs: Callable[[], Any]
+    loss: Callable[..., Any]            # (params, batch, *, shd)
+    prefill: Callable[..., Any]         # (params, batch, *, shd)
+    decode_step: Callable[..., Any]     # (params, tokens, cache, pos, *, shd)
+    init_cache: Callable[..., Any]      # (batch, max_len)
+    cache_axes: Callable[[], Any]
+
+    def init(self, rng):
+        return init_params(self.specs(), rng)
+
+    def abstract(self):
+        return abstract_params(self.specs())
+
+    def axes(self):
+        return param_axes(self.specs())
+
+    def n_params(self) -> int:
+        return param_count(self.specs())
+
+
+def build_api(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            specs=lambda: encdec.encdec_specs(cfg),
+            loss=lambda params, batch, *, shd: encdec.encdec_loss(
+                params, cfg, batch, shd=shd
+            ),
+            prefill=lambda params, batch, *, shd: encdec.encdec_prefill(
+                params, cfg, batch["frames"], batch["tokens"], shd=shd
+            ),
+            decode_step=lambda params, tokens, cache, pos, *, shd: (
+                encdec.encdec_decode_step(params, cfg, tokens, cache, pos, shd=shd)
+            ),
+            init_cache=lambda batch, max_len: encdec.init_cache(cfg, batch, max_len),
+            cache_axes=lambda: encdec.cache_axes(cfg),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        specs=lambda: lm.lm_specs(cfg),
+        loss=lambda params, batch, *, shd: lm.lm_loss(params, cfg, batch, shd=shd),
+        prefill=lambda params, batch, *, shd: lm.lm_prefill(
+            params, cfg, batch["tokens"], shd=shd,
+            vision_embeds=batch.get("vision_embeds"),
+        ),
+        decode_step=lambda params, tokens, cache, pos, *, shd: lm.lm_decode_step(
+            params, cfg, tokens, cache, pos, shd=shd
+        ),
+        init_cache=lambda batch, max_len: lm.init_cache(cfg, batch, max_len),
+        cache_axes=lambda: lm.cache_axes(cfg),
+    )
+
+
+def get_api(arch_id: str, reduced: bool = False) -> ModelAPI:
+    cfg = get_config(arch_id)
+    if reduced:
+        cfg = cfg.reduced()
+    return build_api(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape cell (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """Abstract inputs for a cell.  For decode cells, the KV/SSM cache of
+    length seq_len is part of the inputs (it is state, not weights)."""
+    seq, gb, kind = SHAPES[shape_name]
+    i32 = jnp.int32
+    if kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((gb, seq), i32),
+            "labels": jax.ShapeDtypeStruct((gb, seq), i32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (gb, cfg.enc_len, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, seq), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (gb, cfg.enc_len, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one new token against a cache of length seq
+    api = build_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(gb, seq))
+    return {
+        "tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }

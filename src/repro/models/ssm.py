@@ -1,0 +1,340 @@
+"""State-space blocks: Mamba1 selective scan + Mamba2 SSD (chunked).
+
+XLA paths are chunked so (a) memory stays bounded, (b) FLOPs appear
+honestly in HLO (associative scan / matmuls, no opaque while-loop bodies),
+mirroring what the Pallas kernels do in VMEM on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.common import ParamSpec, rms_norm
+from repro.models.config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+
+def mamba1_specs(cfg: ArchConfig):
+    d, din, st, r, w = cfg.d_model, cfg.inner, cfg.ssm_state, cfg.dtrank, cfg.conv_width
+    return {
+        "in_proj": ParamSpec((d, 2 * din), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((din, w), ("ssm_inner", None), init="small"),
+        "conv_b": ParamSpec((din,), ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec((din, r + 2 * st), ("ssm_inner", None)),
+        "dt_w": ParamSpec((r, din), (None, "ssm_inner")),
+        "dt_b": ParamSpec((din,), ("ssm_inner",), init="small"),
+        "A_log": ParamSpec((din, st), ("ssm_inner", "state"), init="small"),
+        "D": ParamSpec((din,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (b, s, c); w: (c, width). state: (b, width-1, c)."""
+    width = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[None, None, :, width - 1 - i]
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1) :] if width > 1 else pad
+    return out + b, new_state
+
+
+def _ssm_coeffs(p, xc, cfg: ArchConfig):
+    """xc: (b, L, din) -> a, bu (b, L, din, st), C (b, L, st)."""
+    r, st = cfg.dtrank, cfg.ssm_state
+    dbc = jnp.einsum("blc,cr->blr", xc, p["x_proj"].astype(xc.dtype))
+    dt, B, C = jnp.split(dbc, [r, r + st], axis=-1)
+    dt = jnp.einsum("blr,rc->blc", dt, p["dt_w"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_b"])  # (b, L, din)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (din, st)
+    a = jnp.exp(dt[..., None] * A)  # (b, L, din, st)
+    bu = (dt * xc.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[:, :, None, :]
+    return a, bu, C
+
+
+def mamba1_apply(
+    p,
+    x,
+    cfg: ArchConfig,
+    shd: ShardCtx = NULL_CTX,
+    chunk: int = 128,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba1 block. x: (b, s, d) -> ((b, s, d), cache|None)."""
+    b, s, d = x.shape
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shd.act(xin, "batch", None, "ssm_inner")
+    xc, _ = _causal_conv(xin, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xc = jax.nn.silu(xc)
+
+    from repro.kernels import dispatch
+
+    if dispatch.use_pallas() and shd.mesh is None and not return_cache and s % 128 == 0:
+        r, st = cfg.dtrank, cfg.ssm_state
+        dbc = jnp.einsum("blc,cr->blr", xc, p["x_proj"].astype(dt_))
+        dtv, B, C = jnp.split(dbc, [r, r + st], axis=-1)
+        dtv = jnp.einsum("blr,rc->blc", dtv, p["dt_w"].astype(dt_))
+        dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_b"])
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        from repro.kernels.selective_scan.ops import selective_scan as scan_op
+
+        y = scan_op(
+            xc.astype(jnp.float32), dtv, A,
+            B.astype(jnp.float32), C.astype(jnp.float32), p["D"],
+        )
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+        y = shd.act(y, "batch", None, "ssm_inner")
+        return jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_)), None
+
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xcs = xc.reshape(b, nc, chunk, -1)
+
+    def assoc(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    def body(h, xi):
+        a, bu, C = _ssm_coeffs(p, xi, cfg)
+        a_cum, b_cum = jax.lax.associative_scan(assoc, (a, bu), axis=1)
+        h_all = b_cum + a_cum * h[:, None]  # (b, chunk, din, st)
+        y = jnp.einsum("blcs,bls->blc", h_all, C.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((b, xc.shape[-1], cfg.ssm_state), jnp.float32)
+    xcs_t = jnp.moveaxis(xcs, 1, 0)  # (nc, b, chunk, din)
+    # cost-lowering unroll capped: the scan body is <1% of layer FLOPs
+    # (projections dominate), so leaving long scans rolled costs <1% accuracy
+    # but avoids pathological CPU compile times at 32k+ sequence lengths.
+    h_final, ys = jax.lax.scan(
+        body, h0, xcs_t, unroll=nc if (shd.unroll_inner and nc <= 16) else 1
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, -1)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    y = shd.act(y, "batch", None, "ssm_inner")
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+    if not return_cache:
+        return out, None
+    w = cfg.conv_width
+    cache = {"conv": xin[:, -(w - 1):].astype(dt_), "h": h_final}
+    return out, cache
+
+
+def mamba1_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.inner), dtype),
+        "h": jnp.zeros((batch, cfg.inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba1_decode_step(p, x, cache, cfg: ArchConfig, shd: ShardCtx = NULL_CTX):
+    """x: (b, 1, d) -> (y (b, 1, d), new cache)."""
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(
+        xin, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), cache["conv"]
+    )
+    xc = jax.nn.silu(xc)
+    a, bu, C = _ssm_coeffs(p, xc, cfg)
+    h = a[:, 0] * cache["h"] + bu[:, 0]
+    y = jnp.einsum("bcs,bs->bc", h, C[:, 0].astype(jnp.float32))[:, None]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg: ArchConfig):
+    d, din, st = cfg.d_model, cfg.inner, cfg.ssm_state
+    nh = din // cfg.ssm_head_dim
+    g = 1  # B/C groups
+    return {
+        "wz": ParamSpec((d, din), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, din), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, g * st), ("embed", None)),
+        "wC": ParamSpec((d, g * st), ("embed", None)),
+        "wdt": ParamSpec((d, nh), ("embed", "heads")),
+        "conv_x": ParamSpec((din, cfg.conv_width), ("ssm_inner", None), init="small"),
+        "conv_B": ParamSpec((g * st, cfg.conv_width), (None, None), init="small"),
+        "conv_C": ParamSpec((g * st, cfg.conv_width), (None, None), init="small"),
+        "conv_b": ParamSpec((din + 2 * g * st,), (None,), init="zeros"),
+        "A_log": ParamSpec((nh,), ("heads",), init="small"),
+        "dt_bias": ParamSpec((nh,), ("heads",), init="small"),
+        "D": ParamSpec((nh,), ("heads",), init="ones"),
+        "norm": ParamSpec((din,), ("ssm_inner",), init="zeros"),
+        "out_proj": ParamSpec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba2_project(p, x, cfg: ArchConfig):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+    B = jnp.einsum("bsd,de->bse", x, p["wB"].astype(dt_))
+    C = jnp.einsum("bsd,de->bse", x, p["wC"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+    return z, xi, B, C, dt
+
+
+def _mamba2_conv(p, xi, B, C, state=None):
+    din, st = xi.shape[-1], B.shape[-1]
+    xbc = jnp.concatenate([xi, B, C], axis=-1)
+    w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=0)
+    out, new_state = _causal_conv(xbc, w.astype(xi.dtype), p["conv_b"].astype(xi.dtype), state)
+    out = jax.nn.silu(out)
+    return out[..., :din], out[..., din : din + st], out[..., din + st :], new_state
+
+
+def ssd_chunked(xh, dt, A_log, B, C, chunk: int = 128, h0=None, unroll: bool = False):
+    """Chunked state-space-dual. xh: (b, s, nh, hd); dt: (b, s, nh);
+    B/C: (b, s, st). Returns (y, final_state (b, nh, st, hd))."""
+    b, s, nh, hd = xh.shape
+    st = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    loga = dt * A  # (b, s, nh) log decay per token
+    xw = xh.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+
+    lg = loga.reshape(b, nc, chunk, nh)
+    xc = xw.reshape(b, nc, chunk, nh, hd)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, st)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, st)
+
+    def body(S, args):
+        lgi, xi, Bi, Ci = args  # (b,chunk,nh), (b,chunk,nh,hd), (b,chunk,st)
+        cum = jnp.cumsum(lgi, axis=1)  # (b, chunk, nh)
+        # intra-chunk: G[t,s] = C_t.B_s * exp(cum_t - cum_s) for t>=s
+        Gts = jnp.einsum("bts,bus->btu", Ci, Bi)  # (b, t, u) state contraction
+        L = cum[:, :, None, :] - cum[:, None, :, :]  # (b, t, u, nh)
+        tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+        # mask BEFORE exp: exp of a large positive masked entry would be inf
+        # and inf*0 = nan in the backward pass
+        L = jnp.where(tri[None, :, :, None], L, -1e30)
+        M = jnp.exp(L) * Gts[..., None]
+        y_intra = jnp.einsum("btuh,buhd->bthd", M, xi)
+        # inter-chunk: contribution of entering state
+        y_inter = jnp.einsum(
+            "bts,bth,bhsd->bthd", Ci, jnp.exp(cum), S
+        )
+        # new state: S' = exp(total) S + sum_u exp(total - cum_u) B_u x_u
+        total = cum[:, -1]  # (b, nh)
+        decay = jnp.exp(total[:, None, :] - cum)  # (b, u, nh)
+        S_new = jnp.einsum("bus,buh,buhd->bhsd", Bi, decay, xi)
+        S_new = S_new + jnp.exp(total)[..., None, None] * S
+        return S_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, st, hd), jnp.float32)
+    args = (
+        jnp.moveaxis(lg, 1, 0),
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    # unroll capped at 16 chunks: body is ~4% of layer FLOPs (see ssm.py
+    # mamba1 note); keeps 32k/500k cost compiles tractable on one CPU core
+    S, ys = jax.lax.scan(body, h0, args, unroll=nc if (unroll and nc <= 16) else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hd)
+    return y, S
+
+
+def mamba2_apply(
+    p,
+    x,
+    cfg: ArchConfig,
+    shd: ShardCtx = NULL_CTX,
+    chunk: int = 128,
+    return_cache: bool = False,
+):
+    b, s, d = x.shape
+    dt_ = x.dtype
+    nh = cfg.inner // cfg.ssm_head_dim
+    z, xi, B, C, dt = _mamba2_project(p, x, cfg)
+    xi = shd.act(xi, "batch", None, "ssm_inner")
+    xcv, Bcv, Ccv, _ = _mamba2_conv(p, xi, B, C)
+    xh = xcv.reshape(b, s, nh, cfg.ssm_head_dim)
+    from repro.kernels import dispatch
+
+    if dispatch.use_pallas() and shd.mesh is None and s % 128 == 0:
+        from repro.kernels.ssd.ops import ssd_op
+
+        dtf = jax.nn.softplus((dt + p["dt_bias"]).astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, S = ssd_op(
+            xh.astype(jnp.float32) * dtf[..., None], dtf * A,
+            Bcv.astype(jnp.float32), Ccv.astype(jnp.float32), chunk=chunk,
+        )
+    else:
+        y, S = ssd_chunked(
+            xh, dt + p["dt_bias"], p["A_log"], Bcv, Ccv, chunk,
+            unroll=shd.unroll_inner,
+        )
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, s, -1)
+    y = rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_), p["norm"], cfg.norm_eps
+    )
+    y = shd.act(y, "batch", None, "ssm_inner")
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+    if not return_cache:
+        return out, None
+    w = cfg.conv_width
+    xbc_tail = jnp.concatenate([xi, B, C], axis=-1)[:, -(w - 1):].astype(dt_)
+    return out, {"conv": xbc_tail, "h": S}
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    nh = cfg.inner // cfg.ssm_head_dim
+    st = cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.inner + 2 * st), dtype),
+        "h": jnp.zeros((batch, nh, st, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode_step(p, x, cache, cfg: ArchConfig, shd: ShardCtx = NULL_CTX):
+    b = x.shape[0]
+    dt_ = x.dtype
+    nh = cfg.inner // cfg.ssm_head_dim
+    z, xi, B, C, dt = _mamba2_project(p, x, cfg)
+    xcv, Bcv, Ccv, conv_state = _mamba2_conv(p, xi, B, C, cache["conv"])
+    xh = xcv.reshape(b, 1, nh, cfg.ssm_head_dim).astype(jnp.float32)
+    dtv = jax.nn.softplus((dt + p["dt_bias"]).astype(jnp.float32))[:, 0]  # (b, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dtv * A)  # (b, nh)
+    Bx = jnp.einsum("bs,bhd->bhsd", Bcv[:, 0].astype(jnp.float32), xh[:, 0] * dtv[..., None])
+    h = a[..., None, None] * cache["h"] + Bx
+    y = jnp.einsum("bs,bhsd->bhd", Ccv[:, 0].astype(jnp.float32), h)[:, None]
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(b, 1, -1)
+    y = rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_), p["norm"], cfg.norm_eps
+    )
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}

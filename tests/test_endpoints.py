@@ -1,0 +1,103 @@
+"""Endpoint model, predictor fallbacks, mesh construction, input specs."""
+import jax
+import pytest
+
+from repro.core.endpoint import EndpointSpec, table1_testbed, tpu_fleet
+from repro.core.predictor import TaskProfileStore
+from repro.models.registry import ARCH_IDS, SHAPES, get_config, input_specs, shape_cells
+
+
+def test_table1_matches_paper():
+    eps = {e.name: e for e in table1_testbed()}
+    assert eps["desktop"].cores == 16 and eps["desktop"].idle_power_w == 6.51
+    assert eps["theta"].cores == 64 and eps["theta"].idle_power_w == 110.0
+    assert eps["ic"].cores == 48 and eps["ic"].idle_power_w == 136.0
+    assert eps["faster"].cores == 64 and eps["faster"].idle_power_w == 205.0
+    # desktop is always-on: no startup energy to amortize (paper §III-F)
+    assert eps["desktop"].startup_energy_j == 0.0
+    assert eps["faster"].startup_energy_j > 0
+
+
+def test_tpu_fleet_heterogeneous():
+    eps = tpu_fleet()
+    names = {e.name for e in eps}
+    assert {"pod0", "pod1", "slice0", "oldpod"} <= names
+    slice0 = next(e for e in eps if e.name == "slice0")
+    assert not slice0.has_batch_scheduler  # the 'desktop' analogue
+    old = next(e for e in eps if e.name == "oldpod")
+    assert old.peak_flops < next(e for e in eps if e.name == "pod0").peak_flops
+
+
+def test_hop_counts_symmetric_defaults():
+    eps = table1_testbed()
+    desktop = eps[0]
+    assert desktop.hop_count(desktop) == 0
+    assert desktop.hop_count("theta") == 10
+    assert desktop.hop_count("unknown-site") > 0  # default
+
+
+def test_predictor_cold_start_fallbacks():
+    eps = table1_testbed()
+    store = TaskProfileStore(eps)
+    # never seen anywhere -> exploration prior, not confident
+    p = store.predict("newfn", "desktop")
+    assert not p.confident and p.runtime_s > 0
+    # seen on one endpoint -> perf-scaled estimate elsewhere, not confident
+    store.record("newfn", "desktop", 10.0, 100.0)
+    q = store.predict("newfn", "faster")
+    assert not q.confident
+    assert q.runtime_s < 10.0  # faster has higher perf_scale than desktop
+    # seen here -> confident
+    r = store.predict("newfn", "desktop")
+    assert r.confident and r.runtime_s == pytest.approx(10.0)
+
+
+def test_predictor_drift_sigma():
+    store = TaskProfileStore()
+    for x in (10.0, 10.1, 9.9, 10.05, 9.95):
+        store.record("fn", "ep", x, 1.0)
+    assert store.drift_sigma("fn", "ep", 10.0) < 1.0
+    assert store.drift_sigma("fn", "ep", 15.0) > 3.0
+
+
+def test_input_specs_shapes_per_cell():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for cell in shape_cells(arch):
+            seq, gb, kind = SHAPES[cell]
+            specs = input_specs(cfg, cell)
+            if kind == "train":
+                assert specs["tokens"].shape == (gb, seq)
+                assert specs["labels"].shape == (gb, seq)
+            elif kind == "prefill":
+                assert specs["tokens"].shape == (gb, seq)
+            else:
+                assert specs["tokens"].shape == (gb, 1)
+                assert "cache" in specs
+                # seq-indexed cache buffers carry the context length
+                leaves = jax.tree.leaves(specs["cache"])
+                assert any(seq in l.shape for l in leaves) or cfg.family == "ssm"
+
+
+def test_frontend_stubs_in_specs():
+    whisper = input_specs(get_config("whisper-tiny"), "train_4k")
+    assert whisper["frames"].shape == (256, 1500, 384)  # precomputed frames
+    vlm = input_specs(get_config("internvl2-26b"), "train_4k")
+    assert vlm["vision_embeds"].shape == (256, 256, 6144)  # patch embeds
+
+
+def test_serve_rule_policy():
+    import os
+
+    from repro.distributed.sharding import serve_rule_overrides
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    small = get_config("granite-3-2b")
+    big = get_config("deepseek-67b")
+    moe = get_config("moonshot-v1-16b-a3b")
+    # single-device host mesh: model axis = 1 -> weights never fit threshold
+    # logic still returns a dict without raising
+    assert isinstance(serve_rule_overrides(small, mesh, int(2.6e9), int(1e9)), dict)
+    # MoE always excluded (measured regression)
+    assert serve_rule_overrides(moe, mesh, int(1e6), 0) == {}

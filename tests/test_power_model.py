@@ -1,0 +1,104 @@
+"""Power model fit, attribution correction factor, integration windows."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.counters import CounterSample, PowerSample, TaskRecord
+from repro.core.power_model import EnergyAttributor, LinearPowerModel, _integrate
+
+
+def test_fit_recovers_linear_model(rng):
+    w_true = np.array([0.5, 0.3, 0.1, 0.05])
+    b_true = 110.0
+    m = LinearPowerModel()
+    X = rng.uniform(0, 100, size=(500, 4))
+    P = X @ w_true + b_true + rng.normal(0, 0.5, 500)
+    m.observe_batch(X, P)
+    np.testing.assert_allclose(m.weights, w_true, atol=0.05)
+    assert abs(m.idle_b - b_true) < 2.0
+
+
+def test_attribution_correction_factor_conserves_dynamic_power(rng):
+    """Sum of attributed watts == measured dynamic watts (paper eq.)."""
+    w = np.array([0.5, 0.3, 0.1, 0.05])
+    m = LinearPowerModel()
+    X = rng.uniform(0, 50, size=(200, 4))
+    m.observe_batch(X, X @ w + 100.0)
+    procs = {1: rng.uniform(0, 50, 4), 2: rng.uniform(0, 50, 4), 3: rng.uniform(0, 50, 4)}
+    p_meas = 100.0 + sum(float(w @ x) for x in procs.values()) * 1.23  # unmodeled +23%
+    attr = m.attribute(p_meas, procs)
+    assert attr[1] > 0
+    np.testing.assert_allclose(sum(attr.values()), p_meas - m.idle_b, rtol=1e-3)
+
+
+def test_attribution_proportionality(rng):
+    """A process with 2x the counters gets ~2x the watts."""
+    w = np.array([1.0, 1.0, 1.0, 1.0])
+    m = LinearPowerModel()
+    X = rng.uniform(0, 50, size=(200, 4))
+    m.observe_batch(X, X @ w + 10.0)
+    base = np.array([10.0, 10, 10, 10])
+    attr = m.attribute(10.0 + 3 * float(w @ base), {1: base, 2: 2 * base})
+    assert attr[2] == pytest.approx(2 * attr[1], rel=0.05)
+
+
+def test_integrate_linear_interpolation():
+    series = [(0.0, 0.0, 0.0), (10.0, 10.0, 0.0)]
+    # integral of ramp 0->10 over [0, 10] = 50; over [2.5, 7.5] = 25
+    assert _integrate(series, 1, 0.0, 10.0) == pytest.approx(50.0)
+    assert _integrate(series, 1, 2.5, 7.5) == pytest.approx(25.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t0=st.floats(0.0, 5.0),
+    dur=st.floats(0.1, 10.0),
+    w=st.floats(0.1, 100.0),
+)
+def test_integrate_constant_power(t0, dur, w):
+    series = [(float(t), w, w) for t in np.arange(0, 20, 1.0)]
+    e = _integrate(series, 1, t0, t0 + dur)
+    assert e == pytest.approx(w * dur, rel=1e-6)
+
+
+def test_end_to_end_attribution_pipeline(rng):
+    """Simulated node: model trained from the stream attributes task energy
+    within 15% of ground truth."""
+    w = np.array([0.4, 0.3, 0.2, 0.1])
+    idle = 100.0
+    model = LinearPowerModel()
+    attr = EnergyAttributor(model)
+    # two workers: pid 1 runs [5, 25) at 30 W, pid 2 runs [10, 30) at 50 W
+    def rates(watts):
+        base = rng.uniform(1, 2, 4)
+        return base * watts / float(w @ base)
+
+    r1, r2 = rates(30.0), rates(50.0)
+    for t in np.arange(0.0, 35.0, 1.0):
+        procs = {}
+        p = idle
+        if 5 <= t < 25:
+            procs[1] = r1
+            p += 30.0
+        if 10 <= t < 30:
+            procs[2] = r2
+            p += 50.0
+        attr.add_counters(CounterSample(t=float(t), procs=procs))
+        attr.add_power(PowerSample(t=float(t), watts=p + rng.normal(0, 0.3)))
+    attr.train_from_stream()
+    rec1 = TaskRecord("a", "fn", "ep", 1, 5.0, 25.0)
+    rec2 = TaskRecord("b", "fn", "ep", 2, 10.0, 30.0)
+    e1 = attr.attribute_task(rec1).energy_j
+    e2 = attr.attribute_task(rec2).energy_j
+    assert e1 == pytest.approx(30.0 * 20, rel=0.15)
+    assert e2 == pytest.approx(50.0 * 20, rel=0.15)
+
+
+def test_monitor_stack_composes():
+    from repro.core.monitor import CallbackMonitor, ConstantMonitor, StackedMonitor
+
+    cpu = CallbackMonitor(lambda t: 50.0, noise_frac=0.0)
+    gpu = CallbackMonitor(lambda t: 150.0, noise_frac=0.0)
+    base = ConstantMonitor(25.0)
+    node = StackedMonitor([cpu, gpu, base])
+    assert node.read_watts(0.0) == pytest.approx(225.0)

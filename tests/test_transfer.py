@@ -1,0 +1,69 @@
+"""Transfer model: hop energy, caching, time regression."""
+import numpy as np
+import pytest
+
+from repro.core.endpoint import table1_testbed
+from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel, TransferRequest
+
+
+@pytest.fixture
+def tm():
+    return TransferModel(table1_testbed())
+
+
+def test_same_site_free(tm):
+    r = TransferRequest("desktop", "desktop", 1, 1e9)
+    assert tm.energy_j(r) == 0.0
+    assert tm.hops("desktop", "desktop") == 0
+
+
+def test_energy_scales_with_bytes_and_hops(tm):
+    r1 = TransferRequest("desktop", "ic", 1, 1e9)
+    r2 = TransferRequest("desktop", "ic", 1, 2e9)
+    assert tm.energy_j(r2) == pytest.approx(2 * tm.energy_j(r1))
+    # theta is more hops from desktop than ic is
+    r3 = TransferRequest("desktop", "theta", 1, 1e9)
+    assert tm.energy_j(r3) > tm.energy_j(r1)
+
+
+def test_hpc_sites_add_dtn_fs_hops(tm):
+    # desktop (no DTN) -> ic (DTN+FS): 2 extra hops over the raw path
+    base = tm.eps["desktop"].hop_count("ic")
+    assert tm.hops("desktop", "ic") == base + 2
+    assert tm.hops("ic", "theta") == tm.eps["ic"].hop_count("theta") + 4
+
+
+def test_shared_files_cached(tm):
+    r = TransferRequest("desktop", "faster", 1, 1e9, shared=True)
+    e1 = tm.energy_j(r)
+    assert e1 > 0
+    tm.mark_cached(r)
+    assert tm.energy_j(r) == 0.0
+
+
+def test_time_regression_learns(tm):
+    rng = np.random.default_rng(0)
+    # ground truth: 1.0 s + 0.002 s/file + 0.08 s/GB
+    for _ in range(200):
+        nf = int(rng.integers(1, 200))
+        nb = float(rng.uniform(1e8, 5e10))
+        tm.observe(nf, nb, 1.0 + 0.002 * nf + 0.08 * nb / 1e9 + rng.normal(0, 0.01))
+    pred = tm.predict_seconds(100, 10e9)
+    assert pred == pytest.approx(1.0 + 0.2 + 0.8, rel=0.1)
+
+
+def test_batch_cost_groups_by_pair(tm):
+    reqs = [
+        TransferRequest("desktop", "ic", 1, 1e9),
+        TransferRequest("desktop", "ic", 1, 1e9),
+        TransferRequest("desktop", "faster", 1, 1e9),
+    ]
+    secs, joules = tm.batch_cost(reqs)
+    assert joules == pytest.approx(
+        2 * tm.energy_j(reqs[0]) + tm.energy_j(reqs[2])
+    )
+    assert secs > 0
+
+
+def test_e_inc_constant_matches_formula():
+    assert E_INC_J_PER_BYTE == pytest.approx(4000.0 / 100e9 * 8)
