@@ -1,0 +1,57 @@
+"""GreenFaaS online arrivals demo: tasks stream in over several arrival
+windows; the engine places each window against the *live* endpoint
+timelines and feeds monitored energy back into the profile store, so the
+placement mix shifts as profiles accumulate mid-workload.
+
+    PYTHONPATH=src python examples/online_arrivals.py
+"""
+from repro.core.endpoint import table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import SEBS_FUNCTIONS, TestbedSim
+
+N_WINDOWS = 4
+TASKS_PER_WINDOW = 140
+
+
+def main() -> None:
+    endpoints = table1_testbed()
+    backend = TestbedSim(endpoints, seed=0)
+    engine = OnlineEngine(
+        endpoints,
+        backend,
+        policy="mhra",          # any name from available_policies()
+        alpha=0.2,              # favor runtime (paper Fig. 6 trade-off)
+        window_s=30.0,          # arrival-window batcher
+        max_batch=512,
+        monitoring=True,        # learn from attributed energy, not truth
+    )
+
+    print(f"{'window':>6} {'tasks':>6} {'sched_ms':>9} {'profiles':>9}  placements")
+    for w in range(N_WINDOWS):
+        for i in range(TASKS_PER_WINDOW):
+            engine.submit(
+                TaskSpec(id=f"w{w}t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)])
+            )
+        res = engine.flush()
+        confident = sum(1 for n, _, _ in engine.store.stats().values() if n > 0)
+        placements = ", ".join(
+            f"{ep}:{n}" for ep, n in sorted(res.placements.items())
+        )
+        print(f"{res.index:>6} {len(res.tasks):>6} "
+              f"{res.scheduling_s * 1e3:>9.1f} {confident:>9}  {placements}")
+
+    s = engine.summary()
+    print(f"\n{s.tasks} tasks over {s.windows} windows")
+    print(f"cumulative makespan : {s.makespan_s:8.1f} s")
+    print(f"scheduled energy    : {s.energy_j / 1e3:8.1f} kJ "
+          f"(attributed to tasks: {s.attributed_j / 1e3:.1f} kJ)")
+    print(f"total scheduling    : {s.scheduling_s * 1e3:8.1f} ms "
+          f"({s.scheduling_s / s.tasks * 1e3:.2f} ms/task)")
+    print("\nWindow 0 spreads tasks for exploration; once window-0 records")
+    print("make per-endpoint profiles confident, later windows shift the")
+    print("mix toward the endpoints measured best for each function.")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ def main() -> None:
     endpoints = table1_testbed()
     backend = TestbedSim(endpoints, seed=0)
 
-    # alpha trades energy (1.0) against runtime (0.0) — paper Fig. 6
+    # alpha trades energy (1.0) against runtime (0.0) — paper Fig. 6;
+    # strategy is any registered policy name (repro.core.available_policies())
     executor = GreenFaaSExecutor(
         endpoints, backend, alpha=0.2, strategy="cluster_mhra"
     )

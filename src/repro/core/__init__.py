@@ -1,3 +1,49 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""GreenFaaS core: the paper's pipeline (submit -> predict -> place ->
+dispatch -> monitor -> attribute -> learn) as composable pieces.
+
+- scheduler: MHRA / Cluster MHRA + baselines, delta-evaluation greedy
+- policy:    pluggable placement policies registrable by name
+- engine:    event-driven online engine (arrival windows, live state)
+- executor:  batch executor over a pluggable backend
+- testbed:   discrete-event simulator of the paper's Table-I testbed
+"""
+from repro.core.engine import EngineSummary, OnlineEngine, WindowResult
+from repro.core.executor import BatchResult, GreenFaaSExecutor
+from repro.core.policy import (
+    PlacementPolicy,
+    PolicyContext,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+from repro.core.scheduler import (
+    HEURISTICS,
+    Schedule,
+    SchedulerState,
+    TaskSpec,
+    cluster_mhra,
+    mhra,
+    round_robin,
+    single_site,
+)
+
+__all__ = [
+    "BatchResult",
+    "EngineSummary",
+    "GreenFaaSExecutor",
+    "HEURISTICS",
+    "OnlineEngine",
+    "PlacementPolicy",
+    "PolicyContext",
+    "Schedule",
+    "SchedulerState",
+    "TaskSpec",
+    "WindowResult",
+    "available_policies",
+    "cluster_mhra",
+    "get_policy",
+    "mhra",
+    "register_policy",
+    "round_robin",
+    "single_site",
+]

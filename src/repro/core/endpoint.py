@@ -26,6 +26,12 @@ class EndpointSpec:
     ici_bw: float = 0.0              # per link, B/s
 
     @property
+    def always_on(self) -> bool:
+        """Desktop-style endpoint: no batch scheduler, draws idle power over
+        the whole workflow span whether or not tasks run (paper §III-F)."""
+        return not self.has_batch_scheduler
+
+    @property
     def startup_energy_j(self) -> float:
         """Energy burned bringing a node online for this workload: the node
         idles through provisioning/queue + teardown.  Desktop-style endpoints

@@ -1,0 +1,217 @@
+"""Event-driven online scheduling engine (paper §III as a *service*).
+
+GreenFaaS is an online system: tasks arrive continuously and every
+placement decision must see up-to-date profiles.  This engine closes the
+learn loop *mid-workload* instead of only across ``run_batch`` calls:
+
+    submit(task) ──> pending queue
+                      │  arrival-window batcher (window_s / max_batch)
+                      ▼
+    policy.place(window_tasks, ctx, state=live)   # delta evaluation
+                      ▼
+    backend.execute_window(...)                   # incremental sim
+                      ▼
+    attribute_window(...)  ──>  TaskProfileStore  # profiles update
+                      │
+                      └──> next window's predictions see them
+
+The live :class:`SchedulerState` carries endpoint timelines, transfer
+cache contents, and accumulated energy across windows, so objectives are
+cumulative and placements account for load already committed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+from repro.core.database import TaskDB
+from repro.core.endpoint import EndpointSpec
+from repro.core.executor import attribute_window
+from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
+from repro.core.power_model import LinearPowerModel
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
+from repro.core.testbed import SimResult, TestbedSim
+from repro.core.transfer import TransferModel
+
+
+@dataclasses.dataclass
+class WindowResult:
+    """Outcome of one arrival window."""
+    index: int
+    submitted_at: float
+    tasks: list[TaskSpec]
+    schedule: Schedule               # objective/energy/makespan are cumulative
+    assignments: dict[str, str]      # this window's tasks only
+    scheduling_s: float
+    sim: SimResult | None = None
+    attributed_j: float = 0.0
+
+    @property
+    def placements(self) -> dict[str, int]:
+        """endpoint -> task count for this window."""
+        out: dict[str, int] = {}
+        for ep in self.assignments.values():
+            out[ep] = out.get(ep, 0) + 1
+        return out
+
+
+@dataclasses.dataclass
+class EngineSummary:
+    windows: int
+    tasks: int
+    objective: float
+    energy_j: float          # scheduler-estimated cumulative E_tot
+    makespan_s: float        # cumulative C_max
+    transfer_j: float
+    scheduling_s: float      # total time spent in placement decisions
+    attributed_j: float
+
+
+class OnlineEngine:
+    """Streaming submission path over a live scheduler state.
+
+    ``submit`` enqueues; a window fires when ``max_batch`` tasks are
+    pending, when ``tick(now)`` sees ``window_s`` elapsed since the first
+    pending arrival, or when ``flush``/``drain`` forces it.  Completed
+    windows feed monitored task records back into the profile store, so
+    profiles learned in window k steer placements in window k+1.
+    """
+
+    def __init__(
+        self,
+        endpoints: Sequence[EndpointSpec],
+        backend: TestbedSim | None = None,
+        policy: str | PlacementPolicy = "mhra",
+        alpha: float = 0.5,
+        window_s: float = 1.0,
+        max_batch: int = 256,
+        store: TaskProfileStore | None = None,
+        db: TaskDB | None = None,
+        monitoring: bool = True,
+        site: str | None = None,
+    ):
+        self.endpoints = list(endpoints)
+        self.backend = backend
+        if isinstance(policy, PlacementPolicy):
+            self.policy = policy
+        elif policy == "single_site":
+            self.policy = get_policy(policy, site=site)
+        else:
+            self.policy = get_policy(policy)
+        self.alpha = alpha
+        self.window_s = window_s
+        self.max_batch = max_batch
+        self.store = store or TaskProfileStore(self.endpoints)
+        self.transfer = TransferModel(self.endpoints)
+        self.db = db or TaskDB()
+        self.models = {e.name: LinearPowerModel() for e in self.endpoints}
+        self.monitoring = monitoring
+        self.state = SchedulerState(self.endpoints, self.transfer)
+        self.pending: list[TaskSpec] = []
+        self.windows: list[WindowResult] = []
+        self.clock = 0.0
+        self._first_pending_at: float | None = None
+        if backend is not None:
+            backend.begin_stream()
+
+    # ------------------------------------------------------------------
+    def submit(self, task: TaskSpec, when: float | None = None) -> WindowResult | None:
+        """Enqueue one task; returns a WindowResult if this submission
+        filled the batch and triggered a window."""
+        when = self.clock if when is None else when
+        self.clock = max(self.clock, when)
+        if self._first_pending_at is None:
+            self._first_pending_at = when
+        self.pending.append(task)
+        if len(self.pending) >= self.max_batch:
+            return self.flush()
+        return None
+
+    def submit_many(self, tasks: Sequence[TaskSpec], when: float | None = None
+                    ) -> list[WindowResult]:
+        out = []
+        for t in tasks:
+            r = self.submit(t, when)
+            if r is not None:
+                out.append(r)
+        return out
+
+    def tick(self, now: float) -> WindowResult | None:
+        """Advance the arrival clock; fire a window if one is due."""
+        self.clock = max(self.clock, now)
+        if (
+            self.pending
+            and self._first_pending_at is not None
+            and now - self._first_pending_at >= self.window_s
+        ):
+            return self.flush()
+        return None
+
+    # ------------------------------------------------------------------
+    def flush(self) -> WindowResult | None:
+        """Place and dispatch all pending tasks as one window."""
+        if not self.pending:
+            return None
+        tasks, self.pending = self.pending, []
+        submitted_at = self._first_pending_at or self.clock
+        self._first_pending_at = None
+
+        ctx = PolicyContext(self.endpoints, self.store, self.transfer, self.alpha)
+        # placement previews must not start tasks before this window opened
+        self.state.advance_to(submitted_at)
+        t0 = time.perf_counter()
+        schedule = self.policy.place(tasks, ctx, state=self.state)
+        sched_s = time.perf_counter() - t0
+        assignments = {t.id: schedule.assignments[t.id] for t in tasks}
+
+        sim = None
+        attributed = 0.0
+        if self.backend is not None:
+            sim = self.backend.execute_window(assignments, tasks, now=submitted_at)
+            attributed = self._learn(sim)
+            self.clock = max(self.clock, submitted_at + self.window_s)
+        res = WindowResult(
+            index=len(self.windows), submitted_at=submitted_at, tasks=tasks,
+            schedule=schedule, assignments=assignments, scheduling_s=sched_s,
+            sim=sim, attributed_j=attributed,
+        )
+        self.windows.append(res)
+        return res
+
+    def drain(self) -> list[WindowResult]:
+        """Flush any remaining pending tasks; returns all window results."""
+        self.flush()
+        return self.windows
+
+    # ------------------------------------------------------------------
+    def _learn(self, sim: SimResult) -> float:
+        """Feed completed-task records back into the profile store."""
+        if self.monitoring:
+            _, attributed = attribute_window(sim, self.models, self.store, self.db)
+            return attributed
+        total = 0.0
+        for rec in sim.records:
+            _, w, _ = self.backend.task_truth(rec.fn, rec.endpoint)
+            e = rec.runtime * w
+            rec.energy_j = e
+            self.store.record(rec.fn, rec.endpoint, rec.runtime, e)
+            self.db.add(rec)
+            total += e
+        return total
+
+    # ------------------------------------------------------------------
+    def summary(self) -> EngineSummary:
+        e, c, tj = self.state.metrics()
+        last = self.windows[-1].schedule.objective if self.windows else float("nan")
+        return EngineSummary(
+            windows=len(self.windows),
+            tasks=sum(len(w.tasks) for w in self.windows),
+            objective=last,
+            energy_j=e,
+            makespan_s=c,
+            transfer_j=tj,
+            scheduling_s=sum(w.scheduling_s for w in self.windows),
+            attributed_j=sum(w.attributed_j for w in self.windows),
+        )

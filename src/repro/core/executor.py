@@ -2,6 +2,9 @@
 monitor -> attribute -> learn (the full paper pipeline, §III).
 
 The backend is pluggable: TestbedSim (paper-fidelity) or a fleet backend.
+Placement is delegated to a registered :class:`PlacementPolicy` — pass
+``strategy="cluster_mhra"`` (or any name in ``available_policies()``), or
+an already-constructed policy instance.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import numpy as np
 from repro.core import scheduler as sched
 from repro.core.database import TaskDB
 from repro.core.endpoint import EndpointSpec
+from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
 from repro.core.power_model import EnergyAttributor, LinearPowerModel
 from repro.core.predictor import TaskProfileStore
 from repro.core.testbed import SimResult, TestbedSim
@@ -39,22 +43,75 @@ class BatchResult:
         return self.measured_energy_j * self.makespan_s ** 2
 
 
+def attribute_window(
+    sim: SimResult,
+    models: dict[str, LinearPowerModel],
+    store: TaskProfileStore,
+    db: TaskDB | None = None,
+) -> tuple[dict[str, tuple[float, float]], float]:
+    """Train per-endpoint power models on a SimResult's monitor streams and
+    attribute per-task dynamic energy (paper §III-D), feeding the profile
+    store (and DB).  Shared by batch runs and the online engine's windows.
+
+    Returns ``({endpoint: (node_energy_j, trace_end_s)}, attributed_total)``
+    where node_energy_j is the trapezoid-integrated measured node energy
+    over the trace span.
+    """
+    recs_by_ep: dict[str, list] = {}
+    for r in sim.records:
+        recs_by_ep.setdefault(r.endpoint, []).append(r)
+    node: dict[str, tuple[float, float]] = {}
+    attributed = 0.0
+    for ep_name, trace in sim.traces.items():
+        attr = EnergyAttributor(models[ep_name])
+        for cs in trace.counter_samples:
+            attr.add_counters(cs)
+        for ps in trace.power_samples:
+            attr.add_power(ps)
+        attr.train_from_stream()
+        ts = [p.t for p in trace.power_samples]
+        ws = [p.watts for p in trace.power_samples]
+        node[ep_name] = (float(np.trapezoid(ws, ts)), ts[-1] if ts else 0.0)
+        for rec in recs_by_ep.get(ep_name, []):
+            res = attr.attribute_task(rec)
+            rec.energy_j = res.energy_j
+            rec.node_energy_j = res.node_energy_j
+            attributed += res.energy_j
+            store.record(rec.fn, ep_name, rec.runtime, res.energy_j)
+            if db is not None:
+                db.add(rec)
+    return node, attributed
+
+
 class GreenFaaSExecutor:
     def __init__(
         self,
         endpoints: list[EndpointSpec],
         backend: TestbedSim,
         alpha: float = 0.5,
-        strategy: Strategy = "cluster_mhra",
+        strategy: Strategy | str = "cluster_mhra",
         site: str | None = None,
         db: TaskDB | None = None,
         monitoring: bool = True,
+        policy: PlacementPolicy | None = None,
     ):
         self.endpoints = endpoints
         self.backend = backend
         self.alpha = alpha
         self.strategy = strategy
         self.site = site
+        if policy is not None:
+            self.policy = policy
+        elif strategy == "single_site":
+            names = [e.name for e in endpoints]
+            if site not in names:
+                raise ValueError(
+                    f"strategy='single_site' requires site= one of {names}, "
+                    f"got {site!r}"
+                )
+            self.policy = get_policy(strategy, site=site)
+        else:
+            self.policy = get_policy(strategy)
         self.store = TaskProfileStore(endpoints)
         self.transfer = TransferModel(endpoints)
         self.db = db or TaskDB()
@@ -62,24 +119,12 @@ class GreenFaaSExecutor:
         self.monitoring = monitoring
 
     # ------------------------------------------------------------------
+    def _ctx(self) -> PolicyContext:
+        return PolicyContext(self.endpoints, self.store, self.transfer, self.alpha)
+
     def schedule(self, tasks) -> tuple[sched.Schedule, float]:
         t0 = time.perf_counter()
-        if self.strategy == "cluster_mhra":
-            s = sched.cluster_mhra(
-                tasks, self.endpoints, self.store, self.transfer, self.alpha
-            )
-        elif self.strategy == "mhra":
-            s = sched.mhra(
-                tasks, self.endpoints, self.store, self.transfer, self.alpha
-            )
-        elif self.strategy == "round_robin":
-            s = sched.round_robin(tasks, self.endpoints, self.store, self.transfer)
-        elif self.strategy == "single_site":
-            s = sched.single_site(
-                tasks, self.endpoints, self.store, self.transfer, self.site
-            )
-        else:
-            raise ValueError(self.strategy)
+        s = self.policy.place(tasks, self._ctx())
         return s, time.perf_counter() - t0
 
     # ------------------------------------------------------------------
@@ -90,37 +135,18 @@ class GreenFaaSExecutor:
         measured = 0.0
         attributed = 0.0
         if self.monitoring:
-            recs_by_ep: dict[str, list] = {}
-            for r in sim.records:
-                recs_by_ep.setdefault(r.endpoint, []).append(r)
-            for ep_name, trace in sim.traces.items():
-                model = self.models[ep_name]
-                attr = EnergyAttributor(model)
-                for cs in trace.counter_samples:
-                    attr.add_counters(cs)
-                for ps in trace.power_samples:
-                    attr.add_power(ps)
-                attr.train_from_stream()
-                # integrate measured node power over the allocation
-                ts = [p.t for p in trace.power_samples]
-                ws = [p.watts for p in trace.power_samples]
-                node_j = float(np.trapezoid(ws, ts))
+            node, attributed = attribute_window(sim, self.models, self.store, self.db)
+            for ep_name in sim.traces:
+                node_j, t_last = node[ep_name]
                 ep = next(e for e in self.endpoints if e.name == ep_name)
                 if ep.has_batch_scheduler:
                     measured += node_j
                 else:  # always-on: idle charged over the whole workflow span
-                    measured += (node_j - ep.idle_power_w * ts[-1]
+                    measured += (node_j - ep.idle_power_w * t_last
                                  + ep.idle_power_w * sim.makespan_s)
-                for rec in recs_by_ep.get(ep_name, []):
-                    res = attr.attribute_task(rec)
-                    rec.energy_j = res.energy_j
-                    rec.node_energy_j = res.node_energy_j
-                    attributed += res.energy_j
-                    self.store.record(rec.fn, ep_name, rec.runtime, res.energy_j)
-                    self.db.add(rec)
             # endpoints never used still idle (always-on ones)
             for ep in self.endpoints:
-                if ep.name not in sim.traces and not ep.has_batch_scheduler:
+                if ep.name not in sim.traces and ep.always_on:
                     measured += ep.idle_power_w * sim.makespan_s
         else:
             measured = sim.true_energy_j
@@ -154,14 +180,4 @@ class GreenFaaSExecutor:
             lambda idx, t: names[idx],
         )
         sim = self.backend.execute(schedule, tasks)
-        for ep_name, trace in sim.traces.items():
-            model = self.models[ep_name]
-            attr = EnergyAttributor(model)
-            for cs in trace.counter_samples:
-                attr.add_counters(cs)
-            for ps in trace.power_samples:
-                attr.add_power(ps)
-            attr.train_from_stream()
-            for rec in [r for r in sim.records if r.endpoint == ep_name]:
-                res = attr.attribute_task(rec)
-                self.store.record(rec.fn, ep_name, rec.runtime, res.energy_j)
+        attribute_window(sim, self.models, self.store)

@@ -1,0 +1,167 @@
+"""Pluggable placement policies behind one contract (paper Table V rows).
+
+A :class:`PlacementPolicy` turns a batch of tasks (an arrival window, or a
+whole workload) into endpoint assignments::
+
+    schedule = policy.place(tasks, ctx)                 # batch mode
+    schedule = policy.place(tasks, ctx, state=live)     # online mode
+
+Online mode commits the placements into a live :class:`SchedulerState`
+carried across arrival windows, so later windows see the timelines, cache
+contents, and energy already accumulated by earlier ones.
+
+Policies are registered by name so executors and the online engine accept
+``policy="cluster_mhra"`` instead of hard-coded if/elif dispatch::
+
+    @register_policy
+    class MyPolicy(PlacementPolicy):
+        name = "my_policy"
+        def place(self, tasks, ctx, state=None): ...
+
+    get_policy("my_policy")
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import ClassVar, Sequence
+
+from repro.core import scheduler as sched
+from repro.core.endpoint import EndpointSpec
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
+from repro.core.transfer import TransferModel
+
+
+@dataclasses.dataclass
+class PolicyContext:
+    """Everything a policy needs besides the tasks themselves."""
+    endpoints: Sequence[EndpointSpec]
+    store: TaskProfileStore
+    transfer: TransferModel
+    alpha: float = 0.5
+
+
+class PlacementPolicy(abc.ABC):
+    """One placement decision: tasks -> endpoint assignments."""
+
+    name: ClassVar[str] = "abstract"
+
+    @abc.abstractmethod
+    def place(
+        self,
+        tasks: Sequence[TaskSpec],
+        ctx: PolicyContext,
+        state: SchedulerState | None = None,
+    ) -> Schedule:
+        """Place ``tasks``; with ``state`` given, commit into the live
+        timeline (online mode) instead of starting from an empty one."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} name={self.name!r}>"
+
+
+_REGISTRY: dict[str, type[PlacementPolicy]] = {}
+
+
+def register_policy(cls: type[PlacementPolicy]) -> type[PlacementPolicy]:
+    """Class decorator: make a policy constructible via :func:`get_policy`."""
+    name = getattr(cls, "name", None)
+    if not name or name == "abstract":
+        raise ValueError(f"{cls.__name__} must define a class-level name")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def available_policies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_policy(name: str, **kwargs) -> PlacementPolicy:
+    """Instantiate a registered policy by name (kwargs -> constructor)."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; available: {available_policies()}"
+        ) from None
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Built-in policies
+# ---------------------------------------------------------------------------
+
+
+@register_policy
+class MHRAPolicy(PlacementPolicy):
+    """Multi-Heuristic Resource Allocation (paper §III-F)."""
+
+    name = "mhra"
+
+    def __init__(self, heuristics: Sequence[str] = sched.HEURISTICS,
+                 engine: str = "delta"):
+        self.heuristics = tuple(heuristics)
+        self.engine = engine
+
+    def place(self, tasks, ctx, state=None):
+        return sched.mhra(
+            tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
+            self.heuristics, engine=self.engine, state=state,
+        )
+
+
+@register_policy
+class ClusterMHRAPolicy(PlacementPolicy):
+    """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
+
+    name = "cluster_mhra"
+
+    def __init__(self, heuristics: Sequence[str] = sched.HEURISTICS,
+                 max_cluster_size: int = 40, engine: str = "delta"):
+        self.heuristics = tuple(heuristics)
+        self.max_cluster_size = max_cluster_size
+        self.engine = engine
+
+    def place(self, tasks, ctx, state=None):
+        return sched.cluster_mhra(
+            tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
+            self.heuristics, self.max_cluster_size,
+            engine=self.engine, state=state,
+        )
+
+
+@register_policy
+class RoundRobinPolicy(PlacementPolicy):
+    """Rotates through endpoints; the rotation continues across windows."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._offset = 0
+
+    def place(self, tasks, ctx, state=None):
+        s = sched.round_robin(
+            tasks, ctx.endpoints, ctx.store, ctx.transfer,
+            state=state, offset=self._offset,
+        )
+        self._offset = (self._offset + len(list(tasks))) % len(ctx.endpoints)
+        return s
+
+
+@register_policy
+class SingleSitePolicy(PlacementPolicy):
+    """Every task on one named endpoint (Table V per-machine rows)."""
+
+    name = "single_site"
+
+    def __init__(self, site: str | None = None):
+        if not site:
+            raise ValueError("single_site policy requires site=<endpoint name>")
+        self.site = site
+
+    def place(self, tasks, ctx, state=None):
+        return sched.single_site(
+            tasks, ctx.endpoints, ctx.store, ctx.transfer, self.site,
+            state=state,
+        )

@@ -57,17 +57,21 @@ class TaskProfileStore:
         key = (fn, endpoint)
         if self._rt[key].n > 0:
             return Prediction(self._rt[key].mean, self._en[key].mean, True)
-        # cross-endpoint fallback: scale observed profile by relative speed
+        # cross-endpoint fallback: average every observed endpoint's profile
+        # scaled by relative speed (a single arbitrary observation would
+        # bias the estimate toward whichever endpoint happened to run first)
         obs = [
             (ep, self._rt[(f, ep)].mean, self._en[(f, ep)].mean)
             for (f, ep) in self._rt
             if f == fn and self._rt[(f, ep)].n > 0
         ]
         if obs:
-            ep0, rt0, en0 = obs[0]
-            s0 = self._eps.get(ep0, 1.0)
-            s1 = self._eps.get(endpoint, 1.0)
-            return Prediction(rt0 * s0 / max(s1, 1e-6), en0, False)
+            s1 = max(self._eps.get(endpoint, 1.0), 1e-6)
+            rts = [rt * self._eps.get(ep, 1.0) / s1 for ep, rt, _ in obs]
+            ens = [en for _, _, en in obs]
+            return Prediction(
+                float(np.mean(rts)), float(np.mean(ens)), False
+            )
         return Prediction(10.0, 100.0, False)  # exploration prior
 
     def drift_sigma(self, fn: str, endpoint: str, runtime_s: float) -> float:

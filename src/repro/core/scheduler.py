@@ -6,6 +6,23 @@ Objective:  O = alpha * E_tot/SF1 + (1-alpha) * C_max/SF2
           + transfer energy;  desktop-style endpoints charge idle over the
           whole workflow span (paper: power drawn whether or not tasks run).
   SF1/SF2 = pessimistic all-on-one-machine estimates.
+
+Two greedy engines share the same arithmetic:
+
+  * ``engine="delta"`` (default) scores a candidate endpoint by previewing
+    only the *change* it makes to the live state — peek/copy that one
+    endpoint's slot heap, delta the idle-span and dynamic-energy terms —
+    then commits only the winner.  O(endpoints * log cores) per decision.
+  * ``engine="clone"`` is the original clone-per-candidate greedy kept as
+    the reference implementation for parity tests and the overhead
+    benchmark.  O(endpoints^2 * cores) copies per decision.
+
+Both engines perform bitwise-identical floating-point operations, so they
+produce identical assignments and objective values; ``tests/
+test_policy_engine.py`` asserts this.  The delta engine also accepts a
+live ``SchedulerState`` so the online engine (``repro.core.engine``) can
+place arrival windows against the timeline carried over from previous
+windows.
 """
 from __future__ import annotations
 
@@ -54,8 +71,16 @@ HEURISTICS = (
 )
 
 
-class _State:
-    """Incremental greedy-scheduling state over endpoint timelines."""
+class SchedulerState:
+    """Incremental greedy-scheduling state over endpoint timelines.
+
+    Carried across arrival windows by the online engine.  The legacy clone
+    engine evaluates candidates with :meth:`clone` + :meth:`assign` +
+    :meth:`metrics`; the delta greedy (:func:`_greedy_delta`) unpacks this
+    state into flat lists and performs the *same float operations* inline
+    — any edit to assign()/metrics() arithmetic must be mirrored there to
+    preserve the engines' bitwise parity.
+    """
 
     def __init__(self, endpoints: Sequence[EndpointSpec], transfer: TransferModel):
         self.eps = list(endpoints)
@@ -70,8 +95,8 @@ class _State:
         self.cached: set[tuple[str, str]] = set()
         self.timeline: dict[str, tuple[float, float]] = {}
 
-    def clone(self) -> "_State":
-        s = _State.__new__(_State)
+    def clone(self, keep_timeline: bool = False) -> "SchedulerState":
+        s = SchedulerState.__new__(SchedulerState)
         s.eps, s.transfer = self.eps, self.transfer
         s.slots = {k: list(v) for k, v in self.slots.items()}
         s.first_start = dict(self.first_start)
@@ -79,8 +104,59 @@ class _State:
         s.dyn_energy = dict(self.dyn_energy)
         s.transfer_j = self.transfer_j
         s.cached = set(self.cached)
-        s.timeline = {}  # previews don't need task-level timelines
+        # candidate previews don't need task-level timelines; scratch states
+        # that may become the live state (multi-heuristic search) do
+        s.timeline = dict(self.timeline) if keep_timeline else {}
         return s
+
+    def advance_to(self, now: float) -> None:
+        """Raise every worker slot's free time to at least ``now`` — the
+        online engine calls this when an arrival window opens after an idle
+        gap, so placement previews can't schedule starts in the past
+        (mirroring the testbed's ``max(slot, now)`` dispatch rule)."""
+        for h in self.slots.values():
+            changed = False
+            for i, v in enumerate(h):
+                if v < now:
+                    h[i] = now
+                    changed = True
+            if changed:
+                heapq.heapify(h)
+
+    def replace_with(self, other: "SchedulerState") -> None:
+        """Adopt another state's contents in place (winner of a heuristic
+        search replacing the live online state)."""
+        self.slots = other.slots
+        self.first_start = other.first_start
+        self.last_end = other.last_end
+        self.dyn_energy = other.dyn_energy
+        self.transfer_j = other.transfer_j
+        self.cached = other.cached
+        self.timeline = other.timeline
+
+    # -- transfer bookkeeping shared by assign() and preview() -------------
+    def _transfer_delta(self, unit, name: str):
+        """(transfer_j_after, ready_s, cache_keys_added) for placing this
+        unit's inputs on endpoint ``name`` — no state mutation."""
+        transfer_j = self.transfer_j
+        t_bytes, t_files = 0.0, 0
+        new_cached: list[tuple[str, str]] = []
+        for t in unit:
+            for src, n_files, nbytes, shared in t.inputs:
+                if src == name:
+                    continue
+                key = (name, f"{src}:{n_files}:{nbytes}")
+                if shared and (key in self.cached or key in new_cached):
+                    continue
+                if shared:
+                    new_cached.append(key)
+                transfer_j += (
+                    self.transfer.hops(src, name) * nbytes * E_INC_J_PER_BYTE
+                )
+                t_bytes += nbytes
+                t_files += n_files
+        ready = self.transfer.predict_seconds(t_files, t_bytes)
+        return transfer_j, ready, new_cached
 
     def assign(
         self,
@@ -90,23 +166,9 @@ class _State:
         record_timeline: bool = False,
     ) -> None:
         name = ep.name
-        # transfers for this unit's inputs (batched; shared files cached)
-        reqs, t_bytes, t_files = [], 0.0, 0
-        for t in unit:
-            for src, n_files, nbytes, shared in t.inputs:
-                if src == name:
-                    continue
-                key = (name, f"{src}:{n_files}:{nbytes}")
-                if shared and key in self.cached:
-                    continue
-                if shared:
-                    self.cached.add(key)
-                self.transfer_j += (
-                    self.transfer.hops(src, name) * nbytes * E_INC_J_PER_BYTE
-                )
-                t_bytes += nbytes
-                t_files += n_files
-        ready = self.transfer.predict_seconds(t_files, t_bytes)
+        transfer_j, ready, new_cached = self._transfer_delta(unit, name)
+        self.transfer_j = transfer_j
+        self.cached.update(new_cached)
         if ep.has_batch_scheduler:
             ready += ep.queue_delay_s
         slots = self.slots[name]
@@ -142,14 +204,70 @@ class _State:
         return e_tot, c_max, self.transfer_j
 
 
-def _unit_stats(unit, endpoints, preds):
+# kept as an alias: pre-refactor code and tests referred to _State
+_State = SchedulerState
+
+
+class PredictionTable:
+    """Per-(task, endpoint) predictions as numpy arrays + flat lists.
+
+    ``store.predict`` depends only on (fn, endpoint), so predictions are
+    computed once per unique pair instead of once per task — at 1792 tasks
+    over 7 functions that is ~256x fewer predictor calls than the nested
+    dicts the clone engine builds.
+    """
+
+    def __init__(self, tasks, endpoints, store: TaskProfileStore):
+        self.tasks = list(tasks)
+        self.endpoints = list(endpoints)
+        self.index = {t.id: i for i, t in enumerate(self.tasks)}
+        cache: dict[tuple[str, str], Prediction] = {}
+        n_ep = len(self.endpoints)
+        # one predict per unique (fn, endpoint), expanded to tasks by
+        # fancy indexing — same float values task-by-task
+        fn_col: dict[str, int] = {}
+        fn_ids = np.empty(len(self.tasks), dtype=np.intp)
+        for ti, t in enumerate(self.tasks):
+            c = fn_col.get(t.fn)
+            if c is None:
+                c = fn_col[t.fn] = len(fn_col)
+            fn_ids[ti] = c
+        base_rt = np.empty((n_ep, len(fn_col)))
+        base_en = np.empty((n_ep, len(fn_col)))
+        for ei, ep in enumerate(self.endpoints):
+            for fn, c in fn_col.items():
+                p = cache[(fn, ep.name)] = store.predict(fn, ep.name)
+                base_rt[ei, c] = p.runtime_s
+                base_en[ei, c] = p.energy_j
+        self.rt = base_rt[:, fn_ids]
+        self.en = base_en[:, fn_ids]
+        self._cache = cache
+        # python-float rows for the hot greedy loop (numpy scalar indexing
+        # is ~5x slower than list indexing in CPython)
+        self.rt_rows = self.rt.tolist()
+        self.en_rows = self.en.tolist()
+        # endpoint-mean predictions used by the ordering heuristics; the
+        # axis-0 reduce performs the same sequential adds as the clone
+        # engine's per-task np.mean over an endpoint list
+        self.rt_mean = self.rt.mean(axis=0)
+        self.en_mean = self.en.mean(axis=0)
+
+    def per_ep(self) -> dict[str, dict[str, Prediction]]:
+        """Nested-dict view matching ``_predict_all`` for legacy callers."""
+        return {
+            ep.name: {t.id: self._cache[(t.fn, ep.name)] for t in self.tasks}
+            for ep in self.endpoints
+        }
+
+
+def _unit_stats(unit, preds):
     rt = float(np.mean([preds[t.id].runtime_s for t in unit]))
     en = float(np.mean([preds[t.id].energy_j for t in unit]))
     return rt * len(unit), en * len(unit)
 
 
-def _sort_units(units, key: str, endpoints, preds):
-    stats = [_unit_stats(u, endpoints, preds) for u in units]
+def _sort_units(units, key: str, preds):
+    stats = [_unit_stats(u, preds) for u in units]
     if key == "shortest_runtime_first":
         order = np.argsort([s[0] for s in stats])
     elif key == "longest_runtime_first":
@@ -163,11 +281,115 @@ def _sort_units(units, key: str, endpoints, preds):
     return [units[i] for i in order]
 
 
+def _sort_units_fast(units, key: str, table: PredictionTable, unit_indices):
+    """Same ordering as _sort_units from the vectorized mean arrays.
+
+    For singleton units the stat is the mean itself (mean of one element
+    times one is the identity bitwise), so no per-unit np.mean calls.
+    """
+    rt_mean, en_mean = table.rt_mean, table.en_mean
+    if all(len(ii) == 1 for ii in unit_indices):
+        flat = [ii[0] for ii in unit_indices]
+        rt_stat = rt_mean[flat]
+        en_stat = en_mean[flat]
+    else:
+        rt_stat = np.empty(len(units))
+        en_stat = np.empty(len(units))
+        for k, ii in enumerate(unit_indices):
+            m = len(ii)
+            rt_stat[k] = float(np.mean(rt_mean[ii])) * m
+            en_stat[k] = float(np.mean(en_mean[ii])) * m
+    if key == "shortest_runtime_first":
+        order = np.argsort(rt_stat)
+    elif key == "longest_runtime_first":
+        order = np.argsort(-rt_stat)
+    elif key == "highest_energy_first":
+        order = np.argsort(-en_stat)
+    elif key == "lowest_energy_first":
+        order = np.argsort(en_stat)
+    else:
+        raise ValueError(key)
+    return [units[i] for i in order]
+
+
 def _predict_all(tasks, endpoints, store: TaskProfileStore):
     return {
         ep.name: {t.id: store.predict(t.fn, ep.name) for t in tasks}
         for ep in endpoints
     }
+
+
+def _normalizers(tasks, endpoints, per_ep, transfer) -> tuple[float, float]:
+    """SF1/SF2: pessimistic all-on-one-endpoint estimates (exact seed
+    arithmetic — sequential accumulation keeps engine parity bitwise)."""
+    sf1 = sf2 = 0.0
+    for ep in endpoints:
+        st = SchedulerState([ep], transfer)
+        st.assign(list(tasks), ep, per_ep[ep.name])
+        e, c, _ = st.metrics()
+        sf1, sf2 = max(sf1, e), max(sf2, c)
+    return max(sf1, 1e-9), max(sf2, 1e-9)
+
+
+def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer
+                      ) -> tuple[float, float]:
+    """Same SF1/SF2 values as :func:`_normalizers` (operation-identical
+    float sequence) computed from the prediction table's flat rows instead
+    of nested Prediction dicts."""
+    heappop, heappush = heapq.heappop, heapq.heappush
+    n = len(tasks)
+    sf1 = sf2 = 0.0
+    for ei, ep in enumerate(endpoints):
+        name = ep.name
+        # transfer delta of the whole workload as one unit, fresh cache
+        tj, t_bytes, t_files = 0.0, 0.0, 0
+        seen: set[tuple[str, str]] = set()
+        for t in tasks:
+            for src, n_files, nbytes, shared in t.inputs:
+                if src == name:
+                    continue
+                key = (name, f"{src}:{n_files}:{nbytes}")
+                if shared and key in seen:
+                    continue
+                if shared:
+                    seen.add(key)
+                tj += transfer.hops(src, name) * nbytes * E_INC_J_PER_BYTE
+                t_bytes += nbytes
+                t_files += n_files
+        ready = transfer.predict_seconds(t_files, t_bytes)
+        if ep.has_batch_scheduler:
+            ready += ep.queue_delay_s
+        row_rt, row_en = table.rt_rows[ei], table.en_rows[ei]
+        slots = [0.0] * ep.cores
+        heapq.heapify(slots)
+        first = None
+        last = 0.0
+        dyn = 0.0
+        for i in range(n):
+            start = heappop(slots)
+            if start < ready:
+                start = ready
+            end = start + row_rt[i]
+            heappush(slots, end)
+            if first is None or start < first:
+                first = start
+            if end > last:
+                last = end
+            dyn += row_en[i]
+        # single-endpoint metrics(), same accumulation order
+        c = last if last > 0.0 else 0.0
+        e = tj
+        if first is None:
+            if not ep.has_batch_scheduler:
+                e += ep.idle_power_w * c
+        else:
+            if ep.has_batch_scheduler:
+                e += ep.idle_power_w * (last - first) + ep.startup_energy_j
+            else:
+                e += ep.idle_power_w * c
+            e += dyn
+        sf1, sf2 = max(sf1, e), max(sf2, c)
+    return max(sf1, 1e-9), max(sf2, 1e-9)
 
 
 def mhra(
@@ -178,9 +400,299 @@ def mhra(
     alpha: float = 0.5,
     heuristics: Sequence[str] = HEURISTICS,
     clusters: list[list[int]] | None = None,
+    engine: str = "delta",
+    state: SchedulerState | None = None,
 ) -> Schedule:
     """Multi-Heuristic Resource Allocation. With clusters given, this is
-    Cluster MHRA's greedy stage (one decision per cluster)."""
+    Cluster MHRA's greedy stage (one decision per cluster).
+
+    ``state`` (delta engine only) places against a live timeline carried
+    across arrival windows; the winning heuristic's result is committed
+    into it.
+    """
+    if not heuristics:
+        raise ValueError("mhra requires at least one ordering heuristic")
+    if engine == "clone":
+        if state is not None:
+            raise ValueError("engine='clone' does not support live state")
+        return _mhra_clone(tasks, endpoints, store, transfer, alpha,
+                           heuristics, clusters)
+    if engine != "delta":
+        raise ValueError(f"unknown engine {engine!r}")
+
+    tasks = list(tasks)
+    table = PredictionTable(tasks, endpoints, store)
+    if clusters is None:
+        units = [[t] for t in tasks]
+    else:
+        units = [[tasks[i] for i in c] for c in clusters]
+    sf1, sf2 = _normalizers_fast(tasks, endpoints, table, transfer)
+
+    unit_indices = [[table.index[t.id] for t in u] for u in units]
+    best: Schedule | None = None
+    best_state: SchedulerState | None = None
+    for h in heuristics:
+        ordered = _sort_units_fast(units, h, table, unit_indices)
+        sched, end_state = _greedy_delta(
+            ordered, endpoints, table, transfer, alpha, sf1, sf2, h, state
+        )
+        if best is None or sched.objective < best.objective:
+            best, best_state = sched, end_state
+    if state is not None:
+        state.replace_with(best_state)
+    return best
+
+
+def _greedy_delta(
+    units, endpoints, table: PredictionTable, transfer, alpha, sf1, sf2,
+    heuristic, base_state: SchedulerState | None = None,
+) -> tuple[Schedule, SchedulerState]:
+    """Delta-evaluation greedy: score each candidate endpoint from the
+    *change* it makes (peek the slot heap, delta the idle-span / dynamic
+    energy / transfer terms) and commit only the winner.
+
+    Every floating-point operation mirrors the clone engine's
+    state.assign() + state.metrics() sequence, so objectives (and hence
+    assignments) are bitwise identical; the savings are structural — no
+    per-candidate copies of every heap, dict, and cache set.  Running
+    C_max and per-endpoint span terms are maintained incrementally (exact:
+    max() never rounds, and the span term is recomputed from the same
+    operands the metrics loop would use).
+    """
+    state = (
+        base_state.clone(keep_timeline=True)
+        if base_state is not None
+        else SchedulerState(endpoints, transfer)
+    )
+    n_ep = len(endpoints)
+    names = [ep.name for ep in endpoints]
+    eps_r = range(n_ep)
+    # unpack live state into index-parallel lists for the hot loop
+    slots = [state.slots[n] for n in names]
+    first = [state.first_start[n] for n in names]
+    last = [state.last_end[n] for n in names]
+    dyn = [state.dyn_energy[n] for n in names]
+    cached = state.cached
+    timeline = state.timeline
+    transfer_j = state.transfer_j
+    # per-endpoint constants
+    idle = [ep.idle_power_w for ep in endpoints]
+    bt = [ep.has_batch_scheduler for ep in endpoints]
+    su = [ep.startup_energy_j for ep in endpoints]
+    qd = [ep.queue_delay_s if ep.has_batch_scheduler else 0.0 for ep in endpoints]
+    # running C_max (max never rounds: equals max over the last_end values)
+    c_cur = 0.0
+    for v in last:
+        if v > c_cur:
+            c_cur = v
+    # per-endpoint idle-span terms, recomputed only on commit — the same
+    # float expression metrics() evaluates per candidate in the clone engine
+    sterm = [
+        idle[j] * (last[j] - first[j]) + su[j]
+        if (bt[j] and first[j] is not None) else 0.0
+        for j in eps_r
+    ]
+    mins = [h[0] for h in slots]  # heap peeks, refreshed on commit
+    idx = table.index
+    rt_rows, en_rows = table.rt_rows, table.en_rows
+    hops = transfer.hops
+    predict_seconds = transfer.predict_seconds
+    beta = 1 - alpha
+    heappop, heappush, heapreplace = heapq.heappop, heapq.heappush, heapq.heapreplace
+    inf = np.inf
+    assignments: dict[str, str] = {}
+    # per-input caches shared across candidates: the "src:files:bytes" key
+    # string, per-endpoint key tuples, hop counts, and transfer-time
+    # predictions are all pure functions of their inputs
+    key_cache: dict[tuple, str] = {}
+    inp_info: dict[tuple, tuple] = {}
+    hop_cache: dict[tuple[str, str], float] = {}
+    ready_cache: dict[tuple, float] = {}
+
+    for unit in units:
+        single = len(unit) == 1
+        single_inp = None
+        if single:
+            t0 = unit[0]
+            ti = idx[t0.id]
+            no_inputs = not t0.inputs
+            if not no_inputs and len(t0.inputs) == 1:
+                inp = t0.inputs[0]
+                single_inp = inp_info.get(inp)
+                if single_inp is None:
+                    src, n_files, nbytes, shared = inp
+                    ks = f"{src}:{n_files}:{nbytes}"
+                    single_inp = inp_info[inp] = (
+                        src, n_files, nbytes, shared,
+                        # per-endpoint cache key; None where src == endpoint
+                        [None if names[j] == src else (names[j], ks)
+                         for j in eps_r],
+                    )
+        else:
+            no_inputs = all(not t.inputs for t in unit)
+        if not no_inputs and single_inp is None:
+            prep = []
+            for t in unit:
+                for inp in t.inputs:
+                    ks = key_cache.get(inp)
+                    if ks is None:
+                        src, n_files, nbytes, shared = inp
+                        ks = key_cache[inp] = f"{src}:{n_files}:{nbytes}"
+                    prep.append((inp[0], ks, inp[1], inp[2], inp[3]))
+        best_obj = inf
+        best = None
+        for ei in eps_r:
+            # --- transfer delta -------------------------------------------
+            if no_inputs:
+                tj = transfer_j
+                ready = qd[ei]
+                new_keys = ()
+            elif single_inp is not None:
+                src, n_files, nbytes, shared, keys4 = single_inp
+                key = keys4[ei]
+                if key is None or (shared and key in cached):
+                    # local input, or shared data already staged here:
+                    # no transfer — identical to the no-input case
+                    tj = transfer_j
+                    ready = qd[ei]
+                    new_keys = ()
+                else:
+                    new_keys = (key,) if shared else ()
+                    h = hop_cache.get(key)
+                    if h is None:
+                        h = hop_cache[key] = hops(src, names[ei])
+                    tj = transfer_j + h * nbytes * E_INC_J_PER_BYTE
+                    ready = ready_cache.get(key)
+                    if ready is None:
+                        ready = ready_cache[key] = predict_seconds(n_files, nbytes)
+                    ready = ready + qd[ei]
+            else:
+                name = names[ei]
+                tj = transfer_j
+                t_bytes, t_files = 0.0, 0
+                new_keys = []
+                for src, ks, n_files, nbytes, shared in prep:
+                    if src == name:
+                        continue
+                    key = (name, ks)
+                    if shared and (key in cached or key in new_keys):
+                        continue
+                    if shared:
+                        new_keys.append(key)
+                    h = hop_cache.get(key)
+                    if h is None:
+                        h = hop_cache[key] = hops(src, name)
+                    tj += h * nbytes * E_INC_J_PER_BYTE
+                    t_bytes += nbytes
+                    t_files += n_files
+                if t_files:
+                    rk = (t_files, t_bytes)
+                    ready = ready_cache.get(rk)
+                    if ready is None:
+                        ready = ready_cache[rk] = predict_seconds(t_files, t_bytes)
+                    ready = ready + qd[ei]
+                else:
+                    ready = qd[ei]
+            # --- simulate the placement -----------------------------------
+            if single:
+                s0 = mins[ei]
+                start = s0 if s0 >= ready else ready
+                end = start + rt_rows[ei][ti]
+                f = first[ei]
+                nf = start if (f is None or start < f) else f
+                l = last[ei]
+                nl = end if end > l else l
+                nd = dyn[ei] + en_rows[ei][ti]
+                heap = None
+                entries = (t0.id, start, end)
+            else:
+                heap = list(slots[ei])
+                row_rt, row_en = rt_rows[ei], en_rows[ei]
+                nf = first[ei]
+                nl = last[ei]
+                nd = dyn[ei]
+                entries = []
+                for t in unit:
+                    tix = idx[t.id]
+                    start = heappop(heap)
+                    if start < ready:
+                        start = ready
+                    end = start + row_rt[tix]
+                    heappush(heap, end)
+                    if nf is None or start < nf:
+                        nf = start
+                    if end > nl:
+                        nl = end
+                    nd = nd + row_en[tix]
+                    entries.append((t.id, start, end))
+            # --- objective, same accumulation order as metrics() ----------
+            c = nl if nl > c_cur else c_cur
+            e = tj
+            for j in eps_r:
+                if j == ei:
+                    if bt[ei]:
+                        e += idle[ei] * (nl - nf) + su[ei]
+                    else:
+                        e += idle[ei] * c
+                    e += nd
+                elif bt[j]:
+                    if first[j] is not None:
+                        e += sterm[j]
+                        e += dyn[j]
+                else:
+                    e += idle[j] * c
+                    if first[j] is not None:
+                        e += dyn[j]
+            obj = alpha * e / sf1 + beta * c / sf2
+            if obj < best_obj:
+                best_obj = obj
+                best = (ei, tj, new_keys, heap, entries, nf, nl, nd)
+        # --- commit the winner --------------------------------------------
+        ei, tj, new_keys, heap, entries, nf, nl, nd = best
+        transfer_j = tj
+        if new_keys:
+            cached.update(new_keys)
+        if heap is None:
+            tid, start, end = entries
+            heapreplace(slots[ei], end)
+            timeline[tid] = (start, end)
+            assignments[tid] = names[ei]
+        else:
+            slots[ei] = heap
+            name = names[ei]
+            for tid, start, end in entries:
+                timeline[tid] = (start, end)
+                assignments[tid] = name
+        mins[ei] = slots[ei][0]
+        first[ei] = nf
+        last[ei] = nl
+        dyn[ei] = nd
+        if nl > c_cur:
+            c_cur = nl
+        if bt[ei]:
+            sterm[ei] = idle[ei] * (nl - nf) + su[ei]
+
+    # write the loop-local state back into the SchedulerState
+    for ei in eps_r:
+        n = names[ei]
+        state.slots[n] = slots[ei]
+        state.first_start[n] = first[ei]
+        state.last_end[n] = last[ei]
+        state.dyn_energy[n] = dyn[ei]
+    state.transfer_j = transfer_j
+    e, c, tj = state.metrics()
+    obj = alpha * e / sf1 + (1 - alpha) * c / sf2
+    sched = Schedule(assignments, obj, e, c, tj, heuristic, dict(state.timeline))
+    return sched, state
+
+
+# ---------------------------------------------------------------------------
+# Reference clone-based engine (the seed implementation, kept verbatim for
+# parity tests and benchmarks/scheduler_overhead.py)
+# ---------------------------------------------------------------------------
+
+
+def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters):
     per_ep = _predict_all(tasks, endpoints, store)
     if clusters is None:
         units = [[t] for t in tasks]
@@ -197,7 +709,7 @@ def mhra(
             )
             for t in tasks
         }
-        ordered = _sort_units(units, h, endpoints, mean_preds)
+        ordered = _sort_units(units, h, mean_preds)
         sched = _greedy_multi_ep(
             ordered, endpoints, per_ep, transfer, alpha, tasks, h
         )
@@ -208,15 +720,9 @@ def mhra(
 
 def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks, heuristic):
     # SF normalizers from endpoint-specific predictions
-    sf1 = sf2 = 0.0
-    for ep in endpoints:
-        st = _State([ep], transfer)
-        st.assign(list(tasks), ep, per_ep[ep.name])
-        e, c, _ = st.metrics()
-        sf1, sf2 = max(sf1, e), max(sf2, c)
-    sf1, sf2 = max(sf1, 1e-9), max(sf2, 1e-9)
+    sf1, sf2 = _normalizers(tasks, endpoints, per_ep, transfer)
 
-    state = _State(endpoints, transfer)
+    state = SchedulerState(endpoints, transfer)
     assignments: dict[str, str] = {}
     for unit in units:
         best_obj, best_ep = np.inf, None
@@ -235,6 +741,26 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks, heuristic
     return Schedule(assignments, obj, e, c, tj, heuristic, state.timeline)
 
 
+def compute_clusters(
+    tasks, endpoints, table: PredictionTable, max_cluster_size: int = 40
+) -> list[list[int]]:
+    """Agglomerative clusters from the vectorized prediction table (same
+    features/energies as the clone path's nested-dict construction)."""
+    n_ep = len(endpoints)
+    feats = np.empty((len(tasks), 2 * n_ep))
+    for ei in range(n_ep):
+        feats[:, 2 * ei] = table.rt[ei]
+        feats[:, 2 * ei + 1] = table.en[ei]
+    energies = table.en_mean
+    cap = min(
+        [ep.startup_energy_j for ep in endpoints if ep.has_batch_scheduler]
+        or [np.inf]
+    )
+    return agglomerative_cluster(
+        feats, energies, cap, max_cluster_size=max_cluster_size
+    )
+
+
 def cluster_mhra(
     tasks: Sequence[TaskSpec],
     endpoints: Sequence[EndpointSpec],
@@ -243,28 +769,37 @@ def cluster_mhra(
     alpha: float = 0.5,
     heuristics: Sequence[str] = HEURISTICS,
     max_cluster_size: int = 40,
+    engine: str = "delta",
+    state: SchedulerState | None = None,
 ) -> Schedule:
     """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
-    per_ep = _predict_all(tasks, endpoints, store)
-    feats = np.array(
-        [
-            [v for ep in endpoints for v in (
-                per_ep[ep.name][t.id].runtime_s, per_ep[ep.name][t.id].energy_j
-            )]
-            for t in tasks
-        ]
-    )
-    energies = np.array(
-        [np.mean([per_ep[ep.name][t.id].energy_j for ep in endpoints]) for t in tasks]
-    )
-    cap = min(
-        [ep.startup_energy_j for ep in endpoints if ep.has_batch_scheduler]
-        or [np.inf]
-    )
-    clusters = agglomerative_cluster(
-        feats, energies, cap, max_cluster_size=max_cluster_size
-    )
-    return mhra(tasks, endpoints, store, transfer, alpha, heuristics, clusters)
+    tasks = list(tasks)
+    if engine == "clone":
+        per_ep = _predict_all(tasks, endpoints, store)
+        feats = np.array(
+            [
+                [v for ep in endpoints for v in (
+                    per_ep[ep.name][t.id].runtime_s, per_ep[ep.name][t.id].energy_j
+                )]
+                for t in tasks
+            ]
+        )
+        energies = np.array(
+            [np.mean([per_ep[ep.name][t.id].energy_j for ep in endpoints]) for t in tasks]
+        )
+        cap = min(
+            [ep.startup_energy_j for ep in endpoints if ep.has_batch_scheduler]
+            or [np.inf]
+        )
+        clusters = agglomerative_cluster(
+            feats, energies, cap, max_cluster_size=max_cluster_size
+        )
+        return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
+                    clusters, engine="clone")
+    table = PredictionTable(tasks, endpoints, store)
+    clusters = compute_clusters(tasks, endpoints, table, max_cluster_size)
+    return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
+                clusters, engine="delta", state=state)
 
 
 # ---------------------------------------------------------------------------
@@ -273,26 +808,37 @@ def cluster_mhra(
 
 
 def fixed_assignment(
-    tasks, endpoints, store, transfer, pick: Callable[[int, TaskSpec], str]
+    tasks, endpoints, store, transfer, pick: Callable[[int, TaskSpec], str],
+    state: SchedulerState | None = None,
 ) -> Schedule:
-    per_ep = _predict_all(tasks, endpoints, store)
+    tasks = list(tasks)
+    per_ep = PredictionTable(tasks, endpoints, store).per_ep()
     by_ep = {e.name: e for e in endpoints}
-    state = _State(endpoints, transfer)
+    state = state if state is not None else SchedulerState(endpoints, transfer)
     assignments = {}
     for i, t in enumerate(tasks):
         name = pick(i, t)
         state.assign([t], by_ep[name], per_ep[name], record_timeline=True)
         assignments[t.id] = name
     e, c, tj = state.metrics()
-    return Schedule(assignments, np.nan, e, c, tj, "fixed", state.timeline)
+    return Schedule(assignments, np.nan, e, c, tj, "fixed", dict(state.timeline))
 
 
-def round_robin(tasks, endpoints, store, transfer) -> Schedule:
+def round_robin(tasks, endpoints, store, transfer,
+                state: SchedulerState | None = None, offset: int = 0) -> Schedule:
     names = [e.name for e in endpoints]
     return fixed_assignment(
-        tasks, endpoints, store, transfer, lambda i, t: names[i % len(names)]
+        tasks, endpoints, store, transfer,
+        lambda i, t: names[(i + offset) % len(names)], state=state,
     )
 
 
-def single_site(tasks, endpoints, store, transfer, site: str) -> Schedule:
-    return fixed_assignment(tasks, endpoints, store, transfer, lambda i, t: site)
+def single_site(tasks, endpoints, store, transfer, site: str,
+                state: SchedulerState | None = None) -> Schedule:
+    names = {e.name for e in endpoints}
+    if site not in names:
+        raise ValueError(
+            f"single_site requires site to be one of {sorted(names)}, got {site!r}"
+        )
+    return fixed_assignment(tasks, endpoints, store, transfer,
+                            lambda i, t: site, state=state)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import zlib
 
 import numpy as np
 
@@ -103,6 +104,7 @@ class TestbedSim:
         self.coefs = coefs or MACHINE_COEFS
         self.rng = np.random.default_rng(seed)
         self.noise = runtime_noise
+        self._stream: dict | None = None
 
     def task_truth(self, fn: str, machine: str) -> tuple[float, float, np.ndarray]:
         """(runtime, dyn_watts, counter_rates) — counters chosen so that
@@ -186,6 +188,137 @@ class TestbedSim:
         for ep in self.endpoints:
             if not ep.has_batch_scheduler:
                 total_true += ep.idle_power_w * makespan
+        return SimResult(
+            records=records, traces=traces, makespan_s=makespan,
+            true_energy_j=total_true, true_dyn_energy_j=true_dyn,
+        )
+
+    # ------------------------------------------------------------------
+    # Incremental (streaming) execution for the online engine
+    # ------------------------------------------------------------------
+
+    def begin_stream(self) -> None:
+        """Reset incremental execution: endpoint worker pools, pending
+        intervals, and the stream clock persist across execute_window calls."""
+        self._stream = {
+            "slots": {},        # ep -> min-heap of slot-free times
+            "slot_free": {},    # ep -> per-slot busy-until (pid mapping)
+            "pid_of_slot": {},  # ep -> slot index -> pid
+            "intervals": {},    # ep -> [(start, end, w, pid, rates)]
+            "clock": 0.0,       # latest release time seen so far
+        }
+
+    @property
+    def stream_clock(self) -> float:
+        return self._stream["clock"] if self._stream else 0.0
+
+    def execute_window(
+        self,
+        assignments: dict[str, str],
+        tasks: list[TaskSpec],
+        now: float = 0.0,
+    ) -> SimResult:
+        """Execute one arrival window against the persistent stream state.
+
+        Endpoint worker pools (slot heaps) carry over from earlier windows:
+        a task submitted at ``now`` starts no earlier than ``now`` and no
+        earlier than a free slot.  Batch-scheduler endpoints pay their queue
+        delay once, on first use of the stream.  Monitoring traces cover
+        this window's span and include node power from still-running tasks
+        of earlier windows, so attribution sees true node power.
+        """
+        if self._stream is None:
+            self.begin_stream()
+        st = self._stream
+        by_ep: dict[str, list[TaskSpec]] = {}
+        for t in tasks:
+            by_ep.setdefault(assignments[t.id], []).append(t)
+
+        records: list[TaskRecord] = []
+        traces: dict[str, NodeTrace] = {}
+        true_dyn: dict[str, float] = {}
+        makespan = st["clock"]
+        total_true = 0.0
+
+        for ep_name, ep_tasks in by_ep.items():
+            ep = self.by_name[ep_name]
+            if ep_name not in st["slots"]:
+                ready = now + (ep.queue_delay_s if ep.has_batch_scheduler else 0.0)
+                slots = [ready] * ep.cores
+                heapq.heapify(slots)
+                st["slots"][ep_name] = slots
+                st["slot_free"][ep_name] = list(slots)
+                st["pid_of_slot"][ep_name] = {i: 1000 + i for i in range(ep.cores)}
+                st["intervals"][ep_name] = []
+            slots = st["slots"][ep_name]
+            slot_free = st["slot_free"][ep_name]
+            pid_of_slot = st["pid_of_slot"][ep_name]
+            # drop intervals that ended before this window opens
+            st["intervals"][ep_name] = [
+                iv for iv in st["intervals"][ep_name] if iv[1] > now
+            ]
+            intervals = st["intervals"][ep_name]
+            new_intervals = []
+            for t in ep_tasks:
+                rt, w, rates = self.task_truth(t.fn, ep_name)
+                rt = rt * float(
+                    np.clip(self.rng.normal(1.0, self.noise), 0.7, 1.3)
+                )
+                popped = heapq.heappop(slots)
+                start = max(popped, now) + DISPATCH_OVERHEAD_S
+                end = start + rt
+                heapq.heappush(slots, end)
+                # match the freed slot on the *unclamped* pop value — clamping
+                # to `now` first could pick a still-busy slot and reuse its pid
+                slot_id = int(np.argmin([abs(sf - popped) for sf in slot_free]))
+                slot_free[slot_id] = end
+                pid = pid_of_slot[slot_id]
+                iv = (start, end, w, pid, rates)
+                intervals.append(iv)
+                new_intervals.append(iv)
+                records.append(TaskRecord(
+                    task_id=t.id, fn=t.fn, endpoint=ep_name,
+                    worker_pid=pid, t_start=start, t_end=end, user=t.user,
+                ))
+            release_t = max(end for _, end, *_ in new_intervals) + 2.0
+            makespan = max(makespan, release_t)
+
+            def node_power(tt, _iv=intervals, _ep=ep):
+                return _ep.idle_power_w + sum(
+                    wv for s, e, wv, *_ in _iv if s <= tt < e
+                )
+
+            # crc32, not hash(): str hashing is randomized per process
+            # (PYTHONHASHSEED) and would make online runs irreproducible
+            mon = CallbackMonitor(
+                node_power, seed=zlib.crc32(ep_name.encode()) % 2**31
+            )
+            ps, cs = [], []
+            tgrid = np.arange(now, release_t + SAMPLE_PERIOD_S, SAMPLE_PERIOD_S)
+            for tt in tgrid:
+                ps.append(PowerSample(t=float(tt), watts=mon.read_watts(float(tt))))
+                procs = {}
+                for s, e, _w, pid, rates in intervals:
+                    if s <= tt < e:
+                        jitter = self.rng.normal(1.0, 0.02, size=rates.shape)
+                        procs[pid] = rates * jitter
+                cs.append(CounterSample(t=float(tt), procs=procs))
+            dyn = sum((e - s) * wv for s, e, wv, *_ in new_intervals)
+            true_dyn[ep_name] = dyn
+            node_true = dyn + (
+                ep.idle_power_w * (release_t - now) if ep.has_batch_scheduler else 0.0
+            )
+            total_true += node_true
+            traces[ep_name] = NodeTrace(
+                endpoint=ep_name, power_samples=ps, counter_samples=cs,
+                alloc_span=(now, release_t), true_node_energy_j=node_true,
+            )
+
+        st["clock"] = makespan
+        # always-on endpoints idle through the window span regardless of use
+        for ep in self.endpoints:
+            if ep.always_on:
+                total_true += ep.idle_power_w * max(makespan - now, 0.0)
         return SimResult(
             records=records, traces=traces, makespan_s=makespan,
             true_energy_j=total_true, true_dyn_energy_j=true_dyn,

@@ -46,13 +46,16 @@ class TransferModel:
         x = np.array([1.0, n_files, total_bytes / 1e9])
         self._xtx += np.outer(x, x)
         self._xty += x * seconds
+        self._coef = None  # refit lazily on next prediction
 
     def predict_seconds(self, n_files: int, total_bytes: float) -> float:
         if n_files == 0 or total_bytes <= 0:
             return 0.0
-        coef = np.linalg.solve(self._xtx, self._xty)
-        x = np.array([1.0, n_files, total_bytes / 1e9])
-        return max(float(coef @ x), 0.0)
+        if self._coef is None:
+            self._coef = [float(c) for c in np.linalg.solve(self._xtx, self._xty)]
+        c0, c1, c2 = self._coef
+        t = c0 + c1 * n_files + c2 * (total_bytes / 1e9)
+        return t if t > 0.0 else 0.0
 
     # --- energy -----------------------------------------------------------
     def hops(self, src: str, dst: str) -> int:

@@ -1,0 +1,184 @@
+"""Policy registry + delta-engine parity tests.
+
+The delta-evaluation greedy must produce *identical* assignments and
+objective values to the seed clone-per-candidate greedy — same inputs,
+same seed — for every built-in policy on the Table-V workload shape.
+"""
+import numpy as np
+import pytest
+
+from repro.core.endpoint import table1_testbed
+from repro.core.executor import GreenFaaSExecutor
+from repro.core.policy import (
+    PlacementPolicy,
+    PolicyContext,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import (
+    SchedulerState,
+    TaskSpec,
+    cluster_mhra,
+    mhra,
+    round_robin,
+    single_site,
+)
+from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS, TestbedSim
+from repro.core.transfer import TransferModel
+
+
+def _table5_setup(n_per=64, with_inputs=True):
+    """The paper's Table-V workload shape: n_per invocations of each of the
+    7 SeBS functions, inputs on desktop (shared/cacheable)."""
+    eps = table1_testbed()
+    store = TaskProfileStore(eps)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            rt, w = BASE_PROFILES[fn][ep.name]
+            for _ in range(3):
+                store.record(fn, ep.name, rt, rt * w)
+    inputs = (("desktop", 1, 200e6, True),) if with_inputs else ()
+    tasks = [
+        TaskSpec(id=f"t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)],
+                 inputs=inputs)
+        for i in range(n_per * len(SEBS_FUNCTIONS))
+    ]
+    return tasks, eps, store, TransferModel(eps)
+
+
+# ---------------------------------------------------------------------------
+# delta vs clone parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.2, 0.5, 1.0])
+@pytest.mark.parametrize("strategy", [mhra, cluster_mhra])
+def test_delta_engine_matches_clone_engine(strategy, alpha):
+    tasks, eps, store, tm = _table5_setup(n_per=32)
+    a = strategy(tasks, eps, store, tm, alpha=alpha, engine="delta")
+    b = strategy(tasks, eps, store, tm, alpha=alpha, engine="clone")
+    assert a.assignments == b.assignments
+    assert a.objective == b.objective          # bitwise, not approx
+    assert a.energy_j == b.energy_j
+    assert a.makespan_s == b.makespan_s
+    assert a.transfer_j == b.transfer_j
+    assert a.heuristic == b.heuristic
+
+
+def test_delta_engine_matches_clone_without_inputs():
+    tasks, eps, store, tm = _table5_setup(n_per=32, with_inputs=False)
+    a = mhra(tasks, eps, store, tm, alpha=0.5, engine="delta")
+    b = mhra(tasks, eps, store, tm, alpha=0.5, engine="clone")
+    assert a.assignments == b.assignments
+    assert a.objective == b.objective
+
+
+def test_policy_parity_all_four_on_table5():
+    """Every registered built-in policy: the policy object (delta engine)
+    must reproduce the legacy function entry points exactly."""
+    tasks, eps, store, tm = _table5_setup(n_per=24)
+    ctx = PolicyContext(eps, store, tm, alpha=0.5)
+
+    legacy = {
+        "mhra": mhra(tasks, eps, store, tm, alpha=0.5, engine="clone"),
+        "cluster_mhra": cluster_mhra(tasks, eps, store, tm, alpha=0.5,
+                                     engine="clone"),
+        "round_robin": round_robin(tasks, eps, store, tm),
+        "single_site": single_site(tasks, eps, store, tm, "ic"),
+    }
+    for name, expect in legacy.items():
+        policy = get_policy(name, site="ic") if name == "single_site" else get_policy(name)
+        got = policy.place(tasks, ctx)
+        assert got.assignments == expect.assignments, name
+        assert got.energy_j == expect.energy_j, name
+        assert got.makespan_s == expect.makespan_s, name
+        if not np.isnan(expect.objective):
+            assert got.objective == expect.objective, name
+
+
+def test_unused_mhra_state_arg_rejected_on_clone():
+    tasks, eps, store, tm = _table5_setup(n_per=2)
+    with pytest.raises(ValueError):
+        mhra(tasks, eps, store, tm, engine="clone",
+             state=SchedulerState(eps, tm))
+    with pytest.raises(ValueError):
+        mhra(tasks, eps, store, tm, engine="nope")
+    with pytest.raises(ValueError, match="heuristic"):
+        mhra(tasks, eps, store, tm, heuristics=())
+
+
+# ---------------------------------------------------------------------------
+# registry round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_builtin_policies():
+    assert {"mhra", "cluster_mhra", "round_robin", "single_site"} <= set(
+        available_policies()
+    )
+
+
+def test_registry_round_trip():
+    p = get_policy("cluster_mhra", max_cluster_size=12)
+    assert p.name == "cluster_mhra"
+    assert p.max_cluster_size == 12
+
+
+def test_register_custom_policy():
+    @register_policy
+    class FirstEndpointPolicy(PlacementPolicy):
+        name = "first_endpoint_test"
+
+        def place(self, tasks, ctx, state=None):
+            from repro.core.scheduler import fixed_assignment
+            first = ctx.endpoints[0].name
+            return fixed_assignment(
+                tasks, ctx.endpoints, ctx.store, ctx.transfer,
+                lambda i, t: first, state=state,
+            )
+
+    tasks, eps, store, tm = _table5_setup(n_per=2)
+    p = get_policy("first_endpoint_test")
+    s = p.place(tasks, PolicyContext(eps, store, tm))
+    assert set(s.assignments.values()) == {eps[0].name}
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("not_a_policy")
+
+
+def test_unnamed_policy_rejected():
+    with pytest.raises(ValueError, match="name"):
+        @register_policy
+        class Nameless(PlacementPolicy):
+            def place(self, tasks, ctx, state=None):
+                raise NotImplementedError
+
+
+def test_single_site_requires_site():
+    with pytest.raises(ValueError, match="site"):
+        get_policy("single_site")
+    tasks, eps, store, tm = _table5_setup(n_per=2)
+    with pytest.raises(ValueError, match="single_site"):
+        single_site(tasks, eps, store, tm, "nonexistent")
+
+
+def test_executor_validates_single_site():
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=0)
+    with pytest.raises(ValueError, match="single_site"):
+        GreenFaaSExecutor(eps, sim, strategy="single_site", site=None)
+    with pytest.raises(ValueError, match="single_site"):
+        GreenFaaSExecutor(eps, sim, strategy="single_site", site="no_such_ep")
+    ex = GreenFaaSExecutor(eps, sim, strategy="single_site", site="desktop")
+    assert ex.policy.site == "desktop"
+
+
+def test_executor_accepts_policy_instance():
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=0)
+    ex = GreenFaaSExecutor(eps, sim, policy=get_policy("round_robin"))
+    assert ex.policy.name == "round_robin"

@@ -1,7 +1,8 @@
 """Power model fit, attribution correction factor, integration windows."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.counters import CounterSample, PowerSample, TaskRecord
 from repro.core.power_model import EnergyAttributor, LinearPowerModel, _integrate

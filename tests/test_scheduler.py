@@ -1,7 +1,8 @@
 """Scheduler unit + property tests (MHRA, Cluster MHRA, clustering)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.clustering import agglomerative_cluster
 from repro.core.endpoint import table1_testbed
