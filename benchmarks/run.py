@@ -35,7 +35,11 @@ def main() -> None:
     suites = {
         "profile_tasks": lambda: profile_tasks.main(),
         "monitoring_overhead": lambda: monitoring_overhead.main(),
-        "scheduler_overhead": lambda: scheduler_overhead.main(),
+        # harness mode: Table-IV sizes only (the 100k scaling sweep is the
+        # standalone `python benchmarks/scheduler_overhead.py` run)
+        "scheduler_overhead": lambda: scheduler_overhead.main(
+            [] if args.full else ["--tasks", "1792"]
+        ),
         "placement_strategies": lambda: placement_strategies.main(n_per=n_per),
         "alpha_sweep": lambda: alpha_sweep.main() if not args.quick else _alpha(n_alpha),
         "molecular_design": lambda: molecular_design.main(),

@@ -1,6 +1,17 @@
 """GreenFaaS task/energy database (the 'cloud-hosted DB' of §III-C).
 
-In-memory with JSON persistence; the report/bookmarklet layer queries it.
+In-memory with JSONL persistence; the report/bookmarklet layer queries it.
+
+Aggregates (per-endpoint / per-user / per-function energy) are maintained
+incrementally on ``add``/``extend`` instead of rescanning every record on
+each query, so report queries stay O(distinct keys) as the record count
+grows into the millions.  ``save()`` appends only records written since
+the last save as JSON lines rather than rewriting the whole blob (legacy
+JSON-array files are still readable and are upgraded on first save).
+
+Aggregates reflect each record's values *at insertion time* — the
+attribution pipeline fills ``energy_j``/``node_energy_j`` before adding.
+If records are mutated afterwards, call :meth:`reindex`.
 """
 from __future__ import annotations
 
@@ -16,55 +27,90 @@ class TaskDB:
     def __init__(self, path: str | None = None):
         self.path = pathlib.Path(path) if path else None
         self.records: list[TaskRecord] = []
+        self._reset_aggregates()
+        self._saved = 0            # records already persisted to self.path
+        self._legacy_file = False  # loaded from a JSON-array blob
         if self.path and self.path.exists():
             self.load()
 
+    # --- ingest -------------------------------------------------------------
+    def _reset_aggregates(self) -> None:
+        self._energy_by_ep: dict[str, float] = defaultdict(float)
+        self._node_by_ep: dict[str, float] = defaultdict(float)
+        self._user_by_ep: dict[str, dict[str, float]] = defaultdict(
+            lambda: defaultdict(float)
+        )
+        self._fn_sum: dict[str, dict[str, float]] = defaultdict(
+            lambda: defaultdict(float)
+        )
+        self._fn_cnt: dict[str, dict[str, int]] = defaultdict(
+            lambda: defaultdict(int)
+        )
+
+    def _index(self, r: TaskRecord) -> None:
+        self._energy_by_ep[r.endpoint] += r.energy_j or 0.0
+        self._node_by_ep[r.endpoint] += r.node_energy_j or 0.0
+        self._user_by_ep[r.user][r.endpoint] += r.energy_j or 0.0
+        if r.energy_j is not None:
+            self._fn_sum[r.fn][r.endpoint] += r.energy_j
+            self._fn_cnt[r.fn][r.endpoint] += 1
+
     def add(self, rec: TaskRecord) -> None:
         self.records.append(rec)
+        self._index(rec)
 
     def extend(self, recs) -> None:
-        self.records.extend(recs)
+        for r in recs:
+            self.add(r)
+
+    def reindex(self) -> None:
+        """Rebuild aggregates from scratch (after in-place record edits)."""
+        self._reset_aggregates()
+        for r in self.records:
+            self._index(r)
 
     # --- queries used by the web report ------------------------------------
     def energy_by_endpoint(self) -> dict[str, float]:
-        out: dict[str, float] = defaultdict(float)
-        for r in self.records:
-            out[r.endpoint] += r.energy_j or 0.0
-        return dict(out)
+        return dict(self._energy_by_ep)
 
     def energy_by_user(self, user: str) -> dict[str, float]:
-        out: dict[str, float] = defaultdict(float)
-        for r in self.records:
-            if r.user == user:
-                out[r.endpoint] += r.energy_j or 0.0
-        return dict(out)
+        return dict(self._user_by_ep.get(user, {}))
 
     def node_energy_by_endpoint(self) -> dict[str, float]:
-        out: dict[str, float] = defaultdict(float)
-        for r in self.records:
-            out[r.endpoint] += r.node_energy_j or 0.0
-        return dict(out)
+        return dict(self._node_by_ep)
 
     def by_function(self) -> dict[str, dict[str, float]]:
-        out: dict[str, dict[str, float]] = defaultdict(lambda: defaultdict(float))
-        cnt: dict[str, dict[str, int]] = defaultdict(lambda: defaultdict(int))
-        for r in self.records:
-            if r.energy_j is not None:
-                out[r.fn][r.endpoint] += r.energy_j
-                cnt[r.fn][r.endpoint] += 1
         return {
-            fn: {ep: e / cnt[fn][ep] for ep, e in eps.items()}
-            for fn, eps in out.items()
+            fn: {ep: s / self._fn_cnt[fn][ep] for ep, s in eps.items()}
+            for fn, eps in self._fn_sum.items()
         }
 
     # --- persistence --------------------------------------------------------
     def save(self) -> None:
         assert self.path is not None
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        self.path.write_text(json.dumps(
-            [dataclasses.asdict(r) for r in self.records]
-        ))
+        if self._legacy_file or not self.path.exists():
+            # fresh file, or upgrading a legacy JSON-array blob: write all
+            with self.path.open("w") as f:
+                for r in self.records:
+                    f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+            self._legacy_file = False
+        elif self._saved < len(self.records):
+            with self.path.open("a") as f:
+                for r in self.records[self._saved:]:
+                    f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+        self._saved = len(self.records)
 
     def load(self) -> None:
-        data = json.loads(self.path.read_text())
+        text = self.path.read_text()
+        head = text.lstrip()[:1]
+        if head == "[":
+            # legacy whole-blob JSON array
+            data = json.loads(text)
+            self._legacy_file = True
+        else:
+            data = [json.loads(line) for line in text.splitlines() if line.strip()]
+            self._legacy_file = False
         self.records = [TaskRecord(**d) for d in data]
+        self._saved = len(self.records)
+        self.reindex()

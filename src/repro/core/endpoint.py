@@ -81,6 +81,35 @@ def table1_testbed() -> list[EndpointSpec]:
     ]
 
 
+def scaled_testbed(replicas: int) -> list[EndpointSpec]:
+    """The Table-I testbed replicated ``replicas`` times into a federated
+    fleet (4·replicas endpoints) for scale benchmarks.
+
+    Replicas are deliberately *heterogeneous* — idle power, queue delay,
+    and relative speed drift a few percent per generation, the way no two
+    racks of a real federation are identical.  (Exact spec duplicates
+    would also create exactly-tied placement scores, which different
+    engines may legitimately break differently.)  Replica k of machine m
+    is named ``{m}_{k}``; inter-site hop counts fall back to
+    ``DEFAULT_HOPS``.
+    """
+    base = table1_testbed()
+    if replicas <= 1:
+        return base
+    eps = []
+    for k in range(replicas):
+        for e in base:
+            eps.append(dataclasses.replace(
+                e,
+                name=f"{e.name}_{k}",
+                idle_power_w=e.idle_power_w * (1.0 + 0.03 * k),
+                queue_delay_s=e.queue_delay_s * (1.0 + 0.05 * k),
+                perf_scale=e.perf_scale * (1.0 + 0.02 * k),
+                hops={},
+            ))
+    return eps
+
+
 # ---------------------------------------------------------------------------
 # TPU fleet endpoints (v5e constants per brief; power figures are config)
 # ---------------------------------------------------------------------------

@@ -31,7 +31,7 @@ from repro.core.executor import attribute_window
 from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
 from repro.core.power_model import LinearPowerModel
 from repro.core.predictor import TaskProfileStore
-from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
+from repro.core.scheduler import Schedule, SchedulerState, SoAState, TaskSpec
 from repro.core.testbed import SimResult, TestbedSim
 from repro.core.transfer import TransferModel
 
@@ -91,15 +91,36 @@ class OnlineEngine:
         db: TaskDB | None = None,
         monitoring: bool = True,
         site: str | None = None,
+        engine: str | None = None,
     ):
+        """``engine`` selects the scheduling backend for registry-name
+        mhra/cluster_mhra policies ("delta" or "soa") and the live
+        state's layout: "soa" carries a :class:`SoAState` (flat arrays)
+        across windows, anything else the heap-backed
+        :class:`SchedulerState`.  With a policy *instance*, the state
+        layout follows the instance's own ``engine`` attribute.
+        ``engine="clone"`` is rejected here: the clone engine cannot
+        place against a live state, so every window would fail."""
         self.endpoints = list(endpoints)
         self.backend = backend
         if isinstance(policy, PlacementPolicy):
             self.policy = policy
         elif policy == "single_site":
             self.policy = get_policy(policy, site=site)
+        elif engine is not None and policy in ("mhra", "cluster_mhra"):
+            self.policy = get_policy(policy, engine=engine)
         else:
             self.policy = get_policy(policy)
+        self.engine = (
+            engine if engine is not None
+            else getattr(self.policy, "engine", "delta")
+        )
+        if self.engine == "clone":
+            raise ValueError(
+                "OnlineEngine requires a live-state engine ('delta' or "
+                "'soa'); engine='clone' cannot place against the state "
+                "carried across arrival windows"
+            )
         self.alpha = alpha
         self.window_s = window_s
         self.max_batch = max_batch
@@ -108,7 +129,8 @@ class OnlineEngine:
         self.db = db or TaskDB()
         self.models = {e.name: LinearPowerModel() for e in self.endpoints}
         self.monitoring = monitoring
-        self.state = SchedulerState(self.endpoints, self.transfer)
+        state_cls = SoAState if self.engine == "soa" else SchedulerState
+        self.state = state_cls(self.endpoints, self.transfer)
         self.pending: list[TaskSpec] = []
         self.windows: list[WindowResult] = []
         self.clock = 0.0

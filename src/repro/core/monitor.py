@@ -50,6 +50,14 @@ class CallbackMonitor(EnergyMonitor):
         p = float(self.fn(t))
         return max(p * (1.0 + self._rng.normal(0.0, self.noise)), 0.0)
 
+    def read_noisy(self, base: np.ndarray) -> np.ndarray:
+        """Apply this monitor's read noise to a whole vector of base-power
+        samples at once.  One batched draw consumes the generator exactly
+        like per-sample :meth:`read_watts` calls, so seeded streams are
+        reproducible either way."""
+        p = base * (1.0 + self._rng.normal(0.0, self.noise, size=len(base)))
+        return np.maximum(p, 0.0)
+
 
 class ConstantMonitor(EnergyMonitor):
     """Idle/baseboard draw that performance counters never explain."""

@@ -32,6 +32,14 @@ from repro.core.predictor import TaskProfileStore
 from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
 from repro.core.transfer import TransferModel
 
+ENGINES = ("delta", "clone", "soa")
+
+
+def _check_engine(engine: str) -> str:
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; available: {ENGINES}")
+    return engine
+
 
 @dataclasses.dataclass
 class PolicyContext:
@@ -95,14 +103,19 @@ def get_policy(name: str, **kwargs) -> PlacementPolicy:
 
 @register_policy
 class MHRAPolicy(PlacementPolicy):
-    """Multi-Heuristic Resource Allocation (paper §III-F)."""
+    """Multi-Heuristic Resource Allocation (paper §III-F).
+
+    ``engine`` selects the greedy backend: ``delta`` (incremental,
+    default), ``soa`` (structure-of-arrays, fastest at large fleets /
+    task counts), or ``clone`` (the seed reference).
+    """
 
     name = "mhra"
 
     def __init__(self, heuristics: Sequence[str] = sched.HEURISTICS,
                  engine: str = "delta"):
         self.heuristics = tuple(heuristics)
-        self.engine = engine
+        self.engine = _check_engine(engine)
 
     def place(self, tasks, ctx, state=None):
         return sched.mhra(
@@ -121,7 +134,7 @@ class ClusterMHRAPolicy(PlacementPolicy):
                  max_cluster_size: int = 40, engine: str = "delta"):
         self.heuristics = tuple(heuristics)
         self.max_cluster_size = max_cluster_size
-        self.engine = engine
+        self.engine = _check_engine(engine)
 
     def place(self, tasks, ctx, state=None):
         return sched.cluster_mhra(

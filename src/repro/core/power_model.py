@@ -13,7 +13,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.counters import CounterSample, PowerSample, TaskRecord
+from repro.core.counters import (  # noqa: F401 — integrate_windows re-exported
+    CounterSample,
+    PowerSample,
+    TaskRecord,
+    integrate_windows,
+)
 
 
 class LinearPowerModel:
@@ -144,3 +149,24 @@ def _integrate(series, col: int, t0: float, t1: float) -> float:
     grid = np.unique(np.concatenate([ts[(ts > t0) & (ts < t1)], [t0, t1]]))
     vals = np.interp(grid, ts, vs)
     return float(np.trapezoid(vals, grid))
+
+
+def attribute_node_power(
+    model: LinearPowerModel, watts: np.ndarray, rates: np.ndarray
+) -> np.ndarray:
+    """Vectorized correction-factor attribution for a whole node trace.
+
+    ``watts`` is the (n,) measured node power, ``rates`` the (n, P, k)
+    per-process counter-rate matrix (zero rows where a process is idle).
+    Returns the (n, P) attributed per-process watts — the batched
+    equivalent of calling :meth:`LinearPowerModel.attribute` per sample.
+    """
+    w = model.weights
+    est = rates @ w                       # (n, P) per-process estimates
+    np.clip(est, 0.0, None, out=est)
+    est_tot = est.sum(axis=1)
+    p_dyn = np.clip(watts - model.idle_b, 0.0, None)
+    factor = np.divide(
+        p_dyn, est_tot, out=np.zeros_like(p_dyn), where=est_tot > 1e-9
+    )
+    return est * factor[:, None]

@@ -7,22 +7,32 @@ Objective:  O = alpha * E_tot/SF1 + (1-alpha) * C_max/SF2
           whole workflow span (paper: power drawn whether or not tasks run).
   SF1/SF2 = pessimistic all-on-one-machine estimates.
 
-Two greedy engines share the same arithmetic:
+Three greedy engines share the same arithmetic:
 
   * ``engine="delta"`` (default) scores a candidate endpoint by previewing
     only the *change* it makes to the live state — peek/copy that one
     endpoint's slot heap, delta the idle-span and dynamic-energy terms —
     then commits only the winner.  O(endpoints * log cores) per decision.
+  * ``engine="soa"`` lays the state out as structure-of-arrays
+    (:class:`SoAState`: one flat float64 array of core free-times with
+    per-endpoint offsets plus vector registers) and scores a unit against
+    *every* endpoint in a handful of vectorized passes, with run
+    memoization making most decisions O(1) scalar work.  Fastest at large
+    fleets / task counts; see :func:`_greedy_soa`.
   * ``engine="clone"`` is the original clone-per-candidate greedy kept as
     the reference implementation for parity tests and the overhead
     benchmark.  O(endpoints^2 * cores) copies per decision.
 
-Both engines perform bitwise-identical floating-point operations, so they
-produce identical assignments and objective values; ``tests/
-test_policy_engine.py`` asserts this.  The delta engine also accepts a
-live ``SchedulerState`` so the online engine (``repro.core.engine``) can
-place arrival windows against the timeline carried over from previous
-windows.
+delta and clone perform bitwise-identical floating-point operations, so
+they produce identical assignments and objective values
+(``tests/test_policy_engine.py``).  soa regroups the candidate-score sum
+for vectorization (~1 ulp), which can only reorder *exact ties* — broken
+identically by both engines — so assignments match delta exactly and
+reported objectives are bitwise-equal in practice, asserted to
+rtol=1e-12 (``tests/test_soa_engine.py``).  The delta and soa engines
+also accept a live state so the online engine (``repro.core.engine``)
+can place arrival windows against the timeline carried over from
+previous windows.
 """
 from __future__ import annotations
 
@@ -138,25 +148,9 @@ class SchedulerState:
     def _transfer_delta(self, unit, name: str):
         """(transfer_j_after, ready_s, cache_keys_added) for placing this
         unit's inputs on endpoint ``name`` — no state mutation."""
-        transfer_j = self.transfer_j
-        t_bytes, t_files = 0.0, 0
-        new_cached: list[tuple[str, str]] = []
-        for t in unit:
-            for src, n_files, nbytes, shared in t.inputs:
-                if src == name:
-                    continue
-                key = (name, f"{src}:{n_files}:{nbytes}")
-                if shared and (key in self.cached or key in new_cached):
-                    continue
-                if shared:
-                    new_cached.append(key)
-                transfer_j += (
-                    self.transfer.hops(src, name) * nbytes * E_INC_J_PER_BYTE
-                )
-                t_bytes += nbytes
-                t_files += n_files
-        ready = self.transfer.predict_seconds(t_files, t_bytes)
-        return transfer_j, ready, new_cached
+        return _unit_transfer_delta(
+            self.transfer, self.cached, self.transfer_j, unit, name
+        )
 
     def assign(
         self,
@@ -204,8 +198,189 @@ class SchedulerState:
         return e_tot, c_max, self.transfer_j
 
 
+def _unit_transfer_delta(transfer, cached, transfer_j, unit, name):
+    """(transfer_j_after, ready_s, cache_keys_added) for placing ``unit``'s
+    inputs on endpoint ``name`` — pure function of the cache contents,
+    shared by the heap- and SoA-backed states."""
+    t_bytes, t_files = 0.0, 0
+    new_cached: list[tuple[str, str]] = []
+    for t in unit:
+        for src, n_files, nbytes, shared in t.inputs:
+            if src == name:
+                continue
+            key = (name, f"{src}:{n_files}:{nbytes}")
+            if shared and (key in cached or key in new_cached):
+                continue
+            if shared:
+                new_cached.append(key)
+            transfer_j += transfer.hops(src, name) * nbytes * E_INC_J_PER_BYTE
+            t_bytes += nbytes
+            t_files += n_files
+    ready = transfer.predict_seconds(t_files, t_bytes)
+    return transfer_j, ready, new_cached
+
+
 # kept as an alias: pre-refactor code and tests referred to _State
 _State = SchedulerState
+
+
+class SoAState:
+    """Structure-of-arrays scheduling state: the third engine backend.
+
+    Same semantics as :class:`SchedulerState`, different layout: core
+    free-times live in ONE flat float64 array segmented by per-endpoint
+    ``offsets``, and the per-endpoint registers (``first``/``last``/
+    ``dyn``) are vectors, so the SoA greedy (:func:`_greedy_soa`) scores a
+    unit against *every* endpoint in a handful of vectorized passes
+    instead of a Python loop over candidates.
+
+    ``first_start[i] == np.inf`` encodes the heap state's ``None``
+    ("endpoint never used").  A heap pop-min + push(end) becomes
+    "overwrite the argmin slot with end" — identical multiset evolution,
+    so ``assign``/``metrics`` produce bitwise-identical floats to the
+    heap-backed state given the same placement sequence.
+    """
+
+    def __init__(self, endpoints: Sequence[EndpointSpec], transfer: TransferModel):
+        self.eps = list(endpoints)
+        self.transfer = transfer
+        self.names = [e.name for e in self.eps]
+        self.ep_index = {n: i for i, n in enumerate(self.names)}
+        cores = np.array([e.cores for e in self.eps], dtype=np.intp)
+        self.offsets = np.zeros(len(self.eps) + 1, dtype=np.intp)
+        np.cumsum(cores, out=self.offsets[1:])
+        self.free = np.zeros(int(self.offsets[-1]))      # flat core free-times
+        self.first = np.full(len(self.eps), np.inf)      # inf == never used
+        self.last = np.zeros(len(self.eps))
+        self.dyn = np.zeros(len(self.eps))
+        self.transfer_j = 0.0
+        self.cached: set[tuple[str, str]] = set()
+        self.timeline: dict[str, tuple[float, float]] = {}
+
+    # -- layout helpers ----------------------------------------------------
+    def slot_view(self, ei: int) -> np.ndarray:
+        """Writable view of endpoint ``ei``'s core free-times."""
+        return self.free[self.offsets[ei]:self.offsets[ei + 1]]
+
+    def slot_mins(self) -> np.ndarray:
+        """Per-endpoint min free-time in one reduceat pass."""
+        return np.minimum.reduceat(self.free, self.offsets[:-1])
+
+    # -- SchedulerState-compatible surface ---------------------------------
+    def clone(self, keep_timeline: bool = False) -> "SoAState":
+        s = SoAState.__new__(SoAState)
+        s.eps, s.transfer = self.eps, self.transfer
+        s.names, s.ep_index, s.offsets = self.names, self.ep_index, self.offsets
+        s.free = self.free.copy()
+        s.first = self.first.copy()
+        s.last = self.last.copy()
+        s.dyn = self.dyn.copy()
+        s.transfer_j = self.transfer_j
+        s.cached = set(self.cached)
+        s.timeline = dict(self.timeline) if keep_timeline else {}
+        return s
+
+    def replace_with(self, other: "SoAState") -> None:
+        self.free = other.free
+        self.first = other.first
+        self.last = other.last
+        self.dyn = other.dyn
+        self.transfer_j = other.transfer_j
+        self.cached = other.cached
+        self.timeline = other.timeline
+
+    def advance_to(self, now: float) -> None:
+        """Vectorized twin of SchedulerState.advance_to: raise every core's
+        free time to at least ``now``."""
+        np.maximum(self.free, now, out=self.free)
+
+    def _transfer_delta(self, unit, name: str):
+        return _unit_transfer_delta(
+            self.transfer, self.cached, self.transfer_j, unit, name
+        )
+
+    def assign(
+        self,
+        unit: Sequence[TaskSpec],
+        ep: EndpointSpec,
+        preds: dict[str, Prediction],
+        record_timeline: bool = False,
+    ) -> None:
+        ei = self.ep_index[ep.name]
+        transfer_j, ready, new_cached = self._transfer_delta(unit, ep.name)
+        self.transfer_j = transfer_j
+        self.cached.update(new_cached)
+        if ep.has_batch_scheduler:
+            ready += ep.queue_delay_s
+        slots = self.slot_view(ei)
+        first = self.first[ei]
+        last = self.last[ei]
+        dyn = self.dyn[ei]
+        for t in unit:
+            p = preds[t.id]
+            k = int(np.argmin(slots))
+            start = slots[k]
+            if start < ready:
+                start = ready
+            end = start + p.runtime_s
+            slots[k] = end
+            if start < first:
+                first = start
+            if end > last:
+                last = end
+            dyn += p.energy_j
+            if record_timeline:
+                self.timeline[t.id] = (start, end)
+        self.first[ei] = first
+        self.last[ei] = last
+        self.dyn[ei] = dyn
+
+    def metrics(self) -> tuple[float, float, float]:
+        """(E_tot, C_max, transfer_j) — same accumulation order as
+        SchedulerState.metrics, reading the vector registers."""
+        c_max = max(float(self.last.max(initial=0.0)), 0.0)
+        e_tot = self.transfer_j
+        for ei, ep in enumerate(self.eps):
+            if self.first[ei] == np.inf:
+                if not ep.has_batch_scheduler:
+                    e_tot += ep.idle_power_w * c_max
+                continue
+            if ep.has_batch_scheduler:
+                span = float(self.last[ei]) - float(self.first[ei])
+                e_tot += ep.idle_power_w * span + ep.startup_energy_j
+            else:
+                e_tot += ep.idle_power_w * c_max
+            e_tot += float(self.dyn[ei])
+        return e_tot, c_max, self.transfer_j
+
+    # -- interop with the heap-backed state --------------------------------
+    @classmethod
+    def from_heap(cls, state: SchedulerState) -> "SoAState":
+        s = cls(state.eps, state.transfer)
+        for ei, name in enumerate(s.names):
+            s.slot_view(ei)[:] = state.slots[name]
+            f = state.first_start[name]
+            s.first[ei] = np.inf if f is None else f
+            s.last[ei] = state.last_end[name]
+            s.dyn[ei] = state.dyn_energy[name]
+        s.transfer_j = state.transfer_j
+        s.cached = set(state.cached)
+        s.timeline = dict(state.timeline)
+        return s
+
+    def write_back(self, state: SchedulerState) -> None:
+        """Adopt this SoA state's contents into a heap-backed state."""
+        for ei, name in enumerate(self.names):
+            h = self.slot_view(ei).tolist()
+            heapq.heapify(h)
+            state.slots[name] = h
+            f = float(self.first[ei])
+            state.first_start[name] = None if f == np.inf else f
+            state.last_end[name] = float(self.last[ei])
+            state.dyn_energy[name] = float(self.dyn[ei])
+        state.transfer_j = self.transfer_j
+        state.cached = self.cached
+        state.timeline = self.timeline
 
 
 class PredictionTable:
@@ -251,6 +426,18 @@ class PredictionTable:
         # engine's per-task np.mean over an endpoint list
         self.rt_mean = self.rt.mean(axis=0)
         self.en_mean = self.en.mean(axis=0)
+        self._rtT: np.ndarray | None = None
+        self._enT: np.ndarray | None = None
+
+    def transposed(self) -> tuple[np.ndarray, np.ndarray]:
+        """(n_tasks, n_ep) C-contiguous views for the SoA greedy: row
+        ``ti`` is task ti's prediction across all endpoints (one slice, no
+        per-candidate indexing).  Built on first use so the delta/clone
+        paths don't pay for it."""
+        if self._rtT is None:
+            self._rtT = np.ascontiguousarray(self.rt.T)
+            self._enT = np.ascontiguousarray(self.en.T)
+        return self._rtT, self._enT
 
     def per_ep(self) -> dict[str, dict[str, Prediction]]:
         """Nested-dict view matching ``_predict_all`` for legacy callers."""
@@ -281,8 +468,9 @@ def _sort_units(units, key: str, preds):
     return [units[i] for i in order]
 
 
-def _sort_units_fast(units, key: str, table: PredictionTable, unit_indices):
-    """Same ordering as _sort_units from the vectorized mean arrays.
+def _sort_order(key: str, table: PredictionTable, unit_indices) -> np.ndarray:
+    """Permutation ordering units by the heuristic ``key`` — the ordering
+    :func:`_sort_units` produces, computed from the vectorized mean arrays.
 
     For singleton units the stat is the mean itself (mean of one element
     times one is the identity bitwise), so no per-unit np.mean calls.
@@ -293,23 +481,26 @@ def _sort_units_fast(units, key: str, table: PredictionTable, unit_indices):
         rt_stat = rt_mean[flat]
         en_stat = en_mean[flat]
     else:
-        rt_stat = np.empty(len(units))
-        en_stat = np.empty(len(units))
+        rt_stat = np.empty(len(unit_indices))
+        en_stat = np.empty(len(unit_indices))
         for k, ii in enumerate(unit_indices):
             m = len(ii)
             rt_stat[k] = float(np.mean(rt_mean[ii])) * m
             en_stat[k] = float(np.mean(en_mean[ii])) * m
     if key == "shortest_runtime_first":
-        order = np.argsort(rt_stat)
-    elif key == "longest_runtime_first":
-        order = np.argsort(-rt_stat)
-    elif key == "highest_energy_first":
-        order = np.argsort(-en_stat)
-    elif key == "lowest_energy_first":
-        order = np.argsort(en_stat)
-    else:
-        raise ValueError(key)
-    return [units[i] for i in order]
+        return np.argsort(rt_stat)
+    if key == "longest_runtime_first":
+        return np.argsort(-rt_stat)
+    if key == "highest_energy_first":
+        return np.argsort(-en_stat)
+    if key == "lowest_energy_first":
+        return np.argsort(en_stat)
+    raise ValueError(key)
+
+
+def _sort_units_fast(units, key: str, table: PredictionTable, unit_indices):
+    """Same ordering as _sort_units from the vectorized mean arrays."""
+    return [units[i] for i in _sort_order(key, table, unit_indices)]
 
 
 def _predict_all(tasks, endpoints, store: TaskProfileStore):
@@ -406,7 +597,7 @@ def mhra(
     """Multi-Heuristic Resource Allocation. With clusters given, this is
     Cluster MHRA's greedy stage (one decision per cluster).
 
-    ``state`` (delta engine only) places against a live timeline carried
+    ``state`` (delta/soa engines) places against a live timeline carried
     across arrival windows; the winning heuristic's result is committed
     into it.
     """
@@ -417,7 +608,7 @@ def mhra(
             raise ValueError("engine='clone' does not support live state")
         return _mhra_clone(tasks, endpoints, store, transfer, alpha,
                            heuristics, clusters)
-    if engine != "delta":
+    if engine not in ("delta", "soa"):
         raise ValueError(f"unknown engine {engine!r}")
 
     tasks = list(tasks)
@@ -429,6 +620,15 @@ def mhra(
     sf1, sf2 = _normalizers_fast(tasks, endpoints, table, transfer)
 
     unit_indices = [[table.index[t.id] for t in u] for u in units]
+    if engine == "soa":
+        return _mhra_soa(units, unit_indices, endpoints, table, transfer,
+                         alpha, heuristics, sf1, sf2, state)
+    soa_live: SoAState | None = None
+    if isinstance(state, SoAState):
+        # delta engine over a SoA-backed live state: run on a heap view,
+        # adopt the result back into the SoA arrays
+        soa_live, state = state, SchedulerState(endpoints, transfer)
+        soa_live.write_back(state)
     best: Schedule | None = None
     best_state: SchedulerState | None = None
     for h in heuristics:
@@ -439,6 +639,34 @@ def mhra(
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
     if state is not None:
+        state.replace_with(best_state)
+    if soa_live is not None:
+        soa_live.replace_with(SoAState.from_heap(state))
+    return best
+
+
+def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
+              heuristics, sf1, sf2, state):
+    """SoA-engine heuristic search: run :func:`_greedy_soa` per ordering
+    heuristic, commit the winner into ``state`` (heap- or SoA-backed)."""
+    heap_state: SchedulerState | None = None
+    if isinstance(state, SchedulerState):
+        heap_state, state = state, SoAState.from_heap(state)
+    best: Schedule | None = None
+    best_state: SoAState | None = None
+    for h in heuristics:
+        order = _sort_order(h, table, unit_indices)
+        ordered = [units[i] for i in order]
+        ordered_idx = [unit_indices[i] for i in order]
+        sched, end_state = _greedy_soa(
+            ordered, ordered_idx, endpoints, table, transfer, alpha,
+            sf1, sf2, h, state
+        )
+        if best is None or sched.objective < best.objective:
+            best, best_state = sched, end_state
+    if heap_state is not None:
+        best_state.write_back(heap_state)
+    elif state is not None:
         state.replace_with(best_state)
     return best
 
@@ -686,6 +914,313 @@ def _greedy_delta(
     return sched, state
 
 
+def _greedy_soa(
+    units, unit_indices, endpoints, table: PredictionTable, transfer,
+    alpha, sf1, sf2, heuristic, base_state: SoAState | None = None,
+) -> tuple[Schedule, SoAState]:
+    """Structure-of-arrays greedy: score a unit against *every* endpoint in
+    a fixed handful of vectorized passes instead of a Python loop over
+    candidates.
+
+    The per-candidate objective is algebraically identical to the delta
+    engine's but regrouped for vectorization::
+
+        e(i) = transfer_j(i) + (C - const_i) + IDLE_ON * c(i) + self(i)
+
+    where ``C = sum_j const_j`` collects every endpoint's standing
+    contribution (span term + dynamic energy for batch endpoints, dynamic
+    energy for always-on ones), ``IDLE_ON`` is the total always-on idle
+    draw (each always-on endpoint charges ``idle * C_max`` whichever
+    candidate wins), and ``self(i)`` is candidate i's refreshed span/dyn
+    term.  The regrouped sum can differ from the delta engine's sequential
+    accumulation by ~1 ulp, so objectives agree to ``rtol << 1e-12`` and
+    argmin decisions only diverge on exact ties — which both engines break
+    identically (first index).  The *final* objective is recomputed from
+    ``state.metrics()``, whose float sequence matches the heap state's
+    exactly, so equal assignments imply bitwise-equal reported objectives.
+
+    Slot peeks come from a per-endpoint ``mins`` register over the state's
+    flat free-time array; a commit overwrites the argmin slot (same
+    multiset evolution as heap pop+push) and refreshes only that
+    endpoint's min.
+    """
+    state = (
+        base_state.clone(keep_timeline=True)
+        if base_state is not None
+        else SoAState(endpoints, transfer)
+    )
+    n_ep = len(endpoints)
+    names = state.names
+    eps_r = range(n_ep)
+    free = state.free
+    offsets = state.offsets
+    first, last, dyn = state.first, state.last, state.dyn
+    cached = state.cached
+    timeline = state.timeline
+    transfer_j = state.transfer_j
+    mins = state.slot_mins()
+
+    # per-endpoint constants
+    idle = np.array([ep.idle_power_w for ep in endpoints])
+    bt_mask = np.array([ep.has_batch_scheduler for ep in endpoints])
+    su = np.array([ep.startup_energy_j for ep in endpoints])
+    qd_vec = np.where(bt_mask, [ep.queue_delay_s for ep in endpoints], 0.0)
+    idle_bt = np.where(bt_mask, idle, 0.0)
+    su_bt = np.where(bt_mask, su, 0.0)
+    idle_on_sum = float(idle[~bt_mask].sum())
+
+    c_cur = float(max(last.max(initial=0.0), 0.0))
+    # standing per-endpoint objective contributions (see docstring)
+    used = first < np.inf
+    span = np.where(used, last - first, 0.0)
+    const = np.where(bt_mask & used, idle * span + su, 0.0) + dyn
+    static = const.sum() - const
+
+    rtT, enT = table.transposed()
+    a1 = alpha / sf1
+    b1 = (1.0 - alpha) / sf2
+    assignments: dict[str, str] = {}
+    # preallocated per-unit buffers
+    start = np.empty(n_ep)
+    end = np.empty(n_ep)
+    nf = np.empty(n_ep)
+    nl = np.empty(n_ep)
+    nd = np.empty(n_ep)
+    c = np.empty(n_ep)
+    e = np.empty(n_ep)
+    e_base = np.empty(n_ep)   # per-candidate score minus its C_max terms
+    obj = np.empty(n_ep)
+    tmp = np.empty(n_ep)
+    # per-input-signature transfer vectors (single-input singleton units):
+    # staged[j] => placing on j transfers nothing (local data, or a shared
+    # key already cached); eff_* are the staged-aware add/ready vectors
+    sig_cache: dict[tuple, dict] = {}
+
+    def _sig(inp):
+        rec = sig_cache.get(inp)
+        if rec is None:
+            src, n_files, nbytes, shared = inp
+            ks = f"{src}:{n_files}:{nbytes}"
+            keys = [None if n == src else (n, ks) for n in names]
+            add = np.array([
+                0.0 if k is None else transfer.hops(src, n) * nbytes * E_INC_J_PER_BYTE
+                for n, k in zip(names, keys)
+            ])
+            ready = transfer.predict_seconds(n_files, nbytes)
+            staged = np.array([
+                k is None or (shared and k in cached) for k in keys
+            ])
+            rec = sig_cache[inp] = {
+                "keys": keys, "add": add, "ready": ready, "shared": shared,
+                "staged": staged,
+                "eff_add": np.where(staged, 0.0, add),
+                "eff_ready": np.where(staged, 0.0, ready) + qd_vec,
+            }
+        return rec
+
+    # --- run memoization over the sorted unit stream ----------------------
+    # Sorting makes identical (fn, inputs) singletons consecutive, and a
+    # commit touches exactly one endpoint's registers.  Within such a run,
+    # every other candidate's score is stale only by a *uniform* shift
+    # (the committed endpoint's standing-term delta + any transfer energy
+    # are charged to every candidate alike), so the argmin is unchanged:
+    # only the committed endpoint's entry needs a scalar refresh, computed
+    # against the run's basis (C_sum_b, tj_b) so comparisons stay exact.
+    # A commit that raises C_max shifts candidates *non*-uniformly (each
+    # candidate's own makespan term saturates differently), so that — or
+    # any general-path unit — forces a fresh vectorized pass.
+    run_key = None
+    need_full = True
+    c_sum_b = tj_b = 0.0
+    run_rec: dict | None = None
+    run_rt = run_en = None
+    for unit, uidx in zip(units, unit_indices):
+        if len(unit) == 1 and len(unit[0].inputs) <= 1:
+            # ---- fast path: singleton unit, zero or one input ------------
+            t0 = unit[0]
+            ti = uidx[0]
+            key = (t0.fn, t0.inputs)
+            if need_full or key != run_key:
+                run_key = key
+                run_rec = rec = _sig(t0.inputs[0]) if t0.inputs else None
+                run_rt = rtT[ti]
+                run_en = enT[ti]
+                c_sum_b = float(const.sum())
+                np.subtract(c_sum_b, const, out=static)
+                tj_b = transfer_j
+                if rec is None:
+                    np.maximum(mins, qd_vec, out=start)
+                else:
+                    np.maximum(mins, rec["eff_ready"], out=start)
+                np.add(start, run_rt, out=end)
+                np.minimum(first, start, out=nf)
+                np.maximum(last, end, out=nl)
+                np.add(dyn, run_en, out=nd)
+                np.maximum(nl, c_cur, out=c)
+                # candidate span/dyn term: idle*(nl-nf)+su batch, 0 else
+                np.subtract(nl, nf, out=tmp)
+                np.multiply(tmp, idle_bt, out=tmp)
+                np.add(tmp, su_bt, out=tmp)
+                # e_base: everything except the C_max-dependent terms, so
+                # a later C_max advance only refreshes c and recombines
+                np.add(static, nd, out=e_base)
+                np.add(e_base, tmp, out=e_base)
+                if rec is not None:
+                    np.add(e_base, rec["eff_add"], out=e_base)
+                np.add(e_base, tj_b, out=e_base)
+                np.multiply(c, idle_on_sum, out=e)
+                np.add(e, e_base, out=e)
+                np.multiply(e, a1, out=obj)
+                np.multiply(c, b1, out=tmp)
+                np.add(obj, tmp, out=obj)
+                need_full = False
+            else:
+                rec = run_rec
+            ei = int(np.argmin(obj))
+            # ---- commit: same scalar float ops as the vectorized pass ----
+            if rec is None:
+                ready_e = float(qd_vec[ei])
+            else:
+                ready_e = float(rec["eff_ready"][ei])
+                transfer_j += float(rec["eff_add"][ei])
+                if rec["shared"] and not rec["staged"][ei]:
+                    cached.add(rec["keys"][ei])
+                    rec["staged"][ei] = True
+                    rec["eff_add"][ei] = 0.0
+                    rec["eff_ready"][ei] = float(qd_vec[ei])
+            m_e = float(mins[ei])
+            start_v = m_e if m_e >= ready_e else ready_e
+            end_v = start_v + float(run_rt[ei])
+            f_e = float(first[ei])
+            nf_v = start_v if start_v < f_e else f_e
+            l_e = float(last[ei])
+            nl_v = end_v if end_v > l_e else l_e
+            nd_v = float(dyn[ei]) + float(run_en[ei])
+            sl = free[offsets[ei]:offsets[ei + 1]]
+            sl[int(np.argmin(sl))] = end_v
+            mins[ei] = sl.min()
+            first[ei] = nf_v
+            last[ei] = nl_v
+            dyn[ei] = nd_v
+            const[ei] = (
+                (nl_v - nf_v) * float(idle_bt[ei]) + float(su_bt[ei]) + nd_v
+                if bt_mask[ei] else nd_v
+            )
+            # refresh this endpoint's next-task row on the run's basis
+            # (same scalar float op order as the vectorized pass)
+            ready2 = float(rec["eff_ready"][ei]) if rec is not None else ready_e
+            m2 = float(mins[ei])
+            s2 = m2 if m2 >= ready2 else ready2
+            e2 = s2 + float(run_rt[ei])
+            nf2 = s2 if s2 < nf_v else nf_v
+            nl2 = e2 if e2 > nl_v else nl_v
+            nl[ei] = nl2
+            e_b = (c_sum_b - float(const[ei])) + (nd_v + float(run_en[ei]))
+            e_b = e_b + ((nl2 - nf2) * float(idle_bt[ei]) + float(su_bt[ei]))
+            if rec is not None:
+                e_b = e_b + float(rec["eff_add"][ei])
+            e_b = e_b + tj_b
+            e_base[ei] = e_b
+            if end_v > c_cur:
+                # C_max advanced: refresh every candidate's makespan terms
+                # from the cached e_base (the rest of the score is intact)
+                c_cur = end_v
+                np.maximum(nl, c_cur, out=c)
+                np.multiply(c, idle_on_sum, out=e)
+                np.add(e, e_base, out=e)
+                np.multiply(e, a1, out=obj)
+                np.multiply(c, b1, out=tmp)
+                np.add(obj, tmp, out=obj)
+            else:
+                c2 = nl2 if nl2 > c_cur else c_cur
+                e_s = idle_on_sum * c2 + e_b
+                obj[ei] = a1 * e_s + b1 * c2
+            timeline[t0.id] = (start_v, end_v)
+            assignments[t0.id] = names[ei]
+            continue
+        # ---- general path: clustered / multi-input units -----------------
+        run_key = None
+        need_full = True
+        np.subtract(const.sum(), const, out=static)
+        heappop, heappush = heapq.heappop, heapq.heappush
+        tjv = np.empty(n_ep)
+        cand = []
+        for ei in eps_r:
+            tj_e, ready_e, new_keys = _unit_transfer_delta(
+                transfer, cached, transfer_j, unit, names[ei]
+            )
+            ready_e += qd_vec[ei]
+            heap = free[offsets[ei]:offsets[ei + 1]].tolist()
+            heapq.heapify(heap)
+            f_e = first[ei]
+            l_e = last[ei]
+            d_e = dyn[ei]
+            entries = []
+            for t, tix in zip(unit, uidx):
+                s_v = heappop(heap)
+                if s_v < ready_e:
+                    s_v = ready_e
+                e_v = s_v + rtT[tix, ei]
+                heappush(heap, e_v)
+                if s_v < f_e:
+                    f_e = s_v
+                if e_v > l_e:
+                    l_e = e_v
+                d_e = d_e + enT[tix, ei]
+                entries.append((t.id, s_v, e_v))
+            tjv[ei] = tj_e
+            nf[ei] = f_e
+            nl[ei] = l_e
+            nd[ei] = d_e
+            cand.append((heap, entries, new_keys))
+        np.maximum(nl, c_cur, out=c)
+        np.subtract(nl, nf, out=tmp)
+        np.multiply(tmp, idle_bt, out=tmp)
+        np.add(tmp, su_bt, out=tmp)
+        np.multiply(c, idle_on_sum, out=e)
+        np.add(e, static, out=e)
+        np.add(e, nd, out=e)
+        np.add(e, tmp, out=e)
+        np.add(e, tjv, out=e)
+        np.multiply(e, a1, out=obj)
+        np.multiply(c, b1, out=tmp)
+        np.add(obj, tmp, out=obj)
+        ei = int(np.argmin(obj))
+        heap, entries, new_keys = cand[ei]
+        transfer_j = float(tjv[ei])
+        cached.update(new_keys)
+        if new_keys:
+            for rec in sig_cache.values():  # invalidate staged views
+                if rec["shared"]:
+                    for j, k in enumerate(rec["keys"]):
+                        if k in new_keys and not rec["staged"][j]:
+                            rec["staged"][j] = True
+                            rec["eff_add"][j] = 0.0
+                            rec["eff_ready"][j] = qd_vec[j]
+        free[offsets[ei]:offsets[ei + 1]] = heap
+        mins[ei] = heap[0]
+        first[ei] = nf[ei]
+        last[ei] = nl[ei]
+        dyn[ei] = nd[ei]
+        if nl[ei] > c_cur:
+            c_cur = float(nl[ei])
+        const[ei] = (
+            idle_bt[ei] * (nl[ei] - nf[ei]) + su_bt[ei] + nd[ei]
+            if bt_mask[ei] else nd[ei]
+        )
+        name = names[ei]
+        for tid, s_v, e_v in entries:
+            timeline[tid] = (s_v, e_v)
+            assignments[tid] = name
+
+    state.transfer_j = transfer_j
+    e_tot, c_max, tj = state.metrics()
+    obj_f = alpha * e_tot / sf1 + (1 - alpha) * c_max / sf2
+    sched = Schedule(assignments, obj_f, e_tot, c_max, tj, heuristic,
+                     dict(state.timeline))
+    return sched, state
+
+
 # ---------------------------------------------------------------------------
 # Reference clone-based engine (the seed implementation, kept verbatim for
 # parity tests and benchmarks/scheduler_overhead.py)
@@ -799,7 +1334,7 @@ def cluster_mhra(
     table = PredictionTable(tasks, endpoints, store)
     clusters = compute_clusters(tasks, endpoints, table, max_cluster_size)
     return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
-                clusters, engine="delta", state=state)
+                clusters, engine=engine, state=state)
 
 
 # ---------------------------------------------------------------------------

@@ -71,11 +71,36 @@ SAMPLE_PERIOD_S = 1.0
 
 @dataclasses.dataclass
 class NodeTrace:
+    """One node's monitor streams for a window, in matrix form.
+
+    ``rates[i, j]`` is pid ``pids[j]``'s counter-rate vector at ``ts[i]``
+    (zero rows while the process is idle).  The attribution pipeline
+    consumes the matrices directly; the legacy per-tick sample-object
+    views are derived on demand for tooling/tests that still want them.
+    """
     endpoint: str
-    power_samples: list[PowerSample]
-    counter_samples: list[CounterSample]
     alloc_span: tuple[float, float]  # (alloc_t, release_t)
     true_node_energy_j: float
+    ts: np.ndarray                   # (n,) sample times
+    watts: np.ndarray                # (n,) measured node power
+    pids: list[int]                  # column order of `rates`
+    rates: np.ndarray                # (n, P, k) per-process counter rates
+
+    @property
+    def power_samples(self) -> list[PowerSample]:
+        return [PowerSample(t=float(t), watts=float(w))
+                for t, w in zip(self.ts, self.watts)]
+
+    @property
+    def counter_samples(self) -> list[CounterSample]:
+        active = self.rates.any(axis=2)
+        return [
+            CounterSample(t=float(t), procs={
+                pid: self.rates[i, j]
+                for j, pid in enumerate(self.pids) if active[i, j]
+            })
+            for i, t in enumerate(self.ts)
+        ]
 
 
 @dataclasses.dataclass
@@ -114,6 +139,36 @@ class TestbedSim:
         coef = self.coefs.get(machine, np.ones(4) * 0.25)
         rates = sig * (w / float(coef @ sig))
         return rt, w, rates
+
+    def _sample_trace(self, ep, intervals, t_lo, release_t, seed):
+        """(ts, watts, pids, rates): 1 Hz monitor matrices over
+        ``[t_lo, release_t]`` — the batched equivalent of the legacy
+        per-tick sampling loops.  The monitor-noise and counter-jitter
+        draws consume the generators in exactly the per-tick order, so
+        seeded runs produce the same streams the scalar loops did.
+        """
+        tgrid = np.arange(t_lo, release_t + SAMPLE_PERIOD_S, SAMPLE_PERIOD_S)
+        n = len(tgrid)
+        mon = CallbackMonitor(lambda t: 0.0, seed=seed)
+        if not intervals:
+            watts = mon.read_noisy(np.full(n, float(ep.idle_power_w)))
+            return tgrid, watts, [], np.zeros((n, 0, 0))
+        starts = np.array([iv[0] for iv in intervals])
+        ends = np.array([iv[1] for iv in intervals])
+        ws = np.array([iv[2] for iv in intervals])
+        pid_arr = np.array([iv[3] for iv in intervals])
+        rates_iv = np.array([iv[4] for iv in intervals], dtype=float)
+        active = (starts <= tgrid[:, None]) & (tgrid[:, None] < ends)
+        watts = mon.read_noisy(ep.idle_power_w + active @ ws)
+        pids_arr = np.unique(pid_arr)
+        cols_of_iv = np.searchsorted(pids_arr, pid_arr)
+        k = rates_iv.shape[1]
+        rates = np.zeros((n, len(pids_arr), k))
+        tidx, iidx = np.nonzero(active)
+        if len(tidx):
+            jitter = self.rng.normal(1.0, 0.02, size=(len(tidx), k))
+            rates[tidx, cols_of_iv[iidx]] = rates_iv[iidx] * jitter
+        return tgrid, watts, [int(p) for p in pids_arr], rates
 
     def execute(self, schedule: Schedule, tasks: list[TaskSpec]) -> SimResult:
         """Run the schedule: per-endpoint FIFO worker pools, queue delays,
@@ -157,22 +212,11 @@ class TestbedSim:
             release_t = max(end for _, end, *_ in intervals) + 2.0
             makespan = max(makespan, release_t)
 
-            def node_power(tt, _iv=intervals, _ep=ep):
-                return _ep.idle_power_w + sum(
-                    w for s, e, w, *_ in _iv if s <= tt < e
-                )
-
-            mon = CallbackMonitor(node_power, seed=abs(hash(ep_name)) % 2**31)
-            ps, cs = [], []
-            tgrid = np.arange(0.0, release_t + SAMPLE_PERIOD_S, SAMPLE_PERIOD_S)
-            for tt in tgrid:
-                ps.append(PowerSample(t=float(tt), watts=mon.read_watts(float(tt))))
-                procs = {}
-                for s, e, w, pid, rates, _ in intervals:
-                    if s <= tt < e:
-                        jitter = self.rng.normal(1.0, 0.02, size=rates.shape)
-                        procs[pid] = rates * jitter
-                cs.append(CounterSample(t=float(tt), procs=procs))
+            sample_ivs = [(s, e, w, pid, rates)
+                          for s, e, w, pid, rates, _ in intervals]
+            ts, watts, pids, rates_m = self._sample_trace(
+                ep, sample_ivs, 0.0, release_t, abs(hash(ep_name)) % 2**31
+            )
             dyn = sum((e - s) * w for s, e, w, *_ in intervals)
             true_dyn[ep_name] = dyn
             node_true = ep.idle_power_w * (release_t - alloc_t) + dyn
@@ -180,8 +224,9 @@ class TestbedSim:
                 node_true = dyn  # idle accounted over global span below
             total_true += node_true
             traces[ep_name] = NodeTrace(
-                endpoint=ep_name, power_samples=ps, counter_samples=cs,
-                alloc_span=(alloc_t, release_t), true_node_energy_j=node_true,
+                endpoint=ep_name, alloc_span=(alloc_t, release_t),
+                true_node_energy_j=node_true,
+                ts=ts, watts=watts, pids=pids, rates=rates_m,
             )
 
         # always-on endpoints idle through the whole workflow
@@ -283,26 +328,12 @@ class TestbedSim:
             release_t = max(end for _, end, *_ in new_intervals) + 2.0
             makespan = max(makespan, release_t)
 
-            def node_power(tt, _iv=intervals, _ep=ep):
-                return _ep.idle_power_w + sum(
-                    wv for s, e, wv, *_ in _iv if s <= tt < e
-                )
-
             # crc32, not hash(): str hashing is randomized per process
             # (PYTHONHASHSEED) and would make online runs irreproducible
-            mon = CallbackMonitor(
-                node_power, seed=zlib.crc32(ep_name.encode()) % 2**31
+            ts, watts, pids, rates_m = self._sample_trace(
+                ep, intervals, now, release_t,
+                zlib.crc32(ep_name.encode()) % 2**31,
             )
-            ps, cs = [], []
-            tgrid = np.arange(now, release_t + SAMPLE_PERIOD_S, SAMPLE_PERIOD_S)
-            for tt in tgrid:
-                ps.append(PowerSample(t=float(tt), watts=mon.read_watts(float(tt))))
-                procs = {}
-                for s, e, _w, pid, rates in intervals:
-                    if s <= tt < e:
-                        jitter = self.rng.normal(1.0, 0.02, size=rates.shape)
-                        procs[pid] = rates * jitter
-                cs.append(CounterSample(t=float(tt), procs=procs))
             dyn = sum((e - s) * wv for s, e, wv, *_ in new_intervals)
             true_dyn[ep_name] = dyn
             node_true = dyn + (
@@ -310,8 +341,9 @@ class TestbedSim:
             )
             total_true += node_true
             traces[ep_name] = NodeTrace(
-                endpoint=ep_name, power_samples=ps, counter_samples=cs,
-                alloc_span=(now, release_t), true_node_energy_j=node_true,
+                endpoint=ep_name, alloc_span=(now, release_t),
+                true_node_energy_j=node_true,
+                ts=ts, watts=watts, pids=pids, rates=rates_m,
             )
 
         st["clock"] = makespan

@@ -1,0 +1,88 @@
+"""Direct unit tests for core/clustering.py (agglomerative_cluster):
+determinism, singleton/empty edges, identical-profile bucketing, and cap
+behavior — previously only covered indirectly through Cluster MHRA."""
+import numpy as np
+
+from repro.core.clustering import agglomerative_cluster
+
+
+def _random_case(seed, n=40, k=4):
+    rng = np.random.default_rng(seed)
+    feats = rng.uniform(0, 10, size=(n, k))
+    energies = rng.uniform(1, 20, size=n)
+    return feats, energies
+
+
+def test_deterministic_across_calls():
+    feats, energies = _random_case(7)
+    a = agglomerative_cluster(feats, energies, energy_cap=200.0)
+    b = agglomerative_cluster(feats, energies, energy_cap=200.0)
+    assert a == b
+    # and input arrays are not mutated
+    feats2, energies2 = _random_case(7)
+    np.testing.assert_array_equal(feats, feats2)
+    np.testing.assert_array_equal(energies, energies2)
+
+
+def test_empty_input():
+    assert agglomerative_cluster(np.empty((0, 4)), np.empty(0), 100.0) == []
+
+
+def test_singleton_input():
+    out = agglomerative_cluster(np.ones((1, 4)), np.array([5.0]), 100.0)
+    assert out == [[0]]
+
+
+def test_singleton_over_cap_still_scheduled():
+    """A single task whose energy exceeds the cap must still appear."""
+    out = agglomerative_cluster(np.ones((1, 4)), np.array([500.0]), 100.0)
+    assert out == [[0]]
+
+
+def test_all_identical_profiles_bucket_together():
+    n = 24
+    feats = np.full((n, 6), 3.14)
+    energies = np.full(n, 1.0)
+    out = agglomerative_cluster(feats, energies, energy_cap=1000.0)
+    assert len(out) == 1
+    assert sorted(out[0]) == list(range(n))
+
+
+def test_identical_profiles_split_by_energy_cap():
+    n = 30
+    feats = np.ones((n, 4))
+    energies = np.full(n, 10.0)
+    out = agglomerative_cluster(feats, energies, energy_cap=35.0)
+    flat = sorted(i for c in out for i in c)
+    assert flat == list(range(n))
+    for c in out:
+        assert energies[c].sum() <= 35.0 + 1e-9
+
+
+def test_max_cluster_size_cap():
+    n = 50
+    feats = np.ones((n, 4))
+    energies = np.full(n, 0.1)
+    out = agglomerative_cluster(feats, energies, energy_cap=1e9,
+                                max_cluster_size=12)
+    flat = sorted(i for c in out for i in c)
+    assert flat == list(range(n))
+    assert max(len(c) for c in out) <= 12
+
+
+def test_zero_variance_feature_column_is_safe():
+    """A constant feature column must not divide-by-zero the scaling."""
+    rng = np.random.default_rng(0)
+    feats = rng.uniform(0, 1, size=(10, 3))
+    feats[:, 1] = 42.0
+    out = agglomerative_cluster(feats, rng.uniform(1, 5, 10), 100.0)
+    flat = sorted(i for c in out for i in c)
+    assert flat == list(range(10))
+
+
+def test_partition_property_random():
+    for seed in range(5):
+        feats, energies = _random_case(seed)
+        out = agglomerative_cluster(feats, energies, energy_cap=100.0)
+        flat = sorted(i for c in out for i in c)
+        assert flat == list(range(len(feats)))

@@ -1,0 +1,159 @@
+"""Counter-window merging: vectorized scalar/batch APIs, width inference,
+and the batched window integrator backing the attribution pipeline."""
+import numpy as np
+import pytest
+
+from repro.core.counters import (
+    CounterSample,
+    counter_width,
+    merge_counter_windows,
+    merge_counter_windows_batch,
+)
+from repro.core.power_model import _integrate, integrate_windows
+
+
+def _reference_merge(samples, pid, t0, t1):
+    """The pre-vectorization per-segment Python loop, kept as the oracle."""
+    pts = [(s.t, s.procs.get(pid)) for s in samples
+           if s.procs.get(pid) is not None]
+    pts = [(t, v) for t, v in pts if t0 - 2.0 <= t <= t1 + 2.0]
+    if not pts:
+        return None
+    if len(pts) == 1:
+        return pts[0][1] * (t1 - t0)
+    total = np.zeros_like(pts[0][1], dtype=float)
+    for (ta, va), (tb, vb) in zip(pts, pts[1:]):
+        lo, hi = max(ta, t0), min(tb, t1)
+        if hi <= lo:
+            continue
+        fa = (lo - ta) / (tb - ta)
+        fb = (hi - ta) / (tb - ta)
+        total += 0.5 * ((va + (vb - va) * fa) + (va + (vb - va) * fb)) * (hi - lo)
+    return total
+
+
+def _stream(seed=0, n=40, k=4, pids=(1, 2)):
+    rng = np.random.default_rng(seed)
+    samples = []
+    for i in range(n):
+        procs = {}
+        for pid in pids:
+            if rng.uniform() < 0.8:
+                procs[pid] = rng.uniform(0, 10, k)
+        samples.append(CounterSample(t=float(i), procs=procs))
+    return samples
+
+
+def test_counter_width_inferred():
+    assert counter_width(_stream(k=6)) == 6
+    assert counter_width([CounterSample(t=0.0, procs={})]) == 0
+
+
+def test_empty_window_infers_width_not_hardcoded_4():
+    """Regression: the empty case used to return np.zeros(4) regardless of
+    the stream's counter-vector width."""
+    samples = _stream(k=6, pids=(1,))
+    out = merge_counter_windows(samples, pid=99, t0=0.0, t1=5.0)
+    assert out.shape == (6,)
+    assert np.all(out == 0.0)
+
+
+def test_constant_rates_integrate_to_rate_times_duration():
+    k = 4
+    v = np.array([2.0, 4.0, 6.0, 8.0])
+    samples = [CounterSample(t=float(i), procs={1: v}) for i in range(20)]
+    out = merge_counter_windows(samples, 1, 3.0, 9.0)
+    np.testing.assert_allclose(out, v * 6.0, rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_vectorized_merge_matches_reference(seed):
+    samples = _stream(seed)
+    rng = np.random.default_rng(100 + seed)
+    for _ in range(10):
+        t0 = float(rng.uniform(0, 30))
+        t1 = t0 + float(rng.uniform(0.1, 10))
+        for pid in (1, 2):
+            ref = _reference_merge(samples, pid, t0, t1)
+            got = merge_counter_windows(samples, pid, t0, t1)
+            if ref is None:
+                assert np.all(got == 0.0)
+            else:
+                np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_batch_matches_scalar_on_dense_streams():
+    """On gap-free streams (every pid present at every sample) the batch
+    integrator and the scalar API agree to round-off."""
+    k = 3
+    rng = np.random.default_rng(5)
+    samples = [
+        CounterSample(t=float(i), procs={1: rng.uniform(0, 5, k),
+                                         2: rng.uniform(0, 5, k)})
+        for i in range(30)
+    ]
+    queries = [(1, 2.0, 7.5), (2, 0.5, 29.0), (1, 10.0, 11.0), (3, 0.0, 5.0)]
+    got = merge_counter_windows_batch(samples, queries)
+    assert got.shape == (4, k)
+    for row, (pid, t0, t1) in zip(got, queries):
+        np.testing.assert_allclose(
+            row, merge_counter_windows(samples, pid, t0, t1),
+            rtol=1e-9, atol=1e-9)
+    assert np.all(got[3] == 0.0)        # unknown pid
+
+
+def test_batch_empty_inputs():
+    assert merge_counter_windows_batch([], []).shape == (0, 0)
+    samples = _stream()
+    assert merge_counter_windows_batch(samples, []).shape == (0, 4)
+
+
+# ---------------------------------------------------------------------------
+# integrate_windows (batched _integrate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_integrate_windows_matches_integrate(seed):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, 30, 25))
+    vs = rng.uniform(0, 100, 25)
+    series = [(t, v, v) for t, v in zip(ts, vs)]
+    t0s = rng.uniform(-5, 28, 12)
+    t1s = t0s + rng.uniform(-1, 10, 12)       # includes empty windows
+    got = integrate_windows(ts, vs, t0s, t1s)
+    for g, a, b in zip(got, t0s, t1s):
+        assert g == pytest.approx(_integrate(series, 1, a, b), rel=1e-9,
+                                  abs=1e-9)
+
+
+def test_integrate_windows_matrix_columns():
+    ts = np.arange(10.0)
+    vals = np.stack([np.full(10, 2.0), np.arange(10.0)], axis=1)
+    out = integrate_windows(ts, vals, np.array([0.0]), np.array([9.0]))
+    assert out.shape == (1, 2)
+    assert out[0, 0] == pytest.approx(18.0)
+    assert out[0, 1] == pytest.approx(40.5)
+
+
+def test_integrate_windows_extrapolates_edges_like_interp():
+    ts = np.array([5.0, 6.0])
+    vs = np.array([10.0, 20.0])
+    series = [(5.0, 10.0, 0.0), (6.0, 20.0, 0.0)]
+    # window straddles both ends of the span
+    got = integrate_windows(ts, vs, np.array([0.0]), np.array([10.0]))[0]
+    assert got == pytest.approx(_integrate(series, 1, 0.0, 10.0))
+    # fully outside (left and right)
+    assert integrate_windows(ts, vs, np.array([0.0]), np.array([2.0]))[0] \
+        == pytest.approx(10.0 * 2.0)
+    assert integrate_windows(ts, vs, np.array([8.0]), np.array([9.0]))[0] \
+        == pytest.approx(20.0 * 1.0)
+
+
+def test_integrate_windows_degenerate():
+    assert integrate_windows(np.array([]), np.array([]),
+                             np.array([0.0]), np.array([1.0]))[0] == 0.0
+    out = integrate_windows(np.array([3.0]), np.array([7.0]),
+                            np.array([1.0, 5.0]), np.array([3.0, 4.0]))
+    assert out[0] == pytest.approx(14.0)     # single sample: rate * duration
+    assert out[1] == 0.0                     # t1 <= t0: empty window

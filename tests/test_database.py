@@ -1,0 +1,101 @@
+"""TaskDB: incremental aggregates and append-only JSONL persistence."""
+import dataclasses
+import json
+
+from repro.core.counters import TaskRecord
+from repro.core.database import TaskDB
+
+
+def _rec(i, ep="desktop", fn="graph_bfs", user="user0", energy=1.5,
+         node=3.0):
+    return TaskRecord(
+        task_id=f"t{i}", fn=fn, endpoint=ep, worker_pid=1000 + i,
+        t_start=float(i), t_end=float(i) + 2.0,
+        energy_j=energy, node_energy_j=node, user=user,
+    )
+
+
+def _brute_force_energy_by_endpoint(db):
+    out = {}
+    for r in db.records:
+        out[r.endpoint] = out.get(r.endpoint, 0.0) + (r.energy_j or 0.0)
+    return out
+
+
+def test_incremental_aggregates_match_brute_force():
+    db = TaskDB()
+    for i in range(10):
+        db.add(_rec(i, ep="desktop" if i % 2 else "theta",
+                    fn="graph_bfs" if i % 3 else "thumbnail",
+                    user=f"user{i % 2}", energy=float(i)))
+    assert db.energy_by_endpoint() == _brute_force_energy_by_endpoint(db)
+    total_u = sum(sum(db.energy_by_user(f"user{u}").values()) for u in (0, 1))
+    assert total_u == sum(r.energy_j for r in db.records)
+    assert db.node_energy_by_endpoint()["desktop"] == sum(
+        r.node_energy_j for r in db.records if r.endpoint == "desktop")
+
+
+def test_by_function_averages():
+    db = TaskDB()
+    db.extend([_rec(0, energy=2.0), _rec(1, energy=4.0)])
+    db.add(_rec(2, energy=None))          # unattributed: excluded
+    assert db.by_function() == {"graph_bfs": {"desktop": 3.0}}
+
+
+def test_extend_indexes_like_add():
+    a, b = TaskDB(), TaskDB()
+    recs = [_rec(i) for i in range(5)]
+    for r in recs:
+        a.add(r)
+    b.extend(recs)
+    assert a.energy_by_endpoint() == b.energy_by_endpoint()
+    assert a.by_function() == b.by_function()
+
+
+def test_reindex_after_mutation():
+    db = TaskDB()
+    db.add(_rec(0, energy=1.0))
+    db.records[0].energy_j = 10.0
+    db.reindex()
+    assert db.energy_by_endpoint() == {"desktop": 10.0}
+
+
+def test_jsonl_roundtrip(tmp_path):
+    db = TaskDB(tmp_path / "db.jsonl")
+    db.extend([_rec(i) for i in range(4)])
+    db.save()
+    text = (tmp_path / "db.jsonl").read_text()
+    assert len(text.strip().splitlines()) == 4      # one JSON object per line
+    db2 = TaskDB(tmp_path / "db.jsonl")
+    assert [r.task_id for r in db2.records] == [r.task_id for r in db.records]
+    assert db2.energy_by_endpoint() == db.energy_by_endpoint()
+
+
+def test_save_appends_only_new_records(tmp_path):
+    db = TaskDB(tmp_path / "db.jsonl")
+    db.extend([_rec(i) for i in range(3)])
+    db.save()
+    first = (tmp_path / "db.jsonl").read_text()
+    db.add(_rec(3))
+    db.save()
+    text = (tmp_path / "db.jsonl").read_text()
+    assert text.startswith(first)                   # prior bytes untouched
+    assert len(text.strip().splitlines()) == 4
+    db.save()                                       # no new records: no-op
+    assert (tmp_path / "db.jsonl").read_text() == text
+
+
+def test_legacy_json_array_load_and_upgrade(tmp_path):
+    recs = [_rec(i) for i in range(3)]
+    legacy = tmp_path / "db.json"
+    legacy.write_text(json.dumps([dataclasses.asdict(r) for r in recs]))
+    db = TaskDB(legacy)
+    assert len(db.records) == 3
+    assert db.energy_by_endpoint() == {"desktop": 4.5}
+    db.add(_rec(3))
+    db.save()                                       # upgrades to JSONL
+    lines = legacy.read_text().strip().splitlines()
+    assert len(lines) == 4
+    assert all(json.loads(ln)["task_id"].startswith("t") for ln in lines)
+    db2 = TaskDB(legacy)
+    assert len(db2.records) == 4

@@ -1,0 +1,200 @@
+"""SoA-engine parity suite: engine="soa" must reproduce engine="delta"
+assignments exactly and objectives to rtol=1e-12 (bitwise in practice) on
+the Table-V workload shape and on scaled federated fleets, batch and
+online."""
+import numpy as np
+import pytest
+
+from repro.core.endpoint import scaled_testbed, table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.policy import get_policy
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import (
+    SchedulerState,
+    SoAState,
+    TaskSpec,
+    cluster_mhra,
+    mhra,
+    round_robin,
+)
+from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS, TestbedSim
+from repro.core.transfer import TransferModel
+
+PARITY_RTOL = 1e-12
+
+
+def _setup(n_per=24, with_inputs=True, replicas=1):
+    eps = scaled_testbed(replicas)
+    store = TaskProfileStore(eps)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            base, _, k = ep.name.partition("_")
+            rt, w = BASE_PROFILES[fn][base]
+            # replica k runs (1 + 0.02k)x faster (scaled_testbed perf_scale)
+            rt = rt / (1.0 + 0.02 * int(k or 0))
+            for _ in range(3):
+                store.record(fn, ep.name, rt, rt * w)
+    inputs = ((eps[0].name, 1, 200e6, True),) if with_inputs else ()
+    tasks = [
+        TaskSpec(id=f"t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)],
+                 inputs=inputs)
+        for i in range(n_per * len(SEBS_FUNCTIONS))
+    ]
+    return tasks, eps, store, TransferModel(eps)
+
+
+def _assert_parity(a, b):
+    assert a.assignments == b.assignments
+    assert a.objective == pytest.approx(b.objective, rel=PARITY_RTOL)
+    assert a.energy_j == pytest.approx(b.energy_j, rel=PARITY_RTOL)
+    assert a.makespan_s == pytest.approx(b.makespan_s, rel=PARITY_RTOL)
+    assert a.transfer_j == pytest.approx(b.transfer_j, rel=PARITY_RTOL, abs=0)
+    assert a.heuristic == b.heuristic
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.2, 0.5, 1.0])
+@pytest.mark.parametrize("strategy", [mhra, cluster_mhra])
+def test_soa_matches_delta_table5(strategy, alpha):
+    tasks, eps, store, tm = _setup(n_per=24)
+    a = strategy(tasks, eps, store, tm, alpha=alpha, engine="soa")
+    b = strategy(tasks, eps, store, tm, alpha=alpha, engine="delta")
+    _assert_parity(a, b)
+
+
+def test_soa_matches_delta_without_inputs():
+    tasks, eps, store, tm = _setup(n_per=24, with_inputs=False)
+    a = mhra(tasks, eps, store, tm, alpha=0.5, engine="soa")
+    b = mhra(tasks, eps, store, tm, alpha=0.5, engine="delta")
+    _assert_parity(a, b)
+
+
+@pytest.mark.parametrize("replicas", [2, 4])
+def test_soa_matches_delta_on_scaled_fleet(replicas):
+    tasks, eps, store, tm = _setup(n_per=16, replicas=replicas)
+    assert len(eps) == 4 * replicas
+    a = mhra(tasks, eps, store, tm, alpha=0.5, engine="soa")
+    b = mhra(tasks, eps, store, tm, alpha=0.5, engine="delta")
+    _assert_parity(a, b)
+
+
+def test_soa_transitively_matches_seed_clone_engine():
+    tasks, eps, store, tm = _setup(n_per=16)
+    a = mhra(tasks, eps, store, tm, alpha=0.5, engine="soa")
+    b = mhra(tasks, eps, store, tm, alpha=0.5, engine="clone")
+    assert a.assignments == b.assignments
+    assert a.objective == pytest.approx(b.objective, rel=PARITY_RTOL)
+
+
+# ---------------------------------------------------------------------------
+# online mode: SoA state carried across arrival windows
+# ---------------------------------------------------------------------------
+
+
+def _online(engine, policy="mhra"):
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=0)
+    eng = OnlineEngine(eps, sim, policy=policy, alpha=0.2, monitoring=False,
+                       window_s=30.0, max_batch=10**6, engine=engine)
+    out = []
+    for w in range(3):
+        eng.submit_many([
+            TaskSpec(id=f"w{w}t{i}", fn=SEBS_FUNCTIONS[i % 7])
+            for i in range(70)
+        ])
+        res = eng.flush()
+        out.append((res.assignments, res.schedule.energy_j,
+                    res.schedule.makespan_s))
+    return out, eng
+
+
+@pytest.mark.parametrize("policy", ["mhra", "cluster_mhra", "round_robin"])
+def test_online_soa_state_matches_delta_state(policy):
+    a, eng_a = _online(None, policy)      # delta + heap-backed state
+    b, eng_b = _online("soa", policy)     # soa + SoA-backed state
+    assert isinstance(eng_a.state, SchedulerState)
+    assert isinstance(eng_b.state, SoAState)
+    for (asg_a, e_a, c_a), (asg_b, e_b, c_b) in zip(a, b):
+        assert asg_a == asg_b
+        assert e_a == pytest.approx(e_b, rel=PARITY_RTOL)
+        assert c_a == pytest.approx(c_b, rel=PARITY_RTOL)
+    assert eng_a.state.metrics() == pytest.approx(
+        eng_b.state.metrics(), rel=PARITY_RTOL)
+
+
+def test_online_engine_param_builds_soa_policy():
+    eps = table1_testbed()
+    eng = OnlineEngine(eps, policy="mhra", engine="soa")
+    assert eng.policy.engine == "soa"
+    assert isinstance(eng.state, SoAState)
+    eng2 = OnlineEngine(eps, policy="mhra")
+    assert isinstance(eng2.state, SchedulerState)
+
+
+def test_online_engine_rejects_clone_engine():
+    """clone cannot place against a live state — fail at construction,
+    not at the first flush."""
+    eps = table1_testbed()
+    with pytest.raises(ValueError, match="clone"):
+        OnlineEngine(eps, policy="mhra", engine="clone")
+    with pytest.raises(ValueError, match="clone"):
+        OnlineEngine(eps, policy=get_policy("mhra", engine="clone"))
+
+
+# ---------------------------------------------------------------------------
+# SoAState unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_soa_state_heap_round_trip():
+    tasks, eps, store, tm = _setup(n_per=4)
+    heap = SchedulerState(eps, tm)
+    mhra(tasks, eps, store, tm, alpha=0.5, engine="delta", state=heap)
+    soa = SoAState.from_heap(heap)
+    assert soa.metrics() == heap.metrics()
+    back = SchedulerState(eps, tm)
+    soa.write_back(back)
+    assert back.metrics() == heap.metrics()
+    assert {k: sorted(v) for k, v in back.slots.items()} == \
+           {k: sorted(v) for k, v in heap.slots.items()}
+    assert back.timeline == heap.timeline
+
+
+def test_soa_state_advance_to():
+    eps = table1_testbed()
+    s = SoAState(eps, TransferModel(eps))
+    s.advance_to(12.5)
+    assert float(s.free.min()) == 12.5
+    assert np.all(s.slot_mins() == 12.5)
+
+
+def test_delta_engine_accepts_soa_live_state():
+    """mhra(engine="delta") over a SoA-backed live state must behave like
+    the same placement over a heap-backed state (the conversion branch)."""
+    tasks, eps, store, tm = _setup(n_per=8)
+    heap = SchedulerState(eps, tm)
+    soa = SoAState(eps, tm)
+    a = mhra(tasks, eps, store, tm, alpha=0.5, engine="delta", state=heap)
+    b = mhra(tasks, eps, store, tm, alpha=0.5, engine="delta", state=soa)
+    assert a.assignments == b.assignments
+    assert a.objective == b.objective
+    assert heap.metrics() == soa.metrics()
+
+
+def test_fixed_assignment_on_soa_state():
+    tasks, eps, store, tm = _setup(n_per=4, with_inputs=False)
+    a = round_robin(tasks, eps, store, tm, state=SchedulerState(eps, tm))
+    b = round_robin(tasks, eps, store, tm, state=SoAState(eps, tm))
+    assert a.assignments == b.assignments
+    assert a.energy_j == b.energy_j
+    assert a.makespan_s == b.makespan_s
+
+
+def test_policy_registry_soa_round_trip():
+    p = get_policy("mhra", engine="soa")
+    assert p.engine == "soa"
+    p = get_policy("cluster_mhra", engine="soa")
+    assert p.engine == "soa"
+    with pytest.raises(ValueError, match="engine"):
+        get_policy("mhra", engine="bogus")
+    with pytest.raises(ValueError):
+        mhra([], table1_testbed(), TaskProfileStore([]), None, engine="bogus")
