@@ -32,6 +32,31 @@ def main() -> None:
         scheduler_overhead,
     )
 
+    def _paper_eval():
+        """Tiny paper_eval harness cell: policy table + DAG parity gate
+        (the standalone run is `python examples/paper_eval.py`)."""
+        from repro.core.evaluate import (
+            evaluate_trace, run_policy, verify_dag_order,
+        )
+        from repro.workloads import moldesign_dag_workload, synthetic_edp_workload
+
+        n = 448 if args.full else 112
+        syn_res = evaluate_trace(synthetic_edp_workload(n_tasks=n, seed=0))
+        mhra = syn_res.row("mhra")
+        best = min(syn_res.single_site_rows(), key=lambda r: r.edp)
+        dag = moldesign_dag_workload(waves=2, docks_per_wave=8,
+                                     sims_per_wave=8, infers_per_wave=12)
+        d, wins = run_policy(dag, "mhra", engine="delta", alpha=0.3,
+                             return_windows=True)
+        s = run_policy(dag, "mhra", engine="soa", alpha=0.3)
+        assert d.assignments == s.assignments, "delta/soa DAG divergence"
+        edges = verify_dag_order(wins)
+        return [
+            ("eval_mhra_edp_vs_best_site", 0.0,
+             f"{mhra.edp / best.edp:.2f}x"),
+            ("eval_dag_parity", 0.0, f"{edges} edges, engines agree"),
+        ]
+
     suites = {
         "profile_tasks": lambda: profile_tasks.main(),
         "monitoring_overhead": lambda: monitoring_overhead.main(),
@@ -43,6 +68,7 @@ def main() -> None:
         "placement_strategies": lambda: placement_strategies.main(n_per=n_per),
         "alpha_sweep": lambda: alpha_sweep.main() if not args.quick else _alpha(n_alpha),
         "molecular_design": lambda: molecular_design.main(),
+        "paper_eval": _paper_eval,
         "roofline": lambda: roofline.main(),
     }
 

@@ -12,6 +12,11 @@ JSON-array files are still readable and are upgraded on first save).
 Aggregates reflect each record's values *at insertion time* — the
 attribution pipeline fills ``energy_j``/``node_energy_j`` before adding.
 If records are mutated afterwards, call :meth:`reindex`.
+
+Units: record energies are joules, times are seconds since the workload
+clock's origin (the report layer converts to kJ / kJ*s).  ``add`` keeps a
+reference to the record, not a copy.  The DB itself is deterministic and
+seed-free; ordering follows insertion order.
 """
 from __future__ import annotations
 
@@ -24,6 +29,13 @@ from repro.core.counters import TaskRecord
 
 
 class TaskDB:
+    """Task/energy record store with O(distinct-keys) report queries:
+    per-endpoint / per-user / per-function energy (J), busy spans and
+    makespan (s), maintained incrementally on ``add``; JSONL persistence
+    via ``save``/``load``.  Records are stored by reference and indexed
+    at insertion time — call :meth:`reindex` after mutating them.
+    """
+
     def __init__(self, path: str | None = None):
         self.path = pathlib.Path(path) if path else None
         self.records: list[TaskRecord] = []
@@ -46,6 +58,7 @@ class TaskDB:
         self._fn_cnt: dict[str, dict[str, int]] = defaultdict(
             lambda: defaultdict(int)
         )
+        self._span_by_ep: dict[str, tuple[float, float]] = {}
 
     def _index(self, r: TaskRecord) -> None:
         self._energy_by_ep[r.endpoint] += r.energy_j or 0.0
@@ -54,6 +67,13 @@ class TaskDB:
         if r.energy_j is not None:
             self._fn_sum[r.fn][r.endpoint] += r.energy_j
             self._fn_cnt[r.fn][r.endpoint] += 1
+        span = self._span_by_ep.get(r.endpoint)
+        if span is None:
+            self._span_by_ep[r.endpoint] = (r.t_start, r.t_end)
+        else:
+            self._span_by_ep[r.endpoint] = (
+                min(span[0], r.t_start), max(span[1], r.t_end)
+            )
 
     def add(self, rec: TaskRecord) -> None:
         self.records.append(rec)
@@ -84,6 +104,18 @@ class TaskDB:
             fn: {ep: s / self._fn_cnt[fn][ep] for ep, s in eps.items()}
             for fn, eps in self._fn_sum.items()
         }
+
+    def span_by_endpoint(self) -> dict[str, tuple[float, float]]:
+        """Per-endpoint (first task start, last task end) seconds."""
+        return dict(self._span_by_ep)
+
+    def makespan(self) -> float:
+        """Last task end minus first task start over all records (s)."""
+        if not self._span_by_ep:
+            return 0.0
+        t0 = min(s for s, _ in self._span_by_ep.values())
+        t1 = max(e for _, e in self._span_by_ep.values())
+        return t1 - t0
 
     # --- persistence --------------------------------------------------------
     def save(self) -> None:

@@ -77,6 +77,25 @@ class OnlineEngine:
     pending arrival, or when ``flush``/``drain`` forces it.  Completed
     windows feed monitored task records back into the profile store, so
     profiles learned in window k steer placements in window k+1.
+
+    **DAG workloads.**  A task whose ``deps`` name uncompleted parents is
+    parked in ``waiting`` instead of ``pending``; when its last parent
+    completes, the engine promotes it with ``not_before`` set to the
+    latest parent completion time (so no engine — and no simulated
+    dispatch — can start it earlier) and with one transfer input per
+    parent reading ``dep_bytes`` from the parent's *producing endpoint*.
+    ``drain`` keeps flushing until the whole DAG has run, and raises
+    ``RuntimeError`` if tasks remain waiting with no completable parent
+    (dependency cycle or a dep id that was never submitted).
+
+    **Units & mutation semantics.**  All energies are joules, times are
+    seconds (reports divide by 1e3 for kJ).  ``submit``/``tick``/``flush``
+    mutate the engine in place: the live state (``self.state``), profile
+    store, task DB, and window list all accumulate across calls — create a
+    fresh engine per experiment run.  Determinism: with a seeded
+    ``TestbedSim`` backend and ``monitoring=False`` runs are bitwise
+    reproducible; ``monitoring=True`` keeps placement deterministic but
+    attributed energies depend on the sim's seeded monitor-noise draws.
     """
 
     def __init__(
@@ -133,6 +152,8 @@ class OnlineEngine:
         self.state = state_cls(self.endpoints, self.transfer)
         self.pending: list[TaskSpec] = []
         self.windows: list[WindowResult] = []
+        self.waiting: dict[str, TaskSpec] = {}       # id -> dep-blocked task
+        self.completed: dict[str, tuple[str, float]] = {}  # id -> (ep, t_end)
         self.clock = 0.0
         self._first_pending_at: float | None = None
         if backend is not None:
@@ -141,15 +162,50 @@ class OnlineEngine:
     # ------------------------------------------------------------------
     def submit(self, task: TaskSpec, when: float | None = None) -> WindowResult | None:
         """Enqueue one task; returns a WindowResult if this submission
-        filled the batch and triggered a window."""
+        filled the batch and triggered a window.  A task with unmet
+        ``deps`` is parked until its parents complete (see class docs)."""
         when = self.clock if when is None else when
         self.clock = max(self.clock, when)
+        if task.deps:
+            if any(d not in self.completed for d in task.deps):
+                self.waiting[task.id] = task
+                return None
+            task = self._resolve_deps(task)
         if self._first_pending_at is None:
             self._first_pending_at = when
         self.pending.append(task)
         if len(self.pending) >= self.max_batch:
             return self.flush()
         return None
+
+    def _resolve_deps(self, task: TaskSpec) -> TaskSpec:
+        """Concretize a dep-bearing task whose parents have all completed:
+        ready floor = latest parent completion, plus one transfer input per
+        parent pulling ``dep_bytes`` from the endpoint that produced it."""
+        parents = [self.completed[d] for d in task.deps]
+        not_before = max(end for _, end in parents)
+        inputs = task.inputs
+        if task.dep_bytes > 0.0:
+            inputs = inputs + tuple(
+                (ep, 1, task.dep_bytes, False) for ep, _ in parents
+            )
+        return dataclasses.replace(
+            task, inputs=inputs, not_before=max(task.not_before, not_before)
+        )
+
+    def _promote_ready(self) -> int:
+        """Move every waiting task whose parents have all completed into
+        the pending queue; returns the number promoted."""
+        ready = [
+            t for t in self.waiting.values()
+            if all(d in self.completed for d in t.deps)
+        ]
+        for t in ready:
+            del self.waiting[t.id]
+            if self._first_pending_at is None:
+                self._first_pending_at = self.clock
+            self.pending.append(self._resolve_deps(t))
+        return len(ready)
 
     def submit_many(self, tasks: Sequence[TaskSpec], when: float | None = None
                     ) -> list[WindowResult]:
@@ -177,7 +233,10 @@ class OnlineEngine:
         if not self.pending:
             return None
         tasks, self.pending = self.pending, []
-        submitted_at = self._first_pending_at or self.clock
+        submitted_at = (
+            self.clock if self._first_pending_at is None
+            else self._first_pending_at
+        )
         self._first_pending_at = None
 
         ctx = PolicyContext(self.endpoints, self.store, self.transfer, self.alpha)
@@ -194,17 +253,40 @@ class OnlineEngine:
             sim = self.backend.execute_window(assignments, tasks, now=submitted_at)
             attributed = self._learn(sim)
             self.clock = max(self.clock, submitted_at + self.window_s)
+            for rec in sim.records:
+                self.completed[rec.task_id] = (rec.endpoint, rec.t_end)
+        else:
+            # planner-only mode: completion times from the schedule timeline
+            for t in tasks:
+                _, end = schedule.timeline[t.id]
+                self.completed[t.id] = (assignments[t.id], end)
         res = WindowResult(
             index=len(self.windows), submitted_at=submitted_at, tasks=tasks,
             schedule=schedule, assignments=assignments, scheduling_s=sched_s,
             sim=sim, attributed_j=attributed,
         )
         self.windows.append(res)
+        self._promote_ready()
         return res
 
     def drain(self) -> list[WindowResult]:
-        """Flush any remaining pending tasks; returns all window results."""
+        """Flush until nothing is pending *or waiting*; returns all window
+        results.  For DAG workloads this runs wave after wave as parents
+        complete.  Raises ``RuntimeError`` if waiting tasks can never be
+        promoted (dependency cycle or a parent that was never submitted)."""
         self.flush()
+        while self.pending:
+            self.flush()
+        if self.waiting:
+            blocked = {
+                tid: [d for d in t.deps if d not in self.completed]
+                for tid, t in self.waiting.items()
+            }
+            raise RuntimeError(
+                f"drain deadlock: {len(self.waiting)} task(s) still waiting "
+                f"on unmet dependencies (cycle, or parents never submitted): "
+                f"{dict(list(blocked.items())[:5])}"
+            )
         return self.windows
 
     # ------------------------------------------------------------------

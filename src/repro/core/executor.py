@@ -68,6 +68,13 @@ def attribute_window(
     trapezoid of its pid's attributed-power column — O(samples·pids +
     tasks·log samples) per node instead of the per-task rescans of the
     sample-object pipeline.
+
+    Units are joules and seconds throughout.  Mutates its arguments:
+    ``models[ep]`` accumulate training statistics, ``store`` gains one
+    observation per record, ``db`` (if given) gains every record, and the
+    ``sim.records`` themselves get ``energy_j``/``node_energy_j`` filled
+    in.  Deterministic given the sim result — any randomness lives in the
+    simulated monitor streams, not here.
     """
     recs_by_ep: dict[str, list] = {}
     for r in sim.records:
@@ -156,6 +163,14 @@ class GreenFaaSExecutor:
         return PolicyContext(self.endpoints, self.store, self.transfer, self.alpha)
 
     def schedule(self, tasks) -> tuple[sched.Schedule, float]:
+        dep_tasks = [t.id for t in tasks if t.deps]
+        if dep_tasks:
+            raise ValueError(
+                "GreenFaaSExecutor.run_batch places one flat batch and "
+                "cannot order DAG dependencies; submit dependent tasks "
+                f"through repro.core.engine.OnlineEngine instead (got deps "
+                f"on {dep_tasks[:5]})"
+            )
         t0 = time.perf_counter()
         s = self.policy.place(tasks, self._ctx())
         return s, time.perf_counter() - t0

@@ -43,7 +43,14 @@ def _check_engine(engine: str) -> str:
 
 @dataclasses.dataclass
 class PolicyContext:
-    """Everything a policy needs besides the tasks themselves."""
+    """Everything a policy needs besides the tasks themselves.
+
+    ``store`` predictions and the scheduling objective are in seconds and
+    joules; ``alpha`` weights energy vs makespan (``alpha=1`` is pure
+    energy).  The context is read-mostly: policies may *query* the store
+    and transfer model but must not record into them — learning is the
+    engine/executor's job after execution.
+    """
     endpoints: Sequence[EndpointSpec]
     store: TaskProfileStore
     transfer: TransferModel
@@ -51,7 +58,23 @@ class PolicyContext:
 
 
 class PlacementPolicy(abc.ABC):
-    """One placement decision: tasks -> endpoint assignments."""
+    """One placement decision: tasks -> endpoint assignments.
+
+    Contract notes:
+
+    - Policies receive only *placeable* tasks: the online engine resolves
+      DAG dependencies first, so a dep-bearing task arrives with its
+      ``not_before`` ready floor and parent-endpoint transfer inputs
+      already concretized.  Every engine clamps task starts to
+      ``TaskSpec.not_before`` — a policy never needs to reorder for
+      dependencies.
+    - ``place`` must assign *every* task it is given and return a
+      :class:`Schedule` whose ``objective``/``energy_j``/``makespan_s``
+      (joules / seconds) describe the *cumulative* state when ``state``
+      is passed, not just this batch.
+    - Policies must be deterministic given (tasks, ctx, state); any
+      randomness belongs in workload generation, not placement.
+    """
 
     name: ClassVar[str] = "abstract"
 
@@ -63,7 +86,8 @@ class PlacementPolicy(abc.ABC):
         state: SchedulerState | None = None,
     ) -> Schedule:
         """Place ``tasks``; with ``state`` given, commit into the live
-        timeline (online mode) instead of starting from an empty one."""
+        timeline (online mode, mutating ``state``) instead of starting
+        from an empty one."""
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"<{type(self).__name__} name={self.name!r}>"

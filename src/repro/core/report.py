@@ -1,25 +1,75 @@
-"""Energy report — the web-bookmarklet analogue (§III-G).
+"""Energy report — the web-bookmarklet analogue (§III-G) plus the
+evaluation-harness rendering layer.
 
-Renders per-endpoint / per-user energy usage from the TaskDB as HTML (the
-bookmarklet injected the same numbers into the Globus web app) and as a
-terminal table.
+Two report families share this module:
+
+- **TaskDB reports** (:func:`text_report` / :func:`html_report`): per
+  endpoint / user / function energy from attributed task records, now
+  with EDP (energy-delay product, kJ*s: node energy x busy span) beside
+  every kJ column.  All endpoint/user/function names are HTML-escaped in
+  the HTML rendering — they come from user-controlled task submissions.
+- **Evaluation reports** (:func:`eval_text_report` /
+  :func:`eval_html_report` / :func:`write_bench_json`): the
+  policy-comparison tables produced by :mod:`repro.core.evaluate`
+  (EDP + Greenup/Speedup/Powerup per policy), persisted to
+  ``BENCH_eval.json`` for CI artifacts and trend tracking.
+
+Units: the DB stores joules and seconds; reports print kJ, s, and kJ*s.
 """
 from __future__ import annotations
 
+import html as _html
+import json
 import pathlib
 
 from repro.core.database import TaskDB
 
 
+def _edp_by_endpoint(db: TaskDB) -> dict[str, float]:
+    """Per-endpoint EDP in J*s: node energy x (last end - first start)."""
+    node = db.node_energy_by_endpoint()
+    spans = db.span_by_endpoint()
+    return {
+        ep: node.get(ep, 0.0) * max(t1 - t0, 0.0)
+        for ep, (t0, t1) in spans.items()
+    }
+
+
+def summary_metrics(db: TaskDB) -> dict[str, float]:
+    """Headline numbers for a DB of attributed records: total attributed
+    task energy (J), total node energy (J), makespan (s), and the EDPs
+    (J*s) both energy totals imply."""
+    task_j = sum(db.energy_by_endpoint().values())
+    node_j = sum(db.node_energy_by_endpoint().values())
+    makespan = db.makespan()
+    return {
+        "task_energy_j": task_j,
+        "node_energy_j": node_j,
+        "makespan_s": makespan,
+        "task_edp_js": task_j * makespan,
+        "node_edp_js": node_j * makespan,
+    }
+
+
 def text_report(db: TaskDB, user: str | None = None) -> str:
-    lines = ["GreenFaaS energy report", "=" * 48]
+    lines = ["GreenFaaS energy report", "=" * 60]
     by_ep = db.energy_by_endpoint()
     node = db.node_energy_by_endpoint()
-    lines.append(f"{'endpoint':<12}{'tasks kJ':>12}{'node kJ':>12}")
+    edp = _edp_by_endpoint(db)
+    lines.append(
+        f"{'endpoint':<12}{'tasks kJ':>12}{'node kJ':>12}{'EDP kJ*s':>12}"
+    )
     for ep in sorted(by_ep):
         lines.append(
             f"{ep:<12}{by_ep[ep] / 1e3:>12.2f}{node.get(ep, 0.0) / 1e3:>12.2f}"
+            f"{edp.get(ep, 0.0) / 1e3:>12.1f}"
         )
+    m = summary_metrics(db)
+    lines.append(
+        f"{'total':<12}{m['task_energy_j'] / 1e3:>12.2f}"
+        f"{m['node_energy_j'] / 1e3:>12.2f}{m['node_edp_js'] / 1e3:>12.1f}"
+    )
+    lines.append(f"makespan: {m['makespan_s']:.1f} s")
     if user:
         lines.append(f"\nuser {user}:")
         for ep, e in sorted(db.energy_by_user(user).items()):
@@ -32,16 +82,35 @@ def text_report(db: TaskDB, user: str | None = None) -> str:
 
 
 def html_report(db: TaskDB, path: str, user: str | None = None) -> str:
+    esc = _html.escape
     by_ep = db.energy_by_endpoint()
     node = db.node_energy_by_endpoint()
+    edp = _edp_by_endpoint(db)
     rows = "".join(
-        f"<tr><td>{ep}</td><td>{by_ep[ep]/1e3:.2f}</td>"
-        f"<td>{node.get(ep, 0.0)/1e3:.2f}</td></tr>"
+        f"<tr><td>{esc(ep)}</td><td>{by_ep[ep]/1e3:.2f}</td>"
+        f"<td>{node.get(ep, 0.0)/1e3:.2f}</td>"
+        f"<td>{edp.get(ep, 0.0)/1e3:.1f}</td></tr>"
         for ep in sorted(by_ep)
     )
+    m = summary_metrics(db)
+    rows += (
+        f"<tr><th>total</th><th>{m['task_energy_j']/1e3:.2f}</th>"
+        f"<th>{m['node_energy_j']/1e3:.2f}</th>"
+        f"<th>{m['node_edp_js']/1e3:.1f}</th></tr>"
+    )
+    user_block = ""
+    if user:
+        user_rows = "".join(
+            f"<tr><td>{esc(ep)}</td><td>{e/1e3:.2f}</td></tr>"
+            for ep, e in sorted(db.energy_by_user(user).items())
+        )
+        user_block = (
+            f"<h3>user {esc(user)}</h3>"
+            f"<table><tr><th>endpoint</th><th>kJ</th></tr>{user_rows}</table>"
+        )
     fn_rows = "".join(
-        f"<tr><td>{fn}</td>" + "".join(
-            f"<td>{e:.1f}</td>" for _, e in sorted(eps.items())
+        f"<tr><td>{esc(fn)}</td>" + "".join(
+            f"<td>{esc(ep)}={e:.1f}</td>" for ep, e in sorted(eps.items())
         ) + "</tr>"
         for fn, eps in sorted(db.by_function().items())
     )
@@ -49,8 +118,10 @@ def html_report(db: TaskDB, path: str, user: str | None = None) -> str:
 <style>body{{font-family:sans-serif}}table{{border-collapse:collapse}}
 td,th{{border:1px solid #999;padding:4px 10px}}</style></head><body>
 <h2>GreenFaaS endpoint energy usage</h2>
-<table><tr><th>endpoint</th><th>task energy (kJ)</th><th>node energy (kJ)</th></tr>
+<p>makespan: {m['makespan_s']:.1f} s &middot; EDP = node energy &times; busy span</p>
+<table><tr><th>endpoint</th><th>task energy (kJ)</th><th>node energy (kJ)</th><th>EDP (kJ&middot;s)</th></tr>
 {rows}</table>
+{user_block}
 <h3>mean attributed energy per function (J)</h3>
 <table>{fn_rows}</table>
 </body></html>"""
@@ -58,3 +129,103 @@ td,th{{border:1px solid #999;padding:4px 10px}}</style></head><body>
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_text(html)
     return html
+
+
+# ---------------------------------------------------------------------------
+# Evaluation-harness rendering (repro.core.evaluate results)
+# ---------------------------------------------------------------------------
+
+_EVAL_COLS = (
+    ("policy", "{policy:<16}", "<16"),
+    ("energy kJ", "{energy_kj:>11.1f}", ">11"),
+    ("makespan s", "{makespan_s:>11.1f}", ">11"),
+    ("EDP kJ*s", "{edp_kjs:>11.1f}", ">11"),
+    ("greenup", "{greenup:>8.2f}", ">8"),
+    ("speedup", "{speedup:>8.2f}", ">8"),
+    ("powerup", "{powerup:>8.2f}", ">8"),
+)
+
+
+def _eval_row_values(r) -> dict:
+    return {
+        "policy": r.policy,
+        "energy_kj": r.energy_j / 1e3,
+        "makespan_s": r.makespan_s,
+        "edp_kjs": r.edp / 1e3,
+        "greenup": r.greenup if r.greenup is not None else float("nan"),
+        "speedup": r.speedup if r.speedup is not None else float("nan"),
+        "powerup": r.powerup if r.powerup is not None else float("nan"),
+    }
+
+
+def eval_text_report(result) -> str:
+    """Paper-style comparison table for one :class:`EvalResult`."""
+    head = "".join(f"{name:{align}}" for name, _, align in _EVAL_COLS)
+    lines = [
+        f"workload: {result.workload}  "
+        f"({result.n_tasks} tasks, alpha={result.alpha})",
+        f"GPS-UP baseline: {result.baseline} (best single-site by EDP)",
+        head,
+        "-" * len(head),
+    ]
+    for r in result.rows:
+        vals = _eval_row_values(r)
+        lines.append("".join(fmt.format(**vals) for _, fmt, _ in _EVAL_COLS))
+    return "\n".join(lines)
+
+
+def eval_html_report(results, path: str) -> str:
+    """Render one or more EvalResults as a standalone HTML page."""
+    esc = _html.escape
+    if not isinstance(results, (list, tuple)):
+        results = [results]
+    blocks = []
+    for res in results:
+        rows = "".join(
+            "<tr>" + "".join(
+                f"<td>{esc(v) if isinstance(v, str) else format(v, '.2f')}</td>"
+                for v in (
+                    r.policy, r.energy_j / 1e3, r.makespan_s, r.edp / 1e3,
+                    r.greenup or float("nan"), r.speedup or float("nan"),
+                    r.powerup or float("nan"),
+                )
+            ) + "</tr>"
+            for r in res.rows
+        )
+        blocks.append(
+            f"<h2>{esc(res.workload)}</h2>"
+            f"<p>{res.n_tasks} tasks &middot; alpha={res.alpha} &middot; "
+            f"GPS-UP baseline: {esc(res.baseline)}</p>"
+            "<table><tr><th>policy</th><th>energy (kJ)</th><th>makespan (s)</th>"
+            "<th>EDP (kJ&middot;s)</th><th>greenup</th><th>speedup</th>"
+            f"<th>powerup</th></tr>{rows}</table>"
+        )
+    html = (
+        "<!doctype html><html><head><title>GreenFaaS evaluation</title>"
+        "<style>body{font-family:sans-serif}table{border-collapse:collapse}"
+        "td,th{border:1px solid #999;padding:4px 10px}</style></head><body>"
+        "<h1>GreenFaaS policy evaluation</h1>"
+        + "".join(blocks) + "</body></html>"
+    )
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(html)
+    return html
+
+
+def write_bench_json(results, path: str = "BENCH_eval.json",
+                     extra: dict | None = None) -> dict:
+    """Persist EvalResult(s) (+ optional harness metadata) as one JSON
+    payload; returns the payload written."""
+    if not isinstance(results, (list, tuple)):
+        results = [results]
+    payload = {
+        "suite": "paper_eval",
+        "workloads": [r.to_payload() for r in results],
+    }
+    if extra:
+        payload.update(extra)
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True))
+    return payload

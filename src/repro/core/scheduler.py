@@ -50,10 +50,26 @@ from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel
 
 @dataclasses.dataclass(frozen=True)
 class TaskSpec:
+    """One task submission.
+
+    ``inputs`` are transfer templates ``(src, n_files, total_bytes,
+    shared)`` — src is an endpoint name; shared inputs are cached per
+    destination endpoint.  ``deps``/``dep_bytes`` describe DAG edges: the
+    task may not start before every parent task id in ``deps`` has
+    completed, and it pulls ``dep_bytes`` bytes from each parent's
+    *producing endpoint* (the online engine rewrites these into concrete
+    ``inputs`` entries once the parents' placements are known).
+    ``not_before`` is the resolved ready floor in seconds — every engine
+    clamps the task's start time to it.  Instances are frozen; the engine
+    promotes a dependent task by building a ``dataclasses.replace`` copy.
+    """
     id: str
     fn: str
     inputs: tuple = ()          # tuple of TransferRequest templates (src, files, bytes, shared)
     user: str = "user0"
+    deps: tuple = ()            # parent task ids; placeable only once all complete
+    dep_bytes: float = 0.0      # bytes pulled from each parent's endpoint
+    not_before: float = 0.0     # earliest start (s); set when deps resolve
 
 
 @dataclasses.dataclass
@@ -169,6 +185,8 @@ class SchedulerState:
         for t in unit:
             p = preds[t.id]
             start = max(heapq.heappop(slots), ready)
+            if start < t.not_before:
+                start = t.not_before
             end = start + p.runtime_s
             heapq.heappush(slots, end)
             if self.first_start[name] is None or start < self.first_start[name]:
@@ -239,6 +257,14 @@ class SoAState:
     "overwrite the argmin slot with end" — identical multiset evolution,
     so ``assign``/``metrics`` produce bitwise-identical floats to the
     heap-backed state given the same placement sequence.
+
+    Units: ``free``/``first``/``last`` are seconds, ``dyn``/``transfer_j``
+    joules; ``metrics()`` returns ``(E_tot J, C_max s, transfer J)``.
+    ``assign`` mutates in place (including the task-start clamp to
+    ``TaskSpec.not_before``); ``clone`` deep-copies the arrays but shares
+    the immutable endpoint/transfer objects; ``replace_with`` adopts
+    another state's arrays *by reference*.  No randomness anywhere in the
+    scheduling state — determinism comes for free.
     """
 
     def __init__(self, endpoints: Sequence[EndpointSpec], transfer: TransferModel):
@@ -322,6 +348,8 @@ class SoAState:
             start = slots[k]
             if start < ready:
                 start = ready
+            if start < t.not_before:
+                start = t.not_before
             end = start + p.runtime_s
             slots[k] = end
             if start < first:
@@ -529,6 +557,7 @@ def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer
     of nested Prediction dicts."""
     heappop, heappush = heapq.heappop, heapq.heappush
     n = len(tasks)
+    nbs = [t.not_before for t in tasks]
     sf1 = sf2 = 0.0
     for ei, ep in enumerate(endpoints):
         name = ep.name
@@ -560,6 +589,8 @@ def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer
             start = heappop(slots)
             if start < ready:
                 start = ready
+            if start < nbs[i]:
+                start = nbs[i]
             end = start + row_rt[i]
             heappush(slots, end)
             if first is None or start < first:
@@ -743,6 +774,7 @@ def _greedy_delta(
         if single:
             t0 = unit[0]
             ti = idx[t0.id]
+            nb0 = t0.not_before
             no_inputs = not t0.inputs
             if not no_inputs and len(t0.inputs) == 1:
                 inp = t0.inputs[0]
@@ -825,6 +857,8 @@ def _greedy_delta(
             if single:
                 s0 = mins[ei]
                 start = s0 if s0 >= ready else ready
+                if start < nb0:
+                    start = nb0
                 end = start + rt_rows[ei][ti]
                 f = first[ei]
                 nf = start if (f is None or start < f) else f
@@ -845,6 +879,8 @@ def _greedy_delta(
                     start = heappop(heap)
                     if start < ready:
                         start = ready
+                    if start < t.not_before:
+                        start = t.not_before
                     end = start + row_rt[tix]
                     heappush(heap, end)
                     if nf is None or start < nf:
@@ -1039,7 +1075,10 @@ def _greedy_soa(
             # ---- fast path: singleton unit, zero or one input ------------
             t0 = unit[0]
             ti = uidx[0]
-            key = (t0.fn, t0.inputs)
+            nb0 = t0.not_before
+            # not_before is part of the run identity: tasks with different
+            # ready floors score differently even with equal (fn, inputs)
+            key = (t0.fn, t0.inputs, nb0)
             if need_full or key != run_key:
                 run_key = key
                 run_rec = rec = _sig(t0.inputs[0]) if t0.inputs else None
@@ -1052,6 +1091,8 @@ def _greedy_soa(
                     np.maximum(mins, qd_vec, out=start)
                 else:
                     np.maximum(mins, rec["eff_ready"], out=start)
+                if nb0 > 0.0:
+                    np.maximum(start, nb0, out=start)
                 np.add(start, run_rt, out=end)
                 np.minimum(first, start, out=nf)
                 np.maximum(last, end, out=nl)
@@ -1090,6 +1131,8 @@ def _greedy_soa(
                     rec["eff_ready"][ei] = float(qd_vec[ei])
             m_e = float(mins[ei])
             start_v = m_e if m_e >= ready_e else ready_e
+            if start_v < nb0:
+                start_v = nb0
             end_v = start_v + float(run_rt[ei])
             f_e = float(first[ei])
             nf_v = start_v if start_v < f_e else f_e
@@ -1111,6 +1154,8 @@ def _greedy_soa(
             ready2 = float(rec["eff_ready"][ei]) if rec is not None else ready_e
             m2 = float(mins[ei])
             s2 = m2 if m2 >= ready2 else ready2
+            if s2 < nb0:
+                s2 = nb0
             e2 = s2 + float(run_rt[ei])
             nf2 = s2 if s2 < nf_v else nf_v
             nl2 = e2 if e2 > nl_v else nl_v
@@ -1160,6 +1205,8 @@ def _greedy_soa(
                 s_v = heappop(heap)
                 if s_v < ready_e:
                     s_v = ready_e
+                if s_v < t.not_before:
+                    s_v = t.not_before
                 e_v = s_v + rtT[tix, ei]
                 heappush(heap, e_v)
                 if s_v < f_e:

@@ -196,11 +196,13 @@ class TestbedSim:
                 rt = rt * float(
                     np.clip(self.rng.normal(1.0, self.noise), 0.7, 1.3)
                 )
-                start = heapq.heappop(slots) + DISPATCH_OVERHEAD_S
+                popped = heapq.heappop(slots)
+                start = max(popped, t.not_before) + DISPATCH_OVERHEAD_S
                 end = start + rt
                 heapq.heappush(slots, end)
-                # pick a stable pid per concurrent slot
-                slot_id = int(np.argmin([abs(sf - (start - DISPATCH_OVERHEAD_S)) for sf in slot_free]))
+                # pick a stable pid per concurrent slot (match the unclamped
+                # pop value: a not_before clamp must not grab a busy slot)
+                slot_id = int(np.argmin([abs(sf - popped) for sf in slot_free]))
                 slot_free[slot_id] = end
                 pid = pid_of_slot[slot_id]
                 intervals.append((start, end, w, pid, rates, t))
@@ -310,7 +312,7 @@ class TestbedSim:
                     np.clip(self.rng.normal(1.0, self.noise), 0.7, 1.3)
                 )
                 popped = heapq.heappop(slots)
-                start = max(popped, now) + DISPATCH_OVERHEAD_S
+                start = max(popped, now, t.not_before) + DISPATCH_OVERHEAD_S
                 end = start + rt
                 heapq.heappush(slots, end)
                 # match the freed slot on the *unclamped* pop value — clamping

@@ -1,0 +1,39 @@
+"""Reproducible workload generators for the evaluation harness.
+
+- :mod:`repro.workloads.arrivals` — Poisson / bursty / diurnal arrival
+  processes (seeded, sorted arrival-time arrays).
+- :mod:`repro.workloads.synthetic` — the paper's synthetic EDP workload
+  (mixed compute/memory/IO function classes over the Table-I testbed).
+- :mod:`repro.workloads.moldesign` — the molecular-design DAG workload
+  (dock → simulate → train → infer with data dependencies).
+- :mod:`repro.workloads.trace` — the :class:`WorkloadTrace` container +
+  replay helper every generator returns.
+"""
+from repro.workloads.arrivals import (
+    ARRIVAL_PROCESSES,
+    bursty_arrivals,
+    diurnal_arrivals,
+    make_arrivals,
+    poisson_arrivals,
+)
+from repro.workloads.moldesign import (
+    MOLDESIGN_DAG_PROFILES,
+    moldesign_dag_workload,
+    moldesign_endpoints,
+)
+from repro.workloads.synthetic import FUNCTION_CLASSES, synthetic_edp_workload
+from repro.workloads.trace import WorkloadTrace
+
+__all__ = [
+    "ARRIVAL_PROCESSES",
+    "FUNCTION_CLASSES",
+    "MOLDESIGN_DAG_PROFILES",
+    "WorkloadTrace",
+    "bursty_arrivals",
+    "diurnal_arrivals",
+    "make_arrivals",
+    "moldesign_dag_workload",
+    "moldesign_endpoints",
+    "poisson_arrivals",
+    "synthetic_edp_workload",
+]

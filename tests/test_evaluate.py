@@ -1,0 +1,152 @@
+"""Evaluation harness: EDP/GPS-UP arithmetic, baseline selection,
+determinism, per-endpoint energy accounting, and BENCH_eval.json
+persistence."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.evaluate import (
+    EvalResult,
+    PolicyRun,
+    evaluate_trace,
+    gpsup,
+    per_endpoint_energy,
+    run_policy,
+    verify_dag_order,
+    warm_store,
+)
+from repro.core.report import write_bench_json
+from repro.core.scheduler import SchedulerState, SoAState, TaskSpec
+from repro.core.testbed import TestbedSim
+from repro.core.transfer import TransferModel
+from repro.workloads import moldesign_dag_workload, synthetic_edp_workload
+
+
+def _tiny_synthetic(n=48, seed=0):
+    return synthetic_edp_workload(n_tasks=n, seed=seed)
+
+
+def test_gpsup_hand_computed():
+    # base: 100 J in 10 s (10 W); new: 50 J in 5 s (10 W)
+    g, s, u = gpsup(100.0, 10.0, 50.0, 5.0)
+    assert g == pytest.approx(2.0)
+    assert s == pytest.approx(2.0)
+    assert u == pytest.approx(1.0)
+    # powerup: base 10 W vs new 25 W
+    g, s, u = gpsup(100.0, 10.0, 50.0, 2.0)
+    assert u == pytest.approx(10.0 / 25.0)
+
+
+def test_policy_run_edp_is_product():
+    r = PolicyRun(
+        policy="x", engine="delta", energy_j=123.5, makespan_s=7.25,
+        transfer_j=0.0, scheduling_s=0.0, sim_makespan_s=0.0,
+        attributed_j=0.0, windows=1, tasks=1, per_endpoint_j={},
+        placements={},
+    )
+    assert r.edp == 123.5 * 7.25
+    assert r.power_w == pytest.approx(123.5 / 7.25)
+
+
+def test_run_policy_deterministic():
+    trace = _tiny_synthetic()
+    a = run_policy(trace, "mhra")
+    b = run_policy(trace, "mhra")
+    assert a.assignments == b.assignments
+    assert a.energy_j == b.energy_j
+    assert a.makespan_s == b.makespan_s
+
+
+def test_evaluate_trace_rows_and_baseline():
+    trace = _tiny_synthetic()
+    res = evaluate_trace(trace)
+    labels = [r.policy for r in res.rows]
+    for ep in trace.endpoints:
+        assert f"site:{ep.name}" in labels
+    for p in ("mhra", "cluster_mhra", "round_robin"):
+        assert p in labels
+    sites = res.single_site_rows()
+    best = min(sites, key=lambda r: r.edp)
+    assert res.baseline == best.policy
+    # baseline row's GPS-UP ratios are exactly 1
+    for r in res.rows:
+        if r.policy == res.baseline:
+            assert r.greenup == pytest.approx(1.0)
+            assert r.speedup == pytest.approx(1.0)
+            assert r.powerup == pytest.approx(1.0)
+        # powerup consistency: U = G/S
+        assert r.powerup == pytest.approx(r.greenup / r.speedup)
+    # the paper's bar: MHRA EDP no worse than the best single site
+    assert res.row("mhra").edp <= best.edp * (1 + 1e-9)
+
+
+def test_per_endpoint_energy_sums_to_metrics_total():
+    trace = _tiny_synthetic()
+    _, windows = run_policy(trace, "mhra", return_windows=True)
+    # rebuild state both ways via a fresh run to inspect the live state
+    sim = TestbedSim(trace.endpoints, profiles=trace.profiles,
+                     signatures=trace.signatures, seed=0, runtime_noise=0.0)
+    from repro.core.engine import OnlineEngine
+    eng = OnlineEngine(trace.endpoints, sim, policy="mhra",
+                       store=warm_store(sim, trace), monitoring=False,
+                       window_s=5.0, max_batch=512)
+    trace.replay_into(eng)
+    per_ep = per_endpoint_energy(eng.state)
+    e_tot, _, _ = eng.state.metrics()
+    assert sum(per_ep.values()) == pytest.approx(e_tot, rel=1e-12)
+
+
+def test_per_endpoint_energy_heap_and_soa_agree():
+    eps = _tiny_synthetic().endpoints
+    transfer = TransferModel(eps)
+    heap = SchedulerState(eps, transfer)
+    store = TestbedSim(eps, seed=0)
+    from repro.core.predictor import TaskProfileStore
+    ps = TaskProfileStore(eps)
+    ps.record("graph_bfs", "desktop", 4.0, 8.0)
+    preds = {"t0": ps.predict("graph_bfs", "desktop")}
+    heap.assign([TaskSpec(id="t0", fn="graph_bfs")], eps[0], preds)
+    soa = SoAState.from_heap(heap)
+    assert per_endpoint_energy(heap) == per_endpoint_energy(soa)
+
+
+def test_verify_dag_order_counts_edges_and_detects_violation():
+    trace = moldesign_dag_workload(waves=1, docks_per_wave=3,
+                                   sims_per_wave=3, infers_per_wave=4)
+    _, windows = run_policy(trace, "mhra", alpha=0.3, return_windows=True)
+    edges = verify_dag_order(windows)
+    # 3 sims with 1 dock parent each + train fan-in 3 + 4 infers
+    assert edges == 3 + 3 + 4
+    # corrupt one record: the checker must catch it
+    windows[-1].sim.records[-1].t_start = -1.0
+    tid = windows[-1].sim.records[-1].task_id
+    deps_of = {t.id: t.deps for w in windows for t in w.tasks}
+    if deps_of[tid]:
+        with pytest.raises(AssertionError, match="DAG violation"):
+            verify_dag_order(windows)
+
+
+def test_eval_result_payload_roundtrip(tmp_path):
+    trace = _tiny_synthetic()
+    res = evaluate_trace(trace, policies=("mhra",))
+    out = tmp_path / "BENCH_eval.json"
+    payload = write_bench_json(res, path=out, extra={"size": "test"})
+    loaded = json.loads(out.read_text())
+    assert loaded == json.loads(json.dumps(payload))  # JSON-serializable
+    assert loaded["size"] == "test"
+    wl = loaded["workloads"][0]
+    assert wl["workload"] == trace.name
+    row = next(r for r in wl["rows"] if r["policy"] == "mhra")
+    assert row["edp"] == pytest.approx(row["energy_j"] * row["makespan_s"])
+    assert "assignments" not in row
+    assert set(row["per_endpoint_j"]) >= {e.name for e in trace.endpoints}
+
+
+def test_evaluate_without_single_sites_uses_first_policy_baseline():
+    trace = _tiny_synthetic()
+    res = evaluate_trace(trace, policies=("round_robin", "mhra"),
+                         include_single_sites=False)
+    assert res.baseline == "round_robin"
+    rr = res.row("round_robin")
+    assert rr.greenup == pytest.approx(1.0)

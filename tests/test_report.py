@@ -1,0 +1,149 @@
+"""report.py: golden text report, HTML well-formedness + escaping, EDP
+arithmetic, and the evaluation-report renderers."""
+from html.parser import HTMLParser
+
+import pytest
+
+from repro.core.counters import TaskRecord
+from repro.core.database import TaskDB
+from repro.core.evaluate import EvalResult, PolicyRun
+from repro.core.report import (
+    eval_html_report,
+    eval_text_report,
+    html_report,
+    summary_metrics,
+    text_report,
+)
+
+VOID_TAGS = {"br", "hr", "img", "meta", "link", "input"}
+
+
+class _BalanceChecker(HTMLParser):
+    def __init__(self):
+        super().__init__()
+        self.stack = []
+        self.errors = []
+
+    def handle_starttag(self, tag, attrs):
+        if tag not in VOID_TAGS:
+            self.stack.append(tag)
+
+    def handle_endtag(self, tag):
+        if not self.stack or self.stack[-1] != tag:
+            self.errors.append(f"unbalanced </{tag}> (stack: {self.stack[-3:]})")
+        else:
+            self.stack.pop()
+
+
+def assert_well_formed(html: str) -> None:
+    """Check tag balance over the <body>...</body> region (the doctype
+    prologue and <html>/<head> wrapper span the f-string seams)."""
+    body = html[html.index("<body>"):html.index("</body>") + len("</body>")]
+    p = _BalanceChecker()
+    p.feed(body)
+    assert not p.errors, p.errors
+    assert not p.stack, f"unclosed tags: {p.stack}"
+
+
+def _db() -> TaskDB:
+    """Two endpoints, hand-computable numbers.
+
+    ep_a: tasks span [0, 10], attributed 1000 J + 500 J, node 3000 J
+          -> EDP_a = 3000 * 10 = 30000 J*s
+    ep_b: task spans [5, 25], attributed 2000 J, node 8000 J
+          -> EDP_b = 8000 * 20 = 160000 J*s
+    makespan = 25 - 0 = 25 s; node total 11 kJ -> EDP 275000 J*s
+    """
+    db = TaskDB()
+    db.add(TaskRecord("t0", "fn_x", "ep_a", 1, 0.0, 4.0,
+                      energy_j=1000.0, node_energy_j=1800.0))
+    db.add(TaskRecord("t1", "fn_y", "ep_a", 1, 4.0, 10.0,
+                      energy_j=500.0, node_energy_j=1200.0))
+    db.add(TaskRecord("t2", "fn_x", "ep_b", 2, 5.0, 25.0,
+                      energy_j=2000.0, node_energy_j=8000.0, user="eve"))
+    return db
+
+
+def test_summary_metrics_hand_computed():
+    m = summary_metrics(_db())
+    assert m["task_energy_j"] == pytest.approx(3500.0)
+    assert m["node_energy_j"] == pytest.approx(11000.0)
+    assert m["makespan_s"] == pytest.approx(25.0)
+    assert m["task_edp_js"] == pytest.approx(3500.0 * 25.0)
+    assert m["node_edp_js"] == pytest.approx(11000.0 * 25.0)
+
+
+def test_text_report_golden():
+    txt = text_report(_db(), user="eve")
+    lines = txt.splitlines()
+    assert lines[0] == "GreenFaaS energy report"
+    assert lines[2] == f"{'endpoint':<12}{'tasks kJ':>12}{'node kJ':>12}{'EDP kJ*s':>12}"
+    # per-endpoint EDP: node kJ x busy span
+    assert lines[3] == f"{'ep_a':<12}{1.50:>12.2f}{3.00:>12.2f}{30.0:>12.1f}"
+    assert lines[4] == f"{'ep_b':<12}{2.00:>12.2f}{8.00:>12.2f}{160.0:>12.1f}"
+    assert lines[5] == f"{'total':<12}{3.50:>12.2f}{11.00:>12.2f}{275.0:>12.1f}"
+    assert "makespan: 25.0 s" in txt
+    assert "user eve:" in txt
+    assert "fn_x" in txt and "fn_y" in txt
+
+
+def test_text_report_empty_db():
+    txt = text_report(TaskDB())
+    assert "GreenFaaS energy report" in txt
+    assert "makespan: 0.0 s" in txt
+
+
+def test_html_report_well_formed_and_has_edp(tmp_path):
+    html = html_report(_db(), tmp_path / "r.html", user="eve")
+    assert_well_formed(html)
+    assert "EDP" in html
+    assert "30.0" in html and "160.0" in html  # per-endpoint EDP kJ*s
+    assert (tmp_path / "r.html").read_text() == html
+
+
+def test_html_report_escapes_hostile_names(tmp_path):
+    db = TaskDB()
+    db.add(TaskRecord("t0", "<script>alert(1)</script>", "ep<b>bold</b>",
+                      1, 0.0, 1.0, energy_j=1.0, node_energy_j=2.0,
+                      user="<img src=x>"))
+    html = html_report(db, tmp_path / "r.html", user="<img src=x>")
+    assert "<script>" not in html
+    assert "<b>bold</b>" not in html
+    assert "<img" not in html
+    assert "&lt;script&gt;" in html
+    assert "ep&lt;b&gt;" in html
+
+
+def _eval_result() -> EvalResult:
+    rows = [
+        PolicyRun(policy="site:a&b", engine="delta", energy_j=2000.0,
+                  makespan_s=10.0, transfer_j=0.0, scheduling_s=0.0,
+                  sim_makespan_s=11.0, attributed_j=0.0, windows=1,
+                  tasks=4, per_endpoint_j={}, placements={},
+                  greenup=1.0, speedup=1.0, powerup=1.0),
+        PolicyRun(policy="mhra", engine="delta", energy_j=1000.0,
+                  makespan_s=8.0, transfer_j=0.0, scheduling_s=0.0,
+                  sim_makespan_s=9.0, attributed_j=0.0, windows=1,
+                  tasks=4, per_endpoint_j={}, placements={},
+                  greenup=2.0, speedup=1.25, powerup=1.6),
+    ]
+    return EvalResult(workload="<wl>", n_tasks=4, alpha=0.5, rows=rows,
+                      baseline="site:a&b")
+
+
+def test_eval_text_report_table():
+    txt = eval_text_report(_eval_result())
+    assert "workload: <wl>" in txt
+    assert "GPS-UP baseline: site:a&b" in txt
+    mhra_line = next(line for line in txt.splitlines() if line.startswith("mhra"))
+    # energy 1 kJ, makespan 8 s, EDP 8000 J*s = 8.0 kJ*s, G/S/U
+    for val in ("1.0", "8.0", "2.00", "1.25", "1.60"):
+        assert val in mhra_line, (val, mhra_line)
+
+
+def test_eval_html_report_escapes_and_well_formed(tmp_path):
+    html = eval_html_report(_eval_result(), tmp_path / "eval.html")
+    assert_well_formed(html)
+    assert "&lt;wl&gt;" in html
+    assert "<wl>" not in html
+    assert "site:a&amp;b" in html

@@ -1,0 +1,225 @@
+"""Workload generators + DAG scheduling: reproducible traces, arrival
+processes, ready-set dependency handling, and delta/soa engine parity on
+dependent workloads."""
+import numpy as np
+import pytest
+
+from repro.core.endpoint import EndpointSpec, table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.executor import GreenFaaSExecutor
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import TestbedSim
+from repro.workloads import (
+    FUNCTION_CLASSES,
+    WorkloadTrace,
+    bursty_arrivals,
+    diurnal_arrivals,
+    make_arrivals,
+    moldesign_dag_workload,
+    poisson_arrivals,
+    synthetic_edp_workload,
+)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [
+    ("poisson", {"rate_hz": 4.0}),
+    ("bursty", {}),
+    ("diurnal", {}),
+])
+def test_arrivals_reproducible_and_sorted(kind, kw):
+    a = make_arrivals(kind, 300, seed=7, **kw)
+    b = make_arrivals(kind, 300, seed=7, **kw)
+    c = make_arrivals(kind, 300, seed=8, **kw)
+    assert len(a) == 300
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0)
+    assert np.all(a >= 0)
+
+
+def test_poisson_rate_controls_span():
+    fast = poisson_arrivals(1000, rate_hz=100.0, seed=0)
+    slow = poisson_arrivals(1000, rate_hz=1.0, seed=0)
+    assert slow[-1] > 10 * fast[-1]
+
+
+def test_bursty_has_gaps():
+    a = bursty_arrivals(128, burst_size=32, burst_rate_hz=100.0, gap_s=60.0, seed=0)
+    gaps = np.diff(a)
+    assert gaps.max() > 5.0          # inter-burst idle
+    assert np.median(gaps) < 0.2     # dense inside bursts
+
+
+def test_diurnal_rate_varies():
+    a = diurnal_arrivals(2000, period_s=100.0, peak_rate_hz=20.0,
+                         trough_rate_hz=1.0, seed=0)
+    # arrivals per period-phase bucket should swing peak vs trough
+    phase = (a % 100.0) / 100.0
+    peak_n = np.sum((phase > 0.1) & (phase < 0.4))    # sin > 0 region
+    trough_n = np.sum((phase > 0.6) & (phase < 0.9))  # sin < 0 region
+    assert peak_n > 2 * trough_n
+
+
+def test_unknown_arrival_kind():
+    with pytest.raises(ValueError, match="unknown arrival"):
+        make_arrivals("constant", 10)
+
+
+# ---------------------------------------------------------------------------
+# trace container
+# ---------------------------------------------------------------------------
+
+def _tiny_trace(tasks, arrivals=None):
+    eps = table1_testbed()
+    if arrivals is None:
+        arrivals = np.arange(len(tasks), dtype=float)
+    from repro.core.testbed import BASE_PROFILES, FN_SIGNATURES
+    return WorkloadTrace("t", tasks, arrivals, eps, BASE_PROFILES, FN_SIGNATURES)
+
+
+def test_trace_validates_duplicate_ids():
+    with pytest.raises(ValueError, match="duplicate"):
+        _tiny_trace([TaskSpec(id="a", fn="graph_bfs"),
+                     TaskSpec(id="a", fn="graph_bfs")])
+
+
+def test_trace_validates_topological_deps():
+    with pytest.raises(ValueError, match="depends on"):
+        _tiny_trace([TaskSpec(id="a", fn="graph_bfs", deps=("b",)),
+                     TaskSpec(id="b", fn="graph_bfs")])
+
+
+def test_trace_validates_sorted_arrivals():
+    with pytest.raises(ValueError, match="not sorted"):
+        _tiny_trace([TaskSpec(id="a", fn="graph_bfs"),
+                     TaskSpec(id="b", fn="graph_bfs")],
+                    arrivals=np.array([2.0, 1.0]))
+
+
+# ---------------------------------------------------------------------------
+# synthetic workload
+# ---------------------------------------------------------------------------
+
+def test_synthetic_workload_mix_and_reproducibility():
+    t1 = synthetic_edp_workload(n_tasks=200, seed=5)
+    t2 = synthetic_edp_workload(n_tasks=200, seed=5)
+    assert [t.id for t in t1.tasks] == [t.id for t in t2.tasks]
+    assert [t.fn for t in t1.tasks] == [t.fn for t in t2.tasks]
+    assert np.array_equal(t1.arrivals, t2.arrivals)
+    assert sum(t1.meta["classes"].values()) == 200
+    # io-class tasks stage data from home; others are input-free
+    io_fns = set(FUNCTION_CLASSES["io"])
+    for task in t1.tasks:
+        if task.fn in io_fns:
+            assert task.inputs and task.inputs[0][0] == "desktop"
+            assert any(shared for *_, shared in task.inputs)
+        else:
+            assert not task.inputs
+
+
+def test_synthetic_workload_rejects_bad_args():
+    with pytest.raises(ValueError):
+        synthetic_edp_workload(n_tasks=0)
+    with pytest.raises(ValueError):
+        synthetic_edp_workload(n_tasks=8, class_mix=(1.0, -1.0, 1.0))
+    with pytest.raises(ValueError):
+        synthetic_edp_workload(n_tasks=8, home="nowhere")
+
+
+# ---------------------------------------------------------------------------
+# molecular-design DAG workload + engine dependency handling
+# ---------------------------------------------------------------------------
+
+def test_moldesign_dag_structure():
+    t = moldesign_dag_workload(waves=2, docks_per_wave=4, sims_per_wave=4,
+                               infers_per_wave=6)
+    by_id = {task.id: task for task in t.tasks}
+    # wave-0 docks are roots; wave-1 docks depend on wave-0 infers
+    assert by_id["d0_0"].deps == ()
+    assert all(d.startswith("i0_") for d in by_id["d1_0"].deps)
+    # train fans in over every simulate of its wave
+    assert set(by_id["t0"].deps) == {f"s0_{j}" for j in range(4)}
+    assert by_id["i0_0"].deps == ("t0",)
+    assert len(t.meta["wave_ids"]) == 2
+
+
+def _run_dag(engine_name, trace, alpha=0.3):
+    sim = TestbedSim(trace.endpoints, profiles=trace.profiles,
+                     signatures=trace.signatures, seed=0, runtime_noise=0.0)
+    eng = OnlineEngine(trace.endpoints, sim, policy="mhra", alpha=alpha,
+                       window_s=5.0, max_batch=512, monitoring=False,
+                       engine=engine_name)
+    windows = trace.replay_into(eng)
+    return eng, windows
+
+
+def test_dag_dependencies_honored_and_engine_parity():
+    trace = moldesign_dag_workload(waves=2, docks_per_wave=6, sims_per_wave=6,
+                                   infers_per_wave=8)
+    runs = {}
+    for engine_name in ("delta", "soa"):
+        eng, windows = _run_dag(engine_name, trace)
+        recs = {r.task_id: r for w in windows for r in w.sim.records}
+        assert len(recs) == len(trace)
+        for task in trace.tasks:
+            for dep in task.deps:
+                assert recs[task.id].t_start >= recs[dep].t_end, (
+                    engine_name, task.id, dep
+                )
+        runs[engine_name] = {
+            tid: ep for w in windows for tid, ep in w.assignments.items()
+        }
+    assert runs["delta"] == runs["soa"]
+
+
+def test_dag_child_gets_parent_endpoint_transfer_input():
+    """A promoted child's inputs read dep_bytes from the endpoint that
+    produced each parent."""
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=0, runtime_noise=0.0)
+    eng = OnlineEngine(eps, sim, policy="mhra", monitoring=False,
+                       window_s=5.0, max_batch=10**6)
+    eng.submit(TaskSpec(id="p", fn="graph_bfs"))
+    eng.flush()
+    parent_ep, parent_end = eng.completed["p"]
+    eng.submit(TaskSpec(id="c", fn="thumbnail", deps=("p",), dep_bytes=5e6))
+    eng.drain()
+    child = next(t for w in eng.windows for t in w.tasks if t.id == "c")
+    assert (parent_ep, 1, 5e6, False) in child.inputs
+    assert child.not_before >= parent_end
+
+
+def test_drain_deadlock_raises():
+    eps = table1_testbed()
+    eng = OnlineEngine(eps, TestbedSim(eps, seed=0), policy="mhra",
+                       monitoring=False)
+    eng.submit(TaskSpec(id="orphan", fn="graph_bfs", deps=("never_submitted",)))
+    with pytest.raises(RuntimeError, match="deadlock"):
+        eng.drain()
+
+
+def test_batch_executor_rejects_dag_tasks():
+    eps = table1_testbed()
+    ex = GreenFaaSExecutor(eps, TestbedSim(eps, seed=0), strategy="mhra")
+    with pytest.raises(ValueError, match="OnlineEngine"):
+        ex.run_batch([TaskSpec(id="a", fn="graph_bfs"),
+                      TaskSpec(id="b", fn="graph_bfs", deps=("a",))])
+
+
+def test_not_before_floors_planned_and_simulated_starts():
+    """not_before floors both the planner timeline and the simulated
+    dispatch, even on an idle endpoint."""
+    eps = [EndpointSpec("a", cores=2, idle_power_w=10.0, tdp_w=100.0,
+                        queue_delay_s=0.0, has_batch_scheduler=False)]
+    profiles = {"f": {"a": (2.0, 1.0)}}
+    sim = TestbedSim(eps, profiles=profiles, seed=0, runtime_noise=0.0)
+    eng = OnlineEngine(eps, sim, policy="mhra", monitoring=False)
+    eng.submit(TaskSpec(id="t", fn="f", not_before=123.0))
+    res = eng.flush()
+    start, _ = res.schedule.timeline["t"]
+    assert start >= 123.0
+    assert res.sim.records[0].t_start >= 123.0
