@@ -1,0 +1,159 @@
+"""Diff two ``BENCH_eval.json`` payloads and flag metric regressions.
+
+CI's ``eval-trend`` job feeds it the previous successful main-branch
+run's artifact and the current run's output:
+
+    python benchmarks/diff_eval.py prev/BENCH_eval.json BENCH_eval.json \
+        --warn-pct 2 --fail-pct 10 --summary "$GITHUB_STEP_SUMMARY"
+
+Per (workload, policy) row it compares EDP, the GPS-UP ratios
+(greenup/speedup/powerup), and — when present — gCO2 and the
+carbon-delay product, each with its own "which direction is worse"
+orientation.  A regression beyond ``--warn-pct`` prints WARN, beyond
+``--fail-pct`` prints FAIL and exits 1 (the job gate).  Rows present on
+only one side are reported as new/removed but never fail the gate —
+adding a policy must not break CI.
+
+The module is import-safe (``diff_payloads``/``render_markdown``) so the
+tier-1 suite exercises the comparison logic directly.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+# metric -> lower_is_better (EDP/gCO2/CDP shrink when things improve;
+# GPS-UP ratios grow)
+METRICS: dict[str, bool] = {
+    "edp": True,
+    "greenup": False,
+    "speedup": False,
+    "powerup": False,
+    "carbon_g": True,
+    "cdp": True,
+}
+
+OK, WARN, FAIL = "OK", "WARN", "FAIL"
+_SEVERITY = {OK: 0, WARN: 1, FAIL: 2}
+
+
+@dataclasses.dataclass
+class DiffRow:
+    workload: str
+    policy: str
+    metric: str
+    prev: float | None
+    curr: float | None
+    regression_pct: float | None   # + = worse, - = better, None = n/a
+    status: str                    # OK | WARN | FAIL | "new" | "removed"
+
+
+def _rows_by_policy(payload: dict) -> dict[str, dict[str, dict]]:
+    """workload -> policy -> row."""
+    out: dict[str, dict[str, dict]] = {}
+    for wl in payload.get("workloads", []):
+        out[wl["workload"]] = {r["policy"]: r for r in wl.get("rows", [])}
+    return out
+
+
+def diff_payloads(prev: dict, curr: dict, warn_pct: float = 2.0,
+                  fail_pct: float = 10.0) -> tuple[list[DiffRow], str]:
+    """Compare two payloads; returns (rows, worst_status).
+
+    ``regression_pct`` is signed so the rendered table shows improvements
+    too: positive means the metric moved in its *worse* direction.
+    """
+    if warn_pct > fail_pct:
+        raise ValueError(f"warn_pct {warn_pct} exceeds fail_pct {fail_pct}")
+    p_rows, c_rows = _rows_by_policy(prev), _rows_by_policy(curr)
+    out: list[DiffRow] = []
+    worst = OK
+    for wl, policies in sorted(c_rows.items()):
+        prev_policies = p_rows.get(wl)
+        if prev_policies is None:
+            out.append(DiffRow(wl, "*", "*", None, None, None, "new"))
+            continue
+        for policy, row in policies.items():
+            prev_row = prev_policies.get(policy)
+            if prev_row is None:
+                out.append(DiffRow(wl, policy, "*", None, None, None, "new"))
+                continue
+            for metric, lower_better in METRICS.items():
+                pv, cv = prev_row.get(metric), row.get(metric)
+                if pv is None or cv is None or pv == 0:
+                    continue
+                change = (cv - pv) / abs(pv) * 100.0
+                reg = change if lower_better else -change
+                status = OK
+                if reg > fail_pct:
+                    status = FAIL
+                elif reg > warn_pct:
+                    status = WARN
+                if _SEVERITY[status] > _SEVERITY[worst]:
+                    worst = status
+                out.append(DiffRow(wl, policy, metric, pv, cv, reg, status))
+        for policy in prev_policies:
+            if policy not in policies:
+                out.append(DiffRow(wl, policy, "*", None, None, None, "removed"))
+    for wl in p_rows:
+        if wl not in c_rows:
+            out.append(DiffRow(wl, "*", "*", None, None, None, "removed"))
+    return out, worst
+
+
+def render_markdown(rows: list[DiffRow], worst: str, warn_pct: float,
+                    fail_pct: float) -> str:
+    """GitHub-step-summary table: every compared metric, worst first."""
+    icon = {OK: "✅", WARN: "⚠️", FAIL: "❌", "new": "🆕", "removed": "🗑️"}
+    lines = [
+        f"## Evaluation trend vs previous main run — {icon.get(worst, '')} {worst}",
+        "",
+        f"Regression thresholds: warn > {warn_pct:g}%, fail > {fail_pct:g}%. "
+        "Positive % = metric moved in its worse direction.",
+        "",
+        "| workload | policy | metric | previous | current | regression | status |",
+        "|---|---|---|---:|---:|---:|---|",
+    ]
+    order = {"FAIL": 0, "WARN": 1, "new": 2, "removed": 2, "OK": 3}
+    for r in sorted(rows, key=lambda r: (order.get(r.status, 3), r.workload,
+                                         r.policy, r.metric)):
+        prev = "—" if r.prev is None else f"{r.prev:.4g}"
+        curr = "—" if r.curr is None else f"{r.curr:.4g}"
+        pct = "—" if r.regression_pct is None else f"{r.regression_pct:+.2f}%"
+        lines.append(
+            f"| {r.workload} | {r.policy} | {r.metric} | {prev} | {curr} "
+            f"| {pct} | {icon.get(r.status, '')} {r.status} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("previous", help="previous run's BENCH_eval.json")
+    ap.add_argument("current", help="current run's BENCH_eval.json")
+    ap.add_argument("--warn-pct", type=float, default=2.0)
+    ap.add_argument("--fail-pct", type=float, default=10.0)
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown table to this file "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    prev = json.loads(pathlib.Path(args.previous).read_text())
+    curr = json.loads(pathlib.Path(args.current).read_text())
+    rows, worst = diff_payloads(prev, curr, args.warn_pct, args.fail_pct)
+    md = render_markdown(rows, worst, args.warn_pct, args.fail_pct)
+    print(md)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md)
+    if worst == FAIL:
+        print(f"FAIL: at least one metric regressed more than "
+              f"{args.fail_pct:g}%", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

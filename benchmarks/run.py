@@ -1,16 +1,30 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    python -m benchmarks.run [--full] [--only NAME]
 
-Prints ``name,us_per_call,derived`` CSV at the end (one row per headline
-metric).  --full uses the paper-size workload (1792 tasks); the default
-uses reduced sizes so the whole suite finishes quickly on one CPU core.
+Runnable bare from the repo root (src/ is added to ``sys.path`` when the
+package isn't installed, matching the pyproject ``pythonpath`` the test
+suite uses).  Prints ``name,us_per_call,derived`` CSV at the end (one row
+per headline metric).  --full uses the paper-size workload (1792 tasks);
+the default uses reduced sizes so the whole suite finishes quickly on one
+CPU core.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:  # bare run from a checkout: add src/ ourselves
+    sys.path.insert(0, str(_ROOT / "src"))
+if __package__ in (None, ""):
+    # invoked by path (python benchmarks/run.py): make the sibling
+    # benchmark modules importable as the `benchmarks` package
+    sys.path.insert(0, str(_ROOT))
 
 
 def main() -> None:

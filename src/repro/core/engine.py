@@ -22,9 +22,12 @@ cumulative and placements account for load already committed.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import time
 from typing import Sequence
 
+from repro.core.carbon import CarbonIntensitySignal
 from repro.core.database import TaskDB
 from repro.core.endpoint import EndpointSpec
 from repro.core.executor import attribute_window
@@ -67,6 +70,7 @@ class EngineSummary:
     transfer_j: float
     scheduling_s: float      # total time spent in placement decisions
     attributed_j: float
+    deferred: int = 0        # tasks time-shifted by the carbon deferral queue
 
 
 class OnlineEngine:
@@ -111,22 +115,42 @@ class OnlineEngine:
         monitoring: bool = True,
         site: str | None = None,
         engine: str | None = None,
+        carbon: CarbonIntensitySignal | None = None,
+        defer_horizon_s: float = 0.0,
+        defer_max: int = 256,
+        defer_margin: float = 0.05,
     ):
         """``engine`` selects the scheduling backend for registry-name
-        mhra/cluster_mhra policies ("delta" or "soa") and the live
-        state's layout: "soa" carries a :class:`SoAState` (flat arrays)
-        across windows, anything else the heap-backed
+        mhra/cluster_mhra/carbon_mhra policies ("delta" or "soa") and the
+        live state's layout: "soa" carries a :class:`SoAState` (flat
+        arrays) across windows, anything else the heap-backed
         :class:`SchedulerState`.  With a policy *instance*, the state
         layout follows the instance's own ``engine`` attribute.
         ``engine="clone"`` is rejected here: the clone engine cannot
-        place against a live state, so every window would fail."""
+        place against a live state, so every window would fail.
+
+        ``carbon`` exposes a grid-intensity signal to carbon-aware
+        policies (via the per-window :class:`PolicyContext`) and, with
+        ``defer_horizon_s > 0``, arms **temporal shifting**: at each
+        window the engine looks up to ``defer_horizon_s`` seconds ahead
+        for the exact fleet-mean intensity minimum, and if it undercuts
+        the current intensity by at least ``defer_margin`` (relative),
+        deadline-slack tasks are parked in a bounded deferral queue
+        (``defer_max`` entries) and re-enter the pending queue at that
+        release time with ``not_before`` raised to it — the same ready
+        floor the DAG ready-set uses, so engines and the simulator clamp
+        their starts exactly as they do for promoted DAG children.  Each
+        task defers at most once (no starvation), and ``drain`` advances
+        the clock to the earliest release when only deferred work
+        remains, so a drain can never deadlock on the queue."""
         self.endpoints = list(endpoints)
         self.backend = backend
         if isinstance(policy, PlacementPolicy):
             self.policy = policy
         elif policy == "single_site":
             self.policy = get_policy(policy, site=site)
-        elif engine is not None and policy in ("mhra", "cluster_mhra"):
+        elif engine is not None and policy in ("mhra", "cluster_mhra",
+                                               "carbon_mhra"):
             self.policy = get_policy(policy, engine=engine)
         else:
             self.policy = get_policy(policy)
@@ -154,6 +178,15 @@ class OnlineEngine:
         self.windows: list[WindowResult] = []
         self.waiting: dict[str, TaskSpec] = {}       # id -> dep-blocked task
         self.completed: dict[str, tuple[str, float]] = {}  # id -> (ep, t_end)
+        self.carbon = carbon
+        if defer_horizon_s > 0.0 and carbon is None:
+            raise ValueError("defer_horizon_s needs a carbon signal")
+        self.defer_horizon_s = defer_horizon_s
+        self.defer_max = defer_max
+        self.defer_margin = defer_margin
+        self.deferred: list[tuple[float, int, TaskSpec]] = []  # release heap
+        self._deferred_ids: set[str] = set()         # defer-once guard
+        self._defer_seq = itertools.count()
         self.clock = 0.0
         self._first_pending_at: float | None = None
         if backend is not None:
@@ -219,6 +252,7 @@ class OnlineEngine:
     def tick(self, now: float) -> WindowResult | None:
         """Advance the arrival clock; fire a window if one is due."""
         self.clock = max(self.clock, now)
+        self._release_deferred(self.clock)
         if (
             self.pending
             and self._first_pending_at is not None
@@ -226,6 +260,61 @@ class OnlineEngine:
         ):
             return self.flush()
         return None
+
+    # ------------------------------------------------------------------
+    # carbon-aware temporal shifting (bounded deferral queue)
+    def _release_deferred(self, now: float) -> int:
+        """Move deferred tasks whose release time has arrived back into the
+        pending queue with ``not_before`` raised to the release time."""
+        n = 0
+        while self.deferred and self.deferred[0][0] <= now:
+            release, _, task = heapq.heappop(self.deferred)
+            if self._first_pending_at is None:
+                self._first_pending_at = release
+            self.pending.append(dataclasses.replace(
+                task, not_before=max(task.not_before, release)
+            ))
+            n += 1
+        return n
+
+    def _runtime_estimate(self, fn: str) -> float:
+        """Fleet-mean predicted runtime — the slack check's cost model."""
+        preds = [self.store.predict(fn, e.name) for e in self.endpoints]
+        return sum(p.runtime_s for p in preds) / len(preds)
+
+    def _split_deferrable(self, tasks: list[TaskSpec], now: float
+                          ) -> list[TaskSpec]:
+        """Park deadline-slack tasks for a cleaner-grid window; returns the
+        tasks to place *now*.  No-op unless the exact fleet-mean intensity
+        minimum within the horizon undercuts the current intensity by
+        ``defer_margin`` and the bounded queue has room."""
+        if self.defer_max - len(self.deferred) <= 0:
+            return tasks     # queue full: skip the signal scans entirely
+        names = [e.name for e in self.endpoints]
+        cur = self.carbon.fleet_mean_intensity(names, now)
+        t_best, best = self.carbon.argmin_fleet_mean(
+            names, now, now + self.defer_horizon_s
+        )
+        if t_best <= now or best > (1.0 - self.defer_margin) * cur:
+            return tasks
+        keep: list[TaskSpec] = []
+        room = self.defer_max - len(self.deferred)
+        rt_est: dict[str, float] = {}
+        for t in tasks:
+            if room <= 0 or t.id in self._deferred_ids:
+                keep.append(t)
+                continue
+            if t.deadline != float("inf"):
+                rt = rt_est.get(t.fn)
+                if rt is None:
+                    rt = rt_est[t.fn] = self._runtime_estimate(t.fn)
+                if t_best + rt > t.deadline:
+                    keep.append(t)      # no slack: deferral would miss it
+                    continue
+            heapq.heappush(self.deferred, (t_best, next(self._defer_seq), t))
+            self._deferred_ids.add(t.id)
+            room -= 1
+        return keep
 
     # ------------------------------------------------------------------
     def flush(self) -> WindowResult | None:
@@ -238,8 +327,13 @@ class OnlineEngine:
             else self._first_pending_at
         )
         self._first_pending_at = None
+        if self.carbon is not None and self.defer_horizon_s > 0.0:
+            tasks = self._split_deferrable(tasks, submitted_at)
+            if not tasks:
+                return None     # whole window shifted to a cleaner grid
 
-        ctx = PolicyContext(self.endpoints, self.store, self.transfer, self.alpha)
+        ctx = PolicyContext(self.endpoints, self.store, self.transfer,
+                            self.alpha, carbon=self.carbon, now=submitted_at)
         # placement previews must not start tasks before this window opened
         self.state.advance_to(submitted_at)
         t0 = time.perf_counter()
@@ -270,13 +364,21 @@ class OnlineEngine:
         return res
 
     def drain(self) -> list[WindowResult]:
-        """Flush until nothing is pending *or waiting*; returns all window
-        results.  For DAG workloads this runs wave after wave as parents
-        complete.  Raises ``RuntimeError`` if waiting tasks can never be
-        promoted (dependency cycle or a parent that was never submitted)."""
-        self.flush()
-        while self.pending:
+        """Flush until nothing is pending, *waiting*, or deferred; returns
+        all window results.  For DAG workloads this runs wave after wave as
+        parents complete; for carbon deferrals it advances the clock to the
+        next release time once only deferred work remains.  Raises
+        ``RuntimeError`` if waiting tasks can never be promoted (dependency
+        cycle or a parent that was never submitted)."""
+        while True:
+            self._release_deferred(self.clock)
             self.flush()
+            while self.pending:
+                self.flush()
+            if not self.deferred:
+                break
+            # only time-shifted work remains: jump to its release
+            self.clock = max(self.clock, self.deferred[0][0])
         if self.waiting:
             blocked = {
                 tid: [d for d in t.deps if d not in self.completed]
@@ -318,4 +420,5 @@ class OnlineEngine:
             transfer_j=tj,
             scheduling_s=sum(w.scheduling_s for w in self.windows),
             attributed_j=sum(w.attributed_j for w in self.windows),
+            deferred=len(self._deferred_ids),
         )

@@ -27,6 +27,7 @@ import dataclasses
 from typing import ClassVar, Sequence
 
 from repro.core import scheduler as sched
+from repro.core.carbon import CarbonIntensitySignal, CarbonWeights
 from repro.core.endpoint import EndpointSpec
 from repro.core.predictor import TaskProfileStore
 from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
@@ -50,11 +51,18 @@ class PolicyContext:
     energy).  The context is read-mostly: policies may *query* the store
     and transfer model but must not record into them — learning is the
     engine/executor's job after execution.
+
+    ``carbon``/``now`` describe the grid at the moment this batch is
+    placed: carbon-aware policies snapshot per-endpoint g/J rates from
+    the signal at ``now`` (the arrival-window open time).  Both are
+    optional — carbon-blind policies ignore them.
     """
     endpoints: Sequence[EndpointSpec]
     store: TaskProfileStore
     transfer: TransferModel
     alpha: float = 0.5
+    carbon: CarbonIntensitySignal | None = None
+    now: float = 0.0
 
 
 class PlacementPolicy(abc.ABC):
@@ -145,6 +153,40 @@ class MHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state,
+        )
+
+
+@register_policy
+class CarbonMHRAPolicy(PlacementPolicy):
+    """MHRA scoring carbon-adjusted energy: the greedy objective gains a
+    ``gamma * gCO2/SF3`` term with per-endpoint g/J rates snapshotted
+    from ``ctx.carbon`` at the window-open time, so placements chase
+    low-carbon grids as intensities move.  Without a signal in the
+    context it degrades to plain MHRA (same engine, no carbon term).
+    Temporal shifting — deferring slack tasks to a cleaner window — is
+    the online engine's job (``OnlineEngine(defer_horizon_s=...)``);
+    this policy handles the *spatial* half.
+    """
+
+    name = "carbon_mhra"
+
+    def __init__(self, heuristics: Sequence[str] = sched.HEURISTICS,
+                 engine: str = "delta", gamma: float = 1.0):
+        self.heuristics = tuple(heuristics)
+        self.engine = _check_engine(engine)
+        if gamma < 0:
+            raise ValueError(f"gamma must be non-negative, got {gamma}")
+        self.gamma = gamma
+
+    def place(self, tasks, ctx, state=None):
+        carbon = None
+        if ctx.carbon is not None:
+            carbon = CarbonWeights.from_signal(
+                ctx.carbon, ctx.endpoints, ctx.now, self.gamma
+            )
+        return sched.mhra(
+            tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
+            self.heuristics, engine=self.engine, state=state, carbon=carbon,
         )
 
 

@@ -145,6 +145,18 @@ _EVAL_COLS = (
     ("powerup", "{powerup:>8.2f}", ">8"),
 )
 
+# appended when any row carries a carbon footprint (carbon-aware evals)
+_EVAL_CARBON_COLS = (
+    ("gCO2", "{carbon_g:>10.1f}", ">10"),
+    ("CDP kg*s", "{cdp_kgs:>10.2f}", ">10"),
+)
+
+
+def _eval_cols(result) -> tuple:
+    if any(r.carbon_g is not None for r in result.rows):
+        return _EVAL_COLS + _EVAL_CARBON_COLS
+    return _EVAL_COLS
+
 
 def _eval_row_values(r) -> dict:
     return {
@@ -155,12 +167,16 @@ def _eval_row_values(r) -> dict:
         "greenup": r.greenup if r.greenup is not None else float("nan"),
         "speedup": r.speedup if r.speedup is not None else float("nan"),
         "powerup": r.powerup if r.powerup is not None else float("nan"),
+        "carbon_g": r.carbon_g if r.carbon_g is not None else float("nan"),
+        "cdp_kgs": r.cdp / 1e3 if r.cdp is not None else float("nan"),
     }
 
 
 def eval_text_report(result) -> str:
-    """Paper-style comparison table for one :class:`EvalResult`."""
-    head = "".join(f"{name:{align}}" for name, _, align in _EVAL_COLS)
+    """Paper-style comparison table for one :class:`EvalResult`; carbon
+    evaluations grow gCO2 and carbon-delay-product columns."""
+    cols = _eval_cols(result)
+    head = "".join(f"{name:{align}}" for name, _, align in cols)
     lines = [
         f"workload: {result.workload}  "
         f"({result.n_tasks} tasks, alpha={result.alpha})",
@@ -170,7 +186,7 @@ def eval_text_report(result) -> str:
     ]
     for r in result.rows:
         vals = _eval_row_values(r)
-        lines.append("".join(fmt.format(**vals) for _, fmt, _ in _EVAL_COLS))
+        lines.append("".join(fmt.format(**vals) for _, fmt, _ in cols))
     return "\n".join(lines)
 
 
@@ -181,16 +197,23 @@ def eval_html_report(results, path: str) -> str:
         results = [results]
     blocks = []
     for res in results:
+        with_carbon = any(r.carbon_g is not None for r in res.rows)
         rows = "".join(
             "<tr>" + "".join(
                 f"<td>{esc(v) if isinstance(v, str) else format(v, '.2f')}</td>"
                 for v in (
-                    r.policy, r.energy_j / 1e3, r.makespan_s, r.edp / 1e3,
-                    r.greenup or float("nan"), r.speedup or float("nan"),
-                    r.powerup or float("nan"),
+                    (r.policy, r.energy_j / 1e3, r.makespan_s, r.edp / 1e3,
+                     r.greenup or float("nan"), r.speedup or float("nan"),
+                     r.powerup or float("nan"))
+                    + ((r.carbon_g if r.carbon_g is not None else float("nan"),
+                        r.cdp / 1e3 if r.cdp is not None else float("nan"))
+                       if with_carbon else ())
                 )
             ) + "</tr>"
             for r in res.rows
+        )
+        carbon_head = (
+            "<th>gCO2</th><th>CDP (kg&middot;s)</th>" if with_carbon else ""
         )
         blocks.append(
             f"<h2>{esc(res.workload)}</h2>"
@@ -198,7 +221,7 @@ def eval_html_report(results, path: str) -> str:
             f"GPS-UP baseline: {esc(res.baseline)}</p>"
             "<table><tr><th>policy</th><th>energy (kJ)</th><th>makespan (s)</th>"
             "<th>EDP (kJ&middot;s)</th><th>greenup</th><th>speedup</th>"
-            f"<th>powerup</th></tr>{rows}</table>"
+            f"<th>powerup</th>{carbon_head}</tr>{rows}</table>"
         )
     html = (
         "<!doctype html><html><head><title>GreenFaaS evaluation</title>"

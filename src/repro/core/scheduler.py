@@ -42,6 +42,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.carbon import CarbonWeights
 from repro.core.clustering import agglomerative_cluster
 from repro.core.endpoint import EndpointSpec
 from repro.core.predictor import Prediction, TaskProfileStore
@@ -70,6 +71,7 @@ class TaskSpec:
     deps: tuple = ()            # parent task ids; placeable only once all complete
     dep_bytes: float = 0.0      # bytes pulled from each parent's endpoint
     not_before: float = 0.0     # earliest start (s); set when deps resolve
+    deadline: float = float("inf")  # latest completion (s); bounds carbon deferral
 
 
 @dataclasses.dataclass
@@ -81,12 +83,19 @@ class Schedule:
     transfer_j: float
     heuristic: str = ""
     timeline: dict[str, tuple[float, float]] = dataclasses.field(default_factory=dict)
+    carbon_g: float | None = None   # scoring-time gCO2 estimate (carbon runs)
 
     def edp(self) -> float:
         return self.energy_j * self.makespan_s
 
     def w_ed2p(self) -> float:
         return self.energy_j * self.makespan_s ** 2
+
+    def cdp(self) -> float | None:
+        """Carbon-delay product gCO2*s (None outside carbon-aware runs)."""
+        if self.carbon_g is None:
+            return None
+        return self.carbon_g * self.makespan_s
 
 
 HEURISTICS = (
@@ -411,6 +420,51 @@ class SoAState:
         state.timeline = self.timeline
 
 
+def _carbon_terms_g(eps, first, last, dyn, rates, c_max) -> float:
+    """Carbon-adjusted endpoint energy in gCO2: each endpoint's share of
+    E_tot (idle span / always-on idle + startup + dynamic) weighted by its
+    g/J rate.  Transfer energy is excluded — its grid locus is ambiguous;
+    the evaluation-side footprint bills it at the fleet-mean rate.
+
+    The per-endpoint float expressions here are mirrored verbatim by the
+    delta greedy's candidate loop, so the clone and delta engines stay
+    bitwise-identical under carbon weighting too.
+    """
+    g = 0.0
+    for j, ep in enumerate(eps):
+        w = rates[j]
+        f = first[j]
+        if f is None:
+            if not ep.has_batch_scheduler:
+                g += w * (ep.idle_power_w * c_max)
+            continue
+        if ep.has_batch_scheduler:
+            g += w * (ep.idle_power_w * (last[j] - f) + ep.startup_energy_j
+                      + dyn[j])
+        else:
+            g += w * (ep.idle_power_w * c_max + dyn[j])
+    return g
+
+
+def state_carbon_g(state, rates) -> float:
+    """gCO2 of a committed scheduling state under per-endpoint g/J
+    ``rates`` (aligned with ``state.eps``); works on both the heap- and
+    SoA-backed layouts.  See :func:`_carbon_terms_g` for the accounting."""
+    if isinstance(state, SoAState):
+        c_max = max(float(state.last.max(initial=0.0)), 0.0)
+        first = [None if state.first[i] == np.inf else float(state.first[i])
+                 for i in range(len(state.eps))]
+        last = [float(v) for v in state.last]
+        dyn = [float(v) for v in state.dyn]
+    else:
+        c_max = max([v for v in state.last_end.values()] + [0.0])
+        names = [e.name for e in state.eps]
+        first = [state.first_start[n] for n in names]
+        last = [state.last_end[n] for n in names]
+        dyn = [state.dyn_energy[n] for n in names]
+    return _carbon_terms_g(state.eps, first, last, dyn, rates, c_max)
+
+
 class PredictionTable:
     """Per-(task, endpoint) predictions as numpy arrays + flat lists.
 
@@ -538,27 +592,32 @@ def _predict_all(tasks, endpoints, store: TaskProfileStore):
     }
 
 
-def _normalizers(tasks, endpoints, per_ep, transfer) -> tuple[float, float]:
+def _normalizers(tasks, endpoints, per_ep, transfer, carbon=None
+                 ) -> tuple[float, float, float]:
     """SF1/SF2: pessimistic all-on-one-endpoint estimates (exact seed
-    arithmetic — sequential accumulation keeps engine parity bitwise)."""
-    sf1 = sf2 = 0.0
-    for ep in endpoints:
+    arithmetic — sequential accumulation keeps engine parity bitwise).
+    With ``carbon`` given, SF3 is the matching pessimistic carbon estimate
+    (all tasks on the endpoint, weighted by its own g/J rate)."""
+    sf1 = sf2 = sf3 = 0.0
+    for j, ep in enumerate(endpoints):
         st = SchedulerState([ep], transfer)
         st.assign(list(tasks), ep, per_ep[ep.name])
         e, c, _ = st.metrics()
         sf1, sf2 = max(sf1, e), max(sf2, c)
-    return max(sf1, 1e-9), max(sf2, 1e-9)
+        if carbon is not None:
+            sf3 = max(sf3, state_carbon_g(st, (carbon.rates[j],)))
+    return max(sf1, 1e-9), max(sf2, 1e-9), max(sf3, 1e-9)
 
 
-def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer
-                      ) -> tuple[float, float]:
+def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer,
+                      carbon=None) -> tuple[float, float, float]:
     """Same SF1/SF2 values as :func:`_normalizers` (operation-identical
     float sequence) computed from the prediction table's flat rows instead
     of nested Prediction dicts."""
     heappop, heappush = heapq.heappop, heapq.heappush
     n = len(tasks)
     nbs = [t.not_before for t in tasks]
-    sf1 = sf2 = 0.0
+    sf1 = sf2 = sf3 = 0.0
     for ei, ep in enumerate(endpoints):
         name = ep.name
         # transfer delta of the whole workload as one unit, fresh cache
@@ -611,7 +670,18 @@ def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer
                 e += ep.idle_power_w * c
             e += dyn
         sf1, sf2 = max(sf1, e), max(sf2, c)
-    return max(sf1, 1e-9), max(sf2, 1e-9)
+        if carbon is not None:
+            # single-endpoint _carbon_terms_g, same expression grouping
+            w = carbon.rates[ei]
+            if first is None:
+                g = w * (ep.idle_power_w * c) if not ep.has_batch_scheduler else 0.0
+            elif ep.has_batch_scheduler:
+                g = w * (ep.idle_power_w * (last - first)
+                         + ep.startup_energy_j + dyn)
+            else:
+                g = w * (ep.idle_power_w * c + dyn)
+            sf3 = max(sf3, g)
+    return max(sf1, 1e-9), max(sf2, 1e-9), max(sf3, 1e-9)
 
 
 def mhra(
@@ -624,21 +694,31 @@ def mhra(
     clusters: list[list[int]] | None = None,
     engine: str = "delta",
     state: SchedulerState | None = None,
+    carbon: CarbonWeights | None = None,
 ) -> Schedule:
     """Multi-Heuristic Resource Allocation. With clusters given, this is
     Cluster MHRA's greedy stage (one decision per cluster).
 
     ``state`` (delta/soa engines) places against a live timeline carried
     across arrival windows; the winning heuristic's result is committed
-    into it.
+    into it.  ``carbon`` adds a third objective term
+    ``gamma * G/SF3`` where G is the carbon-adjusted endpoint energy
+    (gCO2) under the snapshot's per-endpoint g/J rates — all three
+    engines score it, and ``carbon=None`` (the default) leaves every
+    code path bitwise-identical to the carbon-free build.
     """
     if not heuristics:
         raise ValueError("mhra requires at least one ordering heuristic")
+    if carbon is not None and len(carbon.rates) != len(endpoints):
+        raise ValueError(
+            f"carbon weights cover {len(carbon.rates)} endpoints but the "
+            f"fleet has {len(endpoints)}"
+        )
     if engine == "clone":
         if state is not None:
             raise ValueError("engine='clone' does not support live state")
         return _mhra_clone(tasks, endpoints, store, transfer, alpha,
-                           heuristics, clusters)
+                           heuristics, clusters, carbon)
     if engine not in ("delta", "soa"):
         raise ValueError(f"unknown engine {engine!r}")
 
@@ -648,12 +728,12 @@ def mhra(
         units = [[t] for t in tasks]
     else:
         units = [[tasks[i] for i in c] for c in clusters]
-    sf1, sf2 = _normalizers_fast(tasks, endpoints, table, transfer)
+    sf1, sf2, sf3 = _normalizers_fast(tasks, endpoints, table, transfer, carbon)
 
     unit_indices = [[table.index[t.id] for t in u] for u in units]
     if engine == "soa":
         return _mhra_soa(units, unit_indices, endpoints, table, transfer,
-                         alpha, heuristics, sf1, sf2, state)
+                         alpha, heuristics, sf1, sf2, state, carbon, sf3)
     soa_live: SoAState | None = None
     if isinstance(state, SoAState):
         # delta engine over a SoA-backed live state: run on a heap view,
@@ -665,7 +745,8 @@ def mhra(
     for h in heuristics:
         ordered = _sort_units_fast(units, h, table, unit_indices)
         sched, end_state = _greedy_delta(
-            ordered, endpoints, table, transfer, alpha, sf1, sf2, h, state
+            ordered, endpoints, table, transfer, alpha, sf1, sf2, h, state,
+            carbon, sf3,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -677,7 +758,7 @@ def mhra(
 
 
 def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
-              heuristics, sf1, sf2, state):
+              heuristics, sf1, sf2, state, carbon=None, sf3=1.0):
     """SoA-engine heuristic search: run :func:`_greedy_soa` per ordering
     heuristic, commit the winner into ``state`` (heap- or SoA-backed)."""
     heap_state: SchedulerState | None = None
@@ -691,7 +772,7 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
         ordered_idx = [unit_indices[i] for i in order]
         sched, end_state = _greedy_soa(
             ordered, ordered_idx, endpoints, table, transfer, alpha,
-            sf1, sf2, h, state
+            sf1, sf2, h, state, carbon, sf3,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -705,6 +786,7 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
 def _greedy_delta(
     units, endpoints, table: PredictionTable, transfer, alpha, sf1, sf2,
     heuristic, base_state: SchedulerState | None = None,
+    carbon: CarbonWeights | None = None, sf3: float = 1.0,
 ) -> tuple[Schedule, SchedulerState]:
     """Delta-evaluation greedy: score each candidate endpoint from the
     *change* it makes (peek the slot heap, delta the idle-span / dynamic
@@ -752,6 +834,8 @@ def _greedy_delta(
         for j in eps_r
     ]
     mins = [h[0] for h in slots]  # heap peeks, refreshed on commit
+    rates = carbon.rates if carbon is not None else None
+    gamma = carbon.gamma if carbon is not None else 0.0
     idx = table.index
     rt_rows, en_rows = table.rt_rows, table.en_rows
     hops = transfer.hops
@@ -892,22 +976,51 @@ def _greedy_delta(
             # --- objective, same accumulation order as metrics() ----------
             c = nl if nl > c_cur else c_cur
             e = tj
-            for j in eps_r:
-                if j == ei:
-                    if bt[ei]:
-                        e += idle[ei] * (nl - nf) + su[ei]
+            if rates is None:
+                for j in eps_r:
+                    if j == ei:
+                        if bt[ei]:
+                            e += idle[ei] * (nl - nf) + su[ei]
+                        else:
+                            e += idle[ei] * c
+                        e += nd
+                    elif bt[j]:
+                        if first[j] is not None:
+                            e += sterm[j]
+                            e += dyn[j]
                     else:
-                        e += idle[ei] * c
-                    e += nd
-                elif bt[j]:
-                    if first[j] is not None:
-                        e += sterm[j]
-                        e += dyn[j]
-                else:
-                    e += idle[j] * c
-                    if first[j] is not None:
-                        e += dyn[j]
-            obj = alpha * e / sf1 + beta * c / sf2
+                        e += idle[j] * c
+                        if first[j] is not None:
+                            e += dyn[j]
+                obj = alpha * e / sf1 + beta * c / sf2
+            else:
+                # carbon twin: accumulate gCO2 beside e with the exact
+                # per-endpoint expressions of _carbon_terms_g
+                g = 0.0
+                for j in eps_r:
+                    if j == ei:
+                        if bt[ei]:
+                            e += idle[ei] * (nl - nf) + su[ei]
+                            e += nd
+                            g += rates[ei] * (idle[ei] * (nl - nf) + su[ei]
+                                              + nd)
+                        else:
+                            e += idle[ei] * c
+                            e += nd
+                            g += rates[ei] * (idle[ei] * c + nd)
+                    elif bt[j]:
+                        if first[j] is not None:
+                            e += sterm[j]
+                            e += dyn[j]
+                            g += rates[j] * (sterm[j] + dyn[j])
+                    else:
+                        e += idle[j] * c
+                        if first[j] is not None:
+                            e += dyn[j]
+                            g += rates[j] * (idle[j] * c + dyn[j])
+                        else:
+                            g += rates[j] * (idle[j] * c)
+                obj = alpha * e / sf1 + beta * c / sf2 + gamma * g / sf3
             if obj < best_obj:
                 best_obj = obj
                 best = (ei, tj, new_keys, heap, entries, nf, nl, nd)
@@ -946,13 +1059,19 @@ def _greedy_delta(
     state.transfer_j = transfer_j
     e, c, tj = state.metrics()
     obj = alpha * e / sf1 + (1 - alpha) * c / sf2
-    sched = Schedule(assignments, obj, e, c, tj, heuristic, dict(state.timeline))
+    carbon_g = None
+    if rates is not None:
+        carbon_g = state_carbon_g(state, rates)
+        obj = obj + gamma * carbon_g / sf3
+    sched = Schedule(assignments, obj, e, c, tj, heuristic,
+                     dict(state.timeline), carbon_g=carbon_g)
     return sched, state
 
 
 def _greedy_soa(
     units, unit_indices, endpoints, table: PredictionTable, transfer,
     alpha, sf1, sf2, heuristic, base_state: SoAState | None = None,
+    carbon: CarbonWeights | None = None, sf3: float = 1.0,
 ) -> tuple[Schedule, SoAState]:
     """Structure-of-arrays greedy: score a unit against *every* endpoint in
     a fixed handful of vectorized passes instead of a Python loop over
@@ -1015,6 +1134,18 @@ def _greedy_soa(
     rtT, enT = table.transposed()
     a1 = alpha / sf1
     b1 = (1.0 - alpha) / sf2
+    # carbon term: one extra vector register (const_g = rates*const) and a
+    # weighted always-on idle sum; everything else reuses the e machinery
+    if carbon is not None:
+        rates_v = np.asarray(carbon.rates, dtype=float)
+        g1 = carbon.gamma / sf3
+        w_idle_on = float((rates_v * idle)[~bt_mask].sum())
+        const_g = rates_v * const
+        static_g = const_g.sum() - const_g
+        g_base = np.empty(n_ep)
+        gbuf = np.empty(n_ep)
+    else:
+        rates_v = None
     assignments: dict[str, str] = {}
     # preallocated per-unit buffers
     start = np.empty(n_ep)
@@ -1067,7 +1198,7 @@ def _greedy_soa(
     # any general-path unit — forces a fresh vectorized pass.
     run_key = None
     need_full = True
-    c_sum_b = tj_b = 0.0
+    c_sum_b = tj_b = cg_sum_b = 0.0
     run_rec: dict | None = None
     run_rt = run_en = None
     for unit, uidx in zip(units, unit_indices):
@@ -1086,6 +1217,9 @@ def _greedy_soa(
                 run_en = enT[ti]
                 c_sum_b = float(const.sum())
                 np.subtract(c_sum_b, const, out=static)
+                if rates_v is not None:
+                    cg_sum_b = float(const_g.sum())
+                    np.subtract(cg_sum_b, const_g, out=static_g)
                 tj_b = transfer_j
                 if rec is None:
                     np.maximum(mins, qd_vec, out=start)
@@ -1109,11 +1243,22 @@ def _greedy_soa(
                 if rec is not None:
                     np.add(e_base, rec["eff_add"], out=e_base)
                 np.add(e_base, tj_b, out=e_base)
+                if rates_v is not None:
+                    # carbon base: static_g + rates*(span term + dyn);
+                    # tmp still holds the span terms here
+                    np.add(tmp, nd, out=gbuf)
+                    np.multiply(gbuf, rates_v, out=gbuf)
+                    np.add(gbuf, static_g, out=g_base)
                 np.multiply(c, idle_on_sum, out=e)
                 np.add(e, e_base, out=e)
                 np.multiply(e, a1, out=obj)
                 np.multiply(c, b1, out=tmp)
                 np.add(obj, tmp, out=obj)
+                if rates_v is not None:
+                    np.multiply(c, w_idle_on, out=gbuf)
+                    np.add(gbuf, g_base, out=gbuf)
+                    np.multiply(gbuf, g1, out=gbuf)
+                    np.add(obj, gbuf, out=obj)
                 need_full = False
             else:
                 rec = run_rec
@@ -1149,6 +1294,8 @@ def _greedy_soa(
                 (nl_v - nf_v) * float(idle_bt[ei]) + float(su_bt[ei]) + nd_v
                 if bt_mask[ei] else nd_v
             )
+            if rates_v is not None:
+                const_g[ei] = float(rates_v[ei]) * float(const[ei])
             # refresh this endpoint's next-task row on the run's basis
             # (same scalar float op order as the vectorized pass)
             ready2 = float(rec["eff_ready"][ei]) if rec is not None else ready_e
@@ -1166,6 +1313,12 @@ def _greedy_soa(
                 e_b = e_b + float(rec["eff_add"][ei])
             e_b = e_b + tj_b
             e_base[ei] = e_b
+            if rates_v is not None:
+                g_b = (cg_sum_b - float(const_g[ei])) + float(rates_v[ei]) * (
+                    ((nl2 - nf2) * float(idle_bt[ei]) + float(su_bt[ei]))
+                    + (nd_v + float(run_en[ei]))
+                )
+                g_base[ei] = g_b
             if end_v > c_cur:
                 # C_max advanced: refresh every candidate's makespan terms
                 # from the cached e_base (the rest of the score is intact)
@@ -1176,10 +1329,19 @@ def _greedy_soa(
                 np.multiply(e, a1, out=obj)
                 np.multiply(c, b1, out=tmp)
                 np.add(obj, tmp, out=obj)
+                if rates_v is not None:
+                    np.multiply(c, w_idle_on, out=gbuf)
+                    np.add(gbuf, g_base, out=gbuf)
+                    np.multiply(gbuf, g1, out=gbuf)
+                    np.add(obj, gbuf, out=obj)
             else:
                 c2 = nl2 if nl2 > c_cur else c_cur
                 e_s = idle_on_sum * c2 + e_b
-                obj[ei] = a1 * e_s + b1 * c2
+                if rates_v is None:
+                    obj[ei] = a1 * e_s + b1 * c2
+                else:
+                    obj[ei] = (a1 * e_s + b1 * c2
+                               + g1 * (w_idle_on * c2 + g_b))
             timeline[t0.id] = (start_v, end_v)
             assignments[t0.id] = names[ei]
             continue
@@ -1187,6 +1349,8 @@ def _greedy_soa(
         run_key = None
         need_full = True
         np.subtract(const.sum(), const, out=static)
+        if rates_v is not None:
+            np.subtract(const_g.sum(), const_g, out=static_g)
         heappop, heappush = heapq.heappop, heapq.heappush
         tjv = np.empty(n_ep)
         cand = []
@@ -1224,6 +1388,10 @@ def _greedy_soa(
         np.subtract(nl, nf, out=tmp)
         np.multiply(tmp, idle_bt, out=tmp)
         np.add(tmp, su_bt, out=tmp)
+        if rates_v is not None:
+            np.add(tmp, nd, out=gbuf)
+            np.multiply(gbuf, rates_v, out=gbuf)
+            np.add(gbuf, static_g, out=g_base)
         np.multiply(c, idle_on_sum, out=e)
         np.add(e, static, out=e)
         np.add(e, nd, out=e)
@@ -1232,6 +1400,11 @@ def _greedy_soa(
         np.multiply(e, a1, out=obj)
         np.multiply(c, b1, out=tmp)
         np.add(obj, tmp, out=obj)
+        if rates_v is not None:
+            np.multiply(c, w_idle_on, out=gbuf)
+            np.add(gbuf, g_base, out=gbuf)
+            np.multiply(gbuf, g1, out=gbuf)
+            np.add(obj, gbuf, out=obj)
         ei = int(np.argmin(obj))
         heap, entries, new_keys = cand[ei]
         transfer_j = float(tjv[ei])
@@ -1255,6 +1428,8 @@ def _greedy_soa(
             idle_bt[ei] * (nl[ei] - nf[ei]) + su_bt[ei] + nd[ei]
             if bt_mask[ei] else nd[ei]
         )
+        if rates_v is not None:
+            const_g[ei] = float(rates_v[ei]) * float(const[ei])
         name = names[ei]
         for tid, s_v, e_v in entries:
             timeline[tid] = (s_v, e_v)
@@ -1263,8 +1438,12 @@ def _greedy_soa(
     state.transfer_j = transfer_j
     e_tot, c_max, tj = state.metrics()
     obj_f = alpha * e_tot / sf1 + (1 - alpha) * c_max / sf2
+    carbon_g = None
+    if carbon is not None:
+        carbon_g = state_carbon_g(state, carbon.rates)
+        obj_f = obj_f + carbon.gamma * carbon_g / sf3
     sched = Schedule(assignments, obj_f, e_tot, c_max, tj, heuristic,
-                     dict(state.timeline))
+                     dict(state.timeline), carbon_g=carbon_g)
     return sched, state
 
 
@@ -1274,7 +1453,8 @@ def _greedy_soa(
 # ---------------------------------------------------------------------------
 
 
-def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters):
+def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
+                carbon=None):
     per_ep = _predict_all(tasks, endpoints, store)
     if clusters is None:
         units = [[t] for t in tasks]
@@ -1293,16 +1473,17 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters):
         }
         ordered = _sort_units(units, h, mean_preds)
         sched = _greedy_multi_ep(
-            ordered, endpoints, per_ep, transfer, alpha, tasks, h
+            ordered, endpoints, per_ep, transfer, alpha, tasks, h, carbon
         )
         if best is None or sched.objective < best.objective:
             best = sched
     return best
 
 
-def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks, heuristic):
+def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
+                     heuristic, carbon=None):
     # SF normalizers from endpoint-specific predictions
-    sf1, sf2 = _normalizers(tasks, endpoints, per_ep, transfer)
+    sf1, sf2, sf3 = _normalizers(tasks, endpoints, per_ep, transfer, carbon)
 
     state = SchedulerState(endpoints, transfer)
     assignments: dict[str, str] = {}
@@ -1313,6 +1494,8 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks, heuristic
             trial.assign(unit, ep, per_ep[ep.name])
             e, c, _ = trial.metrics()
             obj = alpha * e / sf1 + (1 - alpha) * c / sf2
+            if carbon is not None:
+                obj = obj + carbon.gamma * state_carbon_g(trial, carbon.rates) / sf3
             if obj < best_obj:
                 best_obj, best_ep = obj, ep
         state.assign(unit, best_ep, per_ep[best_ep.name], record_timeline=True)
@@ -1320,7 +1503,12 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks, heuristic
             assignments[t.id] = best_ep.name
     e, c, tj = state.metrics()
     obj = alpha * e / sf1 + (1 - alpha) * c / sf2
-    return Schedule(assignments, obj, e, c, tj, heuristic, state.timeline)
+    carbon_g = None
+    if carbon is not None:
+        carbon_g = state_carbon_g(state, carbon.rates)
+        obj = obj + carbon.gamma * carbon_g / sf3
+    return Schedule(assignments, obj, e, c, tj, heuristic, state.timeline,
+                    carbon_g=carbon_g)
 
 
 def compute_clusters(
@@ -1353,6 +1541,7 @@ def cluster_mhra(
     max_cluster_size: int = 40,
     engine: str = "delta",
     state: SchedulerState | None = None,
+    carbon: CarbonWeights | None = None,
 ) -> Schedule:
     """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
     tasks = list(tasks)
@@ -1377,11 +1566,11 @@ def cluster_mhra(
             feats, energies, cap, max_cluster_size=max_cluster_size
         )
         return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
-                    clusters, engine="clone")
+                    clusters, engine="clone", carbon=carbon)
     table = PredictionTable(tasks, endpoints, store)
     clusters = compute_clusters(tasks, endpoints, table, max_cluster_size)
     return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
-                clusters, engine=engine, state=state)
+                clusters, engine=engine, state=state, carbon=carbon)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,8 @@
   (mixed compute/memory/IO function classes over the Table-I testbed).
 - :mod:`repro.workloads.moldesign` — the molecular-design DAG workload
   (dock → simulate → train → infer with data dependencies).
+- :mod:`repro.workloads.carbon_traces` — per-endpoint grid
+  carbon-intensity signals (seeded synthetic + real-trace JSON I/O).
 - :mod:`repro.workloads.trace` — the :class:`WorkloadTrace` container +
   replay helper every generator returns.
 """
@@ -15,6 +17,11 @@ from repro.workloads.arrivals import (
     diurnal_arrivals,
     make_arrivals,
     poisson_arrivals,
+)
+from repro.workloads.carbon_traces import (
+    load_carbon_signal,
+    table1_carbon_signal,
+    write_carbon_signal,
 )
 from repro.workloads.moldesign import (
     MOLDESIGN_DAG_PROFILES,
@@ -31,9 +38,12 @@ __all__ = [
     "WorkloadTrace",
     "bursty_arrivals",
     "diurnal_arrivals",
+    "load_carbon_signal",
     "make_arrivals",
     "moldesign_dag_workload",
     "moldesign_endpoints",
     "poisson_arrivals",
     "synthetic_edp_workload",
+    "table1_carbon_signal",
+    "write_carbon_signal",
 ]

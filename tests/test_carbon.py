@@ -1,0 +1,438 @@
+"""Carbon subsystem: trace interpolation/integration (hand-computed),
+seeded constructors, JSON round-trips, carbon-weighted engine parity
+(clone/delta/soa), the evaluation footprint, and the online engine's
+bounded deferral queue (slack, DAG interplay, drain termination)."""
+import collections
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import (
+    CarbonIntensitySignal,
+    CarbonTrace,
+    CarbonWeights,
+    J_PER_KWH,
+)
+from repro.core.counters import TaskRecord
+from repro.core.endpoint import EndpointSpec, RELEASE_OVERHEAD_S
+from repro.core.engine import OnlineEngine
+from repro.core import scheduler as sched
+from repro.core.evaluate import (
+    carbon_footprint_g,
+    evaluate_trace,
+    run_policy,
+    verify_dag_order,
+    warm_store,
+)
+from repro.core.report import eval_text_report
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import TestbedSim
+from repro.core.transfer import TransferModel
+from repro.workloads import (
+    moldesign_dag_workload,
+    synthetic_edp_workload,
+    table1_carbon_signal,
+)
+
+
+# ---------------------------------------------------------------------------
+# CarbonTrace arithmetic
+# ---------------------------------------------------------------------------
+
+def _tent():
+    # 100 -> 300 -> 100 over [0, 200]
+    return CarbonTrace([0.0, 100.0, 200.0], [100.0, 300.0, 100.0])
+
+
+def test_trace_interpolation_and_clamping():
+    tr = _tent()
+    assert tr.at(0.0) == 100.0
+    assert tr.at(50.0) == 200.0
+    assert tr.at(100.0) == 300.0
+    assert tr.at(150.0) == 200.0
+    # outside the breakpoints: clamp to edge values
+    assert tr.at(-10.0) == 100.0
+    assert tr.at(1e6) == 100.0
+
+
+def test_trace_integral_hand_computed():
+    tr = _tent()
+    # full tent: two trapezoids of (100+300)/2 * 100
+    assert tr.integral(0.0, 200.0) == pytest.approx(40_000.0)
+    assert tr.mean(0.0, 200.0) == pytest.approx(200.0)
+    # straddling the apex: (200+300)/2*50 + (300+200)/2*50
+    assert tr.integral(50.0, 150.0) == pytest.approx(25_000.0)
+    assert tr.mean(50.0, 150.0) == pytest.approx(250.0)
+    # degenerate interval: point value
+    assert tr.mean(70.0, 70.0) == pytest.approx(tr.at(70.0))
+    assert tr.integral(70.0, 70.0) == 0.0
+
+
+def test_periodic_trace_wraps_point_and_integral():
+    tr = CarbonTrace([0.0, 100.0, 200.0], [100.0, 300.0, 100.0],
+                     period_s=200.0)
+    assert tr.at(250.0) == pytest.approx(tr.at(50.0))
+    assert tr.at(-50.0) == pytest.approx(tr.at(150.0))
+    # [150, 250] wraps: 150..200 gives (200+100)/2*50, 0..50 gives
+    # (100+200)/2*50
+    assert tr.integral(150.0, 250.0) == pytest.approx(15_000.0)
+    # whole periods accumulate exactly
+    assert tr.integral(0.0, 600.0) == pytest.approx(3 * 40_000.0)
+
+
+def test_trace_rate_units():
+    tr = CarbonTrace([0.0, 10.0], [360.0, 360.0])
+    assert tr.rate(5.0) == pytest.approx(360.0 / J_PER_KWH)
+    assert tr.mean_rate(0.0, 10.0) == pytest.approx(1e-4)
+    assert tr.integral_rate(0.0, 10.0) == pytest.approx(1e-3)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="sorted"):
+        CarbonTrace([1.0, 0.0], [1.0, 1.0])
+    with pytest.raises(ValueError, match="negative"):
+        CarbonTrace([0.0, 1.0], [1.0, -1.0])
+    with pytest.raises(ValueError, match="equal-length"):
+        CarbonTrace([0.0, 1.0], [1.0])
+    with pytest.raises(ValueError, match=r"\[0, 10"):
+        CarbonTrace([0.0, 20.0], [1.0, 1.0], period_s=10.0)
+
+
+# ---------------------------------------------------------------------------
+# Signal: constructors, seeding, lookup, persistence
+# ---------------------------------------------------------------------------
+
+def test_diurnal_seeding_deterministic_and_distinct():
+    a = CarbonIntensitySignal.diurnal(["x", "y"], period_s=600.0, seed=7)
+    b = CarbonIntensitySignal.diurnal(["x", "y"], period_s=600.0, seed=7)
+    c = CarbonIntensitySignal.diurnal(["x", "y"], period_s=600.0, seed=8)
+    ts = np.linspace(0, 600, 13)
+    for name in ("x", "y"):
+        np.testing.assert_array_equal(a.traces[name].at(ts),
+                                      b.traces[name].at(ts))
+    assert not np.allclose(a.traces["x"].at(ts), c.traces["x"].at(ts))
+    # regions draw different profiles from one seed
+    assert not np.allclose(a.traces["x"].at(ts), a.traces["y"].at(ts))
+
+
+def test_step_signal_levels_and_periodicity():
+    sig = CarbonIntensitySignal.step(["r"], period_s=100.0, seed=0)
+    tr = sig.traces["r"]
+    assert tr.period_s == 100.0
+    vals = np.asarray(tr.at(np.linspace(0, 100, 401)), dtype=float)
+    assert vals.min() >= 80.0 - 1e-9
+    assert vals.max() <= 700.0 + 1e-9
+    assert vals.max() > vals.min() * 2  # a real plateau exists
+
+
+def test_signal_region_mapping_and_default():
+    tr = CarbonTrace([0.0, 1.0], [100.0, 100.0])
+    lo = CarbonTrace([0.0, 1.0], [10.0, 10.0])
+    sig = CarbonIntensitySignal({"de": tr, "default": lo},
+                                regions={"ep1": "de"})
+    assert sig.intensity("ep1", 0.0) == 100.0     # mapped region
+    assert sig.intensity("de", 0.0) == 100.0      # name == region
+    assert sig.intensity("elsewhere", 0.0) == 10.0  # default fallback
+    with pytest.raises(ValueError, match="unknown region"):
+        CarbonIntensitySignal({"de": tr}, regions={"ep": "nope"})
+
+
+def test_signal_json_roundtrip(tmp_path):
+    sig = table1_carbon_signal(seed=3, period_s=600.0)
+    path = tmp_path / "carbon.json"
+    payload = sig.to_json(path)
+    assert json.loads(path.read_text()) == json.loads(json.dumps(payload))
+    loaded = CarbonIntensitySignal.from_json(path)
+    ts = np.linspace(0, 1200, 25)
+    for name in sig.traces:
+        np.testing.assert_allclose(loaded.traces[name].at(ts),
+                                   sig.traces[name].at(ts))
+        assert loaded.traces[name].period_s == sig.traces[name].period_s
+
+
+def test_argmin_fleet_mean_finds_exact_trough():
+    # two tents with troughs at different times; fleet mean minimized at a
+    # breakpoint of one of them
+    a = CarbonTrace([0.0, 50.0, 100.0], [300.0, 100.0, 300.0])
+    b = CarbonTrace([0.0, 60.0, 100.0], [200.0, 120.0, 200.0])
+    sig = CarbonIntensitySignal({"a": a, "b": b})
+    t, v = sig.argmin_fleet_mean(["a", "b"], 0.0, 100.0)
+    # candidates are breakpoints {0, 50, 60, 100}: mean at 50 is
+    # (100 + 133.33)/2 ~ 116.7, at 60 it is (140+120)/2 = 130
+    assert t == 50.0
+    assert v == pytest.approx((100.0 + (120.0 + 2 / 3 * 80.0 * 0.25)) / 2.0,
+                              rel=1e-3)
+
+
+def test_grams_and_weights():
+    tr = CarbonTrace([0.0, 10.0], [360.0, 360.0])
+    sig = CarbonIntensitySignal({"default": tr})
+    # 3.6e6 J at a constant 360 g/kWh = 360 g
+    assert sig.grams("any", J_PER_KWH, 0.0, 10.0) == pytest.approx(360.0)
+    w = CarbonWeights.from_signal(sig, ["e1", "e2"], 5.0, gamma=2.0)
+    assert w.rates == (1e-4, 1e-4)
+    assert w.gamma == 2.0
+    with pytest.raises(ValueError, match="negative"):
+        CarbonWeights((-1.0,), 1.0)
+    with pytest.raises(ValueError, match="gamma"):
+        CarbonWeights((1.0,), -1.0)
+
+
+# ---------------------------------------------------------------------------
+# Carbon-weighted engine parity + steering
+# ---------------------------------------------------------------------------
+
+def _warm_setup(n=96, seed=0):
+    trace = synthetic_edp_workload(n_tasks=n, seed=seed)
+    sim = TestbedSim(trace.endpoints, profiles=trace.profiles,
+                     signatures=trace.signatures, seed=seed)
+    store = warm_store(sim, trace)
+    return trace, store, TransferModel(trace.endpoints)
+
+
+def test_engine_parity_under_carbon_weights():
+    trace, store, transfer = _warm_setup()
+    sig = table1_carbon_signal(seed=0, period_s=600.0)
+    cw = CarbonWeights.from_signal(sig, trace.endpoints, 150.0)
+    d = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                   engine="delta", carbon=cw)
+    c = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                   engine="clone", carbon=cw)
+    s = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                   engine="soa", carbon=cw)
+    # delta mirrors clone's float ops exactly, carbon included
+    assert c.assignments == d.assignments
+    assert c.objective == d.objective
+    assert c.carbon_g == d.carbon_g
+    # soa regroups for vectorization: identical assignments, rtol objective
+    assert s.assignments == d.assignments
+    assert s.objective == pytest.approx(d.objective, rel=1e-12)
+    assert s.carbon_g == pytest.approx(d.carbon_g, rel=1e-12)
+    assert d.carbon_g > 0.0
+    assert d.cdp() == pytest.approx(d.carbon_g * d.makespan_s)
+
+
+def test_cluster_mhra_parity_under_carbon_weights():
+    trace, store, transfer = _warm_setup(n=64)
+    cw = CarbonWeights((2e-4, 5e-5, 8e-5, 3e-4))
+    d = sched.cluster_mhra(trace.tasks, trace.endpoints, store, transfer,
+                           0.5, engine="delta", carbon=cw)
+    s = sched.cluster_mhra(trace.tasks, trace.endpoints, store, transfer,
+                           0.5, engine="soa", carbon=cw)
+    assert d.assignments == s.assignments
+    assert s.objective == pytest.approx(d.objective, rel=1e-12)
+
+
+def test_carbon_none_is_bitwise_unchanged():
+    trace, store, transfer = _warm_setup(n=48)
+    base = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5)
+    again = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                       carbon=None)
+    assert base.assignments == again.assignments
+    assert base.objective == again.objective
+    assert again.carbon_g is None
+
+
+def test_carbon_weights_steer_placement_off_dirty_endpoint():
+    # alpha=0.1 favors makespan, so plain MHRA spreads beyond desktop
+    trace, store, transfer = _warm_setup(n=256)
+    alpha = 0.1
+    plain = sched.mhra(trace.tasks, trace.endpoints, store, transfer, alpha)
+    counts = collections.Counter(plain.assignments.values())
+    target = max((k for k in counts if k != "desktop"), key=lambda k: counts[k])
+    assert counts[target] > 0
+    # make that endpoint's grid filthy, everyone else's nearly free
+    rates = tuple(1.0 if e.name == target else 1e-6
+                  for e in trace.endpoints)
+    # gamma=0 scores carbon without letting it steer: plain placement,
+    # but the schedule reports its gCO2 under these rates
+    plain_scored = sched.mhra(trace.tasks, trace.endpoints, store, transfer,
+                              alpha, carbon=CarbonWeights(rates, gamma=0.0))
+    assert plain_scored.assignments == plain.assignments
+    dirty = sched.mhra(trace.tasks, trace.endpoints, store, transfer, alpha,
+                       carbon=CarbonWeights(rates, gamma=4.0))
+    dirty_counts = collections.Counter(dirty.assignments.values())
+    assert dirty_counts[target] < counts[target]
+    # the steered schedule's carbon under these rates beats plain's
+    assert dirty.carbon_g < plain_scored.carbon_g
+
+
+def test_mhra_rejects_mismatched_carbon_weights():
+    trace, store, transfer = _warm_setup(n=8)
+    with pytest.raises(ValueError, match="carbon weights cover"):
+        sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                   carbon=CarbonWeights((1e-4,)))
+
+
+# ---------------------------------------------------------------------------
+# Evaluation-side footprint
+# ---------------------------------------------------------------------------
+
+def test_carbon_footprint_hand_computed():
+    always_on = EndpointSpec("d", cores=2, idle_power_w=10.0, tdp_w=100.0,
+                             queue_delay_s=0.0, has_batch_scheduler=False)
+    batch = EndpointSpec("b", cores=2, idle_power_w=100.0, tdp_w=200.0,
+                         queue_delay_s=5.0)
+    tr = CarbonTrace([0.0, 100.0], [360.0, 360.0])   # flat 1e-4 g/J
+    sig = CarbonIntensitySignal({"default": tr})
+    recs = [
+        TaskRecord("t1", "f", "d", 1, 0.0, 10.0, energy_j=50.0),
+        TaskRecord("t2", "f", "b", 1, 2.0, 6.0, energy_j=20.0),
+    ]
+    windows = [types.SimpleNamespace(sim=types.SimpleNamespace(records=recs))]
+    g = carbon_footprint_g(sig, [always_on, batch], windows)
+    expected = (
+        10.0 * 10.0 * 1e-4                                    # d idle, c_max=10
+        + 100.0 * (6.0 - 2.0) * 1e-4                          # b idle span
+        + 100.0 * (5.0 + RELEASE_OVERHEAD_S) * 1e-4           # b startup
+        + 50.0 * 1e-4 + 20.0 * 1e-4                           # task dyn
+    )
+    assert g == pytest.approx(expected)
+    # transfer billed at fleet-mean rate over the makespan
+    g2 = carbon_footprint_g(sig, [always_on, batch], windows,
+                            transfer_j=1000.0)
+    assert g2 == pytest.approx(expected + 1000.0 * 1e-4)
+    # no executed records -> zero footprint
+    assert carbon_footprint_g(sig, [always_on], []) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Deferral queue (temporal shifting)
+# ---------------------------------------------------------------------------
+
+def _cliff_signal(high=500.0, low=100.0, drop_at=40.0):
+    """Dirty grid until ``drop_at``, clean after — every window before the
+    cliff wants to defer past it."""
+    tr = CarbonTrace([0.0, drop_at, drop_at + 1.0, 10_000.0],
+                     [high, high, low, low])
+    return CarbonIntensitySignal({"default": tr})
+
+
+def _engine(sig, eps=None, **kw):
+    eps = eps or synthetic_edp_workload(n_tasks=1).endpoints
+    kw.setdefault("policy", "carbon_mhra")
+    kw.setdefault("window_s", 5.0)
+    kw.setdefault("max_batch", 512)
+    return OnlineEngine(eps, None, carbon=sig, **kw)
+
+
+def test_deferral_requires_signal():
+    eps = synthetic_edp_workload(n_tasks=1).endpoints
+    with pytest.raises(ValueError, match="carbon signal"):
+        OnlineEngine(eps, None, defer_horizon_s=60.0)
+
+
+def test_deferral_shifts_tasks_and_sets_not_before():
+    eng = _engine(_cliff_signal(), defer_horizon_s=100.0)
+    for i in range(4):
+        eng.submit(TaskSpec(id=f"t{i}", fn="graph_bfs"), when=0.0)
+    assert eng.flush() is None          # whole window deferred
+    assert len(eng.deferred) == 4
+    assert not eng.pending
+    windows = eng.drain()
+    assert windows, "deferred tasks must eventually run"
+    assert not eng.deferred and not eng.pending
+    release = 41.0                      # the post-cliff breakpoint
+    for w in windows:
+        for t in w.tasks:
+            assert t.not_before >= release
+            start, _ = w.schedule.timeline[t.id]
+            assert start >= release
+    assert eng.summary().deferred == 4
+
+
+def test_deferral_queue_is_bounded_and_defers_once():
+    eng = _engine(_cliff_signal(), defer_horizon_s=100.0, defer_max=2)
+    for i in range(5):
+        eng.submit(TaskSpec(id=f"t{i}", fn="graph_bfs"), when=0.0)
+    w = eng.flush()
+    # 2 deferred (queue bound), 3 placed immediately
+    assert len(eng.deferred) == 2
+    assert w is not None and len(w.tasks) == 3
+    eng.drain()
+    # released tasks carry the defer-once mark and never re-enter the queue
+    assert len(eng._deferred_ids) == 2
+    assert not eng.deferred
+
+
+def test_deferral_respects_deadline_slack():
+    eng = _engine(_cliff_signal(), defer_horizon_s=100.0)
+    tight = TaskSpec(id="tight", fn="graph_bfs", deadline=5.0)
+    slack = TaskSpec(id="slack", fn="graph_bfs", deadline=1e6)
+    eng.submit(tight, when=0.0)
+    eng.submit(slack, when=0.0)
+    w = eng.flush()
+    # the no-slack task runs now; the slack task waits for the clean window
+    assert w is not None and [t.id for t in w.tasks] == ["tight"]
+    assert [t.id for _, _, t in eng.deferred] == ["slack"]
+    eng.drain()
+
+
+def test_deferral_no_defer_when_grid_only_gets_dirtier():
+    # rising intensity: min over the horizon is "now", so nothing defers
+    tr = CarbonTrace([0.0, 1000.0], [100.0, 900.0])
+    eng = _engine(CarbonIntensitySignal({"default": tr}),
+                  defer_horizon_s=100.0)
+    eng.submit(TaskSpec(id="t0", fn="graph_bfs"), when=0.0)
+    w = eng.flush()
+    assert w is not None and len(w.tasks) == 1
+    assert not eng.deferred
+
+
+def test_deferral_dag_interplay_keeps_edges_honored():
+    dag = moldesign_dag_workload(waves=2, docks_per_wave=6, sims_per_wave=6,
+                                 infers_per_wave=8, seed=0)
+    sig = table1_carbon_signal(seed=0, period_s=600.0)
+    run, windows = run_policy(dag, "carbon_mhra", alpha=0.3, carbon=sig,
+                              defer_horizon_s=120.0, return_windows=True)
+    edges = verify_dag_order(windows)
+    assert edges > 0
+    assert run.carbon_g is not None and run.carbon_g > 0
+
+
+def test_deferral_drain_terminates_with_sim_backend():
+    trace = synthetic_edp_workload(n_tasks=24, seed=0)
+    run = run_policy(trace, "carbon_mhra", carbon=_cliff_signal(),
+                     defer_horizon_s=100.0)
+    assert run.tasks == 24
+    assert run.deferred > 0             # the cliff made deferral fire
+
+
+# ---------------------------------------------------------------------------
+# Evaluation integration + report rendering
+# ---------------------------------------------------------------------------
+
+def test_evaluate_trace_carbon_rows_and_payload():
+    trace = synthetic_edp_workload(n_tasks=48, arrival="diurnal", seed=0,
+                                   period_s=600.0, peak_rate_hz=0.16,
+                                   trough_rate_hz=0.01)
+    sig = table1_carbon_signal(seed=0, period_s=600.0)
+    res = evaluate_trace(trace, policies=("mhra", "carbon_mhra"),
+                         include_single_sites=False, carbon=sig,
+                         defer_horizon_s=120.0)
+    for r in res.rows:
+        assert r.carbon_g is not None and r.carbon_g > 0
+        assert r.cdp == pytest.approx(r.carbon_g * r.makespan_s)
+    payload = res.to_payload()
+    row = payload["rows"][0]
+    assert row["carbon_g"] == res.rows[0].carbon_g
+    assert row["cdp"] == res.rows[0].cdp
+    # carbon-blind runs keep None columns
+    res2 = evaluate_trace(trace, policies=("mhra",),
+                          include_single_sites=False)
+    assert res2.rows[0].carbon_g is None
+    assert res2.rows[0].cdp is None
+
+
+def test_eval_text_report_carbon_columns_conditional():
+    trace = synthetic_edp_workload(n_tasks=24, seed=0)
+    plain = evaluate_trace(trace, policies=("mhra",),
+                           include_single_sites=False)
+    assert "gCO2" not in eval_text_report(plain)
+    sig = table1_carbon_signal(seed=0, period_s=600.0)
+    carbon = evaluate_trace(trace, policies=("mhra",),
+                            include_single_sites=False, carbon=sig)
+    txt = eval_text_report(carbon)
+    assert "gCO2" in txt and "CDP" in txt

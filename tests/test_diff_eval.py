@@ -1,0 +1,117 @@
+"""benchmarks/diff_eval.py: regression orientation per metric, warn/fail
+thresholds, new/removed rows, markdown rendering, and the CLI exit code."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.diff_eval import (  # noqa: E402
+    FAIL,
+    OK,
+    WARN,
+    diff_payloads,
+    main,
+    render_markdown,
+)
+
+
+def _payload(edp=100.0, greenup=1.0, carbon_g=None, policy="mhra",
+             workload="synthetic"):
+    row = {"policy": policy, "edp": edp, "greenup": greenup,
+           "speedup": 1.0, "powerup": 1.0, "carbon_g": carbon_g,
+           "cdp": None}
+    return {"workloads": [{"workload": workload, "rows": [row]}]}
+
+
+def test_unchanged_metrics_are_ok():
+    rows, worst = diff_payloads(_payload(), _payload())
+    assert worst == OK
+    assert all(r.status == OK for r in rows)
+    # carbon_g None on both sides: not compared
+    assert all(r.metric != "carbon_g" for r in rows)
+
+
+def test_edp_regression_direction_and_thresholds():
+    prev = _payload(edp=100.0)
+    # 5% higher EDP = worse -> WARN at the 2/10 defaults
+    rows, worst = diff_payloads(prev, _payload(edp=105.0))
+    assert worst == WARN
+    (edp_row,) = [r for r in rows if r.metric == "edp"]
+    assert edp_row.regression_pct == pytest.approx(5.0)
+    # 15% higher -> FAIL
+    _, worst = diff_payloads(prev, _payload(edp=115.0))
+    assert worst == FAIL
+    # 15% *lower* EDP is an improvement -> OK (negative regression)
+    rows, worst = diff_payloads(prev, _payload(edp=85.0))
+    assert worst == OK
+    (edp_row,) = [r for r in rows if r.metric == "edp"]
+    assert edp_row.regression_pct == pytest.approx(-15.0)
+
+
+def test_gpsup_regression_is_inverted():
+    # greenup *dropping* 20% is the regression
+    rows, worst = diff_payloads(_payload(greenup=1.0), _payload(greenup=0.8))
+    assert worst == FAIL
+    (g,) = [r for r in rows if r.metric == "greenup"]
+    assert g.regression_pct == pytest.approx(20.0)
+    # greenup rising is an improvement
+    _, worst = diff_payloads(_payload(greenup=1.0), _payload(greenup=1.3))
+    assert worst == OK
+
+
+def test_carbon_metric_compared_when_present():
+    rows, worst = diff_payloads(_payload(carbon_g=10.0),
+                                _payload(carbon_g=11.2))
+    (c,) = [r for r in rows if r.metric == "carbon_g"]
+    assert c.regression_pct == pytest.approx(12.0)
+    assert worst == FAIL
+
+
+def test_new_and_removed_rows_never_fail():
+    prev = _payload(policy="mhra")
+    curr = {"workloads": [{"workload": "synthetic", "rows": [
+        {"policy": "mhra", "edp": 100.0, "greenup": 1.0, "speedup": 1.0,
+         "powerup": 1.0},
+        {"policy": "carbon_mhra", "edp": 90.0, "greenup": 1.1, "speedup": 1.0,
+         "powerup": 1.1},
+    ]}]}
+    rows, worst = diff_payloads(prev, curr)
+    assert worst == OK
+    assert any(r.policy == "carbon_mhra" and r.status == "new" for r in rows)
+    # removed policy likewise only annotates
+    rows, worst = diff_payloads(curr, prev)
+    assert worst == OK
+    assert any(r.policy == "carbon_mhra" and r.status == "removed"
+               for r in rows)
+    # whole new workload
+    rows, worst = diff_payloads(prev, _payload(workload="dag"))
+    assert worst == OK
+    assert {r.status for r in rows} >= {"new", "removed"}
+
+
+def test_thresholds_validated():
+    with pytest.raises(ValueError, match="warn_pct"):
+        diff_payloads(_payload(), _payload(), warn_pct=20.0, fail_pct=10.0)
+
+
+def test_render_markdown_table():
+    rows, worst = diff_payloads(_payload(edp=100.0), _payload(edp=105.0))
+    md = render_markdown(rows, worst, 2.0, 10.0)
+    assert "| workload | policy | metric |" in md
+    assert "WARN" in md and "synthetic" in md and "edp" in md
+    assert "+5.00%" in md
+
+
+def test_cli_exit_codes_and_summary(tmp_path):
+    prev, curr = tmp_path / "prev.json", tmp_path / "curr.json"
+    prev.write_text(json.dumps(_payload(edp=100.0)))
+    summary = tmp_path / "summary.md"
+    # OK run exits 0 and appends the table
+    curr.write_text(json.dumps(_payload(edp=101.0)))
+    assert main([str(prev), str(curr), "--summary", str(summary)]) == 0
+    assert "Evaluation trend" in summary.read_text()
+    # >10% regression exits 1
+    curr.write_text(json.dumps(_payload(edp=120.0)))
+    assert main([str(prev), str(curr)]) == 1
