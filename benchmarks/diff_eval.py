@@ -1,12 +1,25 @@
-"""Diff two ``BENCH_eval.json`` payloads and flag metric regressions.
+"""Diff ``BENCH_eval.json`` payloads and flag metric regressions.
 
-CI's ``eval-trend`` job feeds it the previous successful main-branch
-run's artifact and the current run's output:
+Two modes:
+
+**Pairwise** — CI-style previous-vs-current comparison:
 
     python benchmarks/diff_eval.py prev/BENCH_eval.json BENCH_eval.json \
         --warn-pct 2 --fail-pct 10 --summary "$GITHUB_STEP_SUMMARY"
 
-Per (workload, policy) row it compares EDP, the GPS-UP ratios
+**Rolling history** — compare the current run against the *median of the
+last N main-branch runs* and append it to the history file (created if
+missing, pruned to ``--keep`` entries):
+
+    python benchmarks/diff_eval.py --history BENCH_eval_history.json \
+        BENCH_eval.json --warn-pct 2 --fail-pct 10
+
+The median baseline is what makes slow drifts visible: a metric creeping
++1.5% per run never trips a previous-run diff (each step is inside the
+warn band), but after a few runs it sits >2% above the rolling median
+and starts warning.
+
+Per (workload, policy) row both modes compare EDP, the GPS-UP ratios
 (greenup/speedup/powerup), and — when present — gCO2 and the
 carbon-delay product, each with its own "which direction is worse"
 orientation.  A regression beyond ``--warn-pct`` prints WARN, beyond
@@ -14,8 +27,9 @@ orientation.  A regression beyond ``--warn-pct`` prints WARN, beyond
 only one side are reported as new/removed but never fail the gate —
 adding a policy must not break CI.
 
-The module is import-safe (``diff_payloads``/``render_markdown``) so the
-tier-1 suite exercises the comparison logic directly.
+The module is import-safe (``diff_payloads``/``render_markdown``/
+``snapshot``/``history_baseline``/``update_history``) so the tier-1
+suite exercises the comparison logic directly.
 """
 from __future__ import annotations
 
@@ -23,6 +37,7 @@ import argparse
 import dataclasses
 import json
 import pathlib
+import statistics
 import sys
 
 # metric -> lower_is_better (EDP/gCO2/CDP shrink when things improve;
@@ -104,6 +119,68 @@ def diff_payloads(prev: dict, curr: dict, warn_pct: float = 2.0,
     return out, worst
 
 
+# ---------------------------------------------------------------------------
+# Rolling history (eval-trend's slow-drift detector)
+# ---------------------------------------------------------------------------
+
+
+def snapshot(payload: dict, meta: dict | None = None) -> dict:
+    """Compress one BENCH_eval payload to the compared metrics only —
+    what a history entry stores."""
+    wls: dict[str, dict[str, dict[str, float]]] = {}
+    for wl, policies in _rows_by_policy(payload).items():
+        wls[wl] = {
+            policy: {
+                m: row[m] for m in METRICS
+                if row.get(m) is not None
+            }
+            for policy, row in policies.items()
+        }
+    return {"meta": meta or {}, "workloads": wls}
+
+
+def history_baseline(history: dict) -> dict | None:
+    """Per-(workload, policy, metric) *median* over the history entries,
+    shaped like a BENCH_eval payload so :func:`diff_payloads` can consume
+    it directly.  None with an empty history."""
+    entries = history.get("entries", [])
+    if not entries:
+        return None
+    acc: dict[str, dict[str, dict[str, list[float]]]] = {}
+    for e in entries:
+        for wl, policies in e.get("workloads", {}).items():
+            for policy, metrics in policies.items():
+                slot = acc.setdefault(wl, {}).setdefault(policy, {})
+                for m, v in metrics.items():
+                    slot.setdefault(m, []).append(v)
+    return {
+        "workloads": [
+            {
+                "workload": wl,
+                "rows": [
+                    {"policy": policy,
+                     **{m: statistics.median(vs) for m, vs in metrics.items()}}
+                    for policy, metrics in policies.items()
+                ],
+            }
+            for wl, policies in acc.items()
+        ]
+    }
+
+
+def update_history(history: dict | None, payload: dict,
+                   meta: dict | None = None, keep: int = 10) -> dict:
+    """Append the current payload's snapshot and prune to the last
+    ``keep`` entries (oldest dropped first)."""
+    if keep <= 0:
+        raise ValueError(f"keep must be positive, got {keep}")
+    history = dict(history or {})
+    entries = list(history.get("entries", []))
+    entries.append(snapshot(payload, meta=meta))
+    history["entries"] = entries[-keep:]
+    return history
+
+
 def render_markdown(rows: list[DiffRow], worst: str, warn_pct: float,
                     fail_pct: float) -> str:
     """GitHub-step-summary table: every compared metric, worst first."""
@@ -132,18 +209,60 @@ def render_markdown(rows: list[DiffRow], worst: str, warn_pct: float,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("previous", help="previous run's BENCH_eval.json")
-    ap.add_argument("current", help="current run's BENCH_eval.json")
+    ap.add_argument("files", nargs="+",
+                    help="pairwise: PREVIOUS CURRENT; with --history: "
+                         "CURRENT only")
+    ap.add_argument("--history", default=None,
+                    help="rolling-history JSON: diff CURRENT against the "
+                         "median of its entries, then append CURRENT and "
+                         "write it back (created if missing)")
+    ap.add_argument("--keep", type=int, default=10,
+                    help="history entries to retain (default 10)")
+    ap.add_argument("--meta", default=None,
+                    help="free-form run label stored with the history entry")
     ap.add_argument("--warn-pct", type=float, default=2.0)
     ap.add_argument("--fail-pct", type=float, default=10.0)
     ap.add_argument("--summary", default=None,
                     help="append the markdown table to this file "
                          "(e.g. $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args(argv)
-    prev = json.loads(pathlib.Path(args.previous).read_text())
-    curr = json.loads(pathlib.Path(args.current).read_text())
-    rows, worst = diff_payloads(prev, curr, args.warn_pct, args.fail_pct)
-    md = render_markdown(rows, worst, args.warn_pct, args.fail_pct)
+
+    if args.history is not None:
+        if len(args.files) != 1:
+            ap.error("--history takes exactly one positional (CURRENT)")
+        curr = json.loads(pathlib.Path(args.files[0]).read_text())
+        hist_path = pathlib.Path(args.history)
+        history = (
+            json.loads(hist_path.read_text()) if hist_path.exists() else {}
+        )
+        prev = history_baseline(history)
+        n_runs = len(history.get("entries", []))
+        if prev is None:
+            rows, worst = [], OK
+            md = (f"## Evaluation trend — no history yet\n\n"
+                  f"Started {hist_path.name}; future runs diff against the "
+                  f"rolling median of up to {args.keep} runs.\n")
+        else:
+            rows, worst = diff_payloads(curr=curr, prev=prev,
+                                        warn_pct=args.warn_pct,
+                                        fail_pct=args.fail_pct)
+            md = render_markdown(rows, worst, args.warn_pct, args.fail_pct)
+            md = md.replace(
+                "vs previous main run",
+                f"vs rolling median of {n_runs} run(s)", 1,
+            )
+        history = update_history(history, curr,
+                                 meta={"label": args.meta} if args.meta else None,
+                                 keep=args.keep)
+        hist_path.parent.mkdir(parents=True, exist_ok=True)
+        hist_path.write_text(json.dumps(history, indent=2) + "\n")
+    else:
+        if len(args.files) != 2:
+            ap.error("pairwise mode takes PREVIOUS CURRENT")
+        prev = json.loads(pathlib.Path(args.files[0]).read_text())
+        curr = json.loads(pathlib.Path(args.files[1]).read_text())
+        rows, worst = diff_payloads(prev, curr, args.warn_pct, args.fail_pct)
+        md = render_markdown(rows, worst, args.warn_pct, args.fail_pct)
     print(md)
     if args.summary:
         with open(args.summary, "a") as f:

@@ -12,9 +12,19 @@ Three sections, all emitted into ``BENCH_scheduler.json``:
   assignments, objectives equal to ``rtol=1e-12`` (bitwise in practice).
 * **attribution** — windowed attribution throughput (tasks/s) of the
   vectorized matrix pipeline vs the legacy per-task sample-object loop.
+* **wide_dag** — a barrier-style DAG campaign (stages of equal-width
+  fan-out) streamed through the *online engine* (planner-only), delta vs
+  soa under epoch-batched vs exact per-child DAG promotion.  Exact
+  promotion hands every promoted child a distinct ``not_before``, which
+  fragments the SoA run memoization (one full vectorized pass per task);
+  epoch promotion releases each stage with one shared floor, so the
+  stage coalesces back into memo runs.  Memo hit/miss counts per cell
+  come from ``scheduler.MEMO_STATS``.
 
 Acceptance: soa >= 3x faster than delta at >= 16k tasks; delta remains
-bitwise-identical to the seed clone engine.
+bitwise-identical to the seed clone engine; on the wide-DAG campaign at
+>= 32k tasks, soa under epoch promotion is >= 2x faster than delta
+(placement time) and assignment-identical to it.
 
 CLI::
 
@@ -33,16 +43,26 @@ import time
 import numpy as np
 
 from repro.core.endpoint import scaled_testbed, table1_testbed
+from repro.core.engine import OnlineEngine
 from repro.core.executor import attribute_window
 from repro.core.power_model import EnergyAttributor, LinearPowerModel
 from repro.core.predictor import TaskProfileStore
-from repro.core.scheduler import TaskSpec, cluster_mhra, mhra, round_robin
+from repro.core.scheduler import (
+    MEMO_STATS,
+    TaskSpec,
+    cluster_mhra,
+    mhra,
+    reset_memo_stats,
+    round_robin,
+)
 from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS, TestbedSim
 from repro.core.transfer import TransferModel
 
 # (n_tasks, testbed replicas): the fleet grows with the workload, the way
 # a federation serving more users runs more sites
 SCALING_SWEEP = ((1792, 1), (8192, 2), (16384, 4), (32768, 8), (102400, 8))
+# wide-DAG campaign: (n_tasks, testbed replicas, stages)
+WIDE_DAG_SWEEP = ((8192, 2, 8), (32768, 8, 8))
 PARITY_RTOL = 1e-12
 
 
@@ -171,6 +191,81 @@ def run_scaling(sweep=SCALING_SWEEP, repeats=2, clone_max=1792):
 
 
 # ---------------------------------------------------------------------------
+# Wide-DAG campaign: epoch-batched vs exact per-child DAG promotion
+# ---------------------------------------------------------------------------
+
+
+def _wide_dag_tasks(n_tasks: int, stages: int) -> list[TaskSpec]:
+    """``stages`` barrier-style stages of equal width; each stage-s task
+    depends on one (rotating) stage-(s-1) task.  Pure ordering edges
+    (``dep_bytes=0``) so the memoization effect is isolated: with data
+    payloads the per-parent transfer inputs would fragment runs by
+    producer endpoint, which is a workload property, not an engine one."""
+    width = n_tasks // stages
+    tasks = []
+    for s in range(stages):
+        fn = SEBS_FUNCTIONS[s % len(SEBS_FUNCTIONS)]
+        for j in range(width):
+            deps = (f"s{s - 1}_{(j + 1) % width}",) if s else ()
+            tasks.append(TaskSpec(id=f"s{s}_{j}", fn=fn, deps=deps))
+    return tasks
+
+
+def _wide_dag_cell(tasks, eps, store, engine, promotion):
+    reset_memo_stats()
+    # the whole campaign is declared before anything runs (max_batch
+    # larger than the trace), so every stage past the first reaches the
+    # scheduler through the ready-set's *promotion* path — the code under
+    # test — rather than resolving at submit time
+    eng = OnlineEngine(
+        eps, None, policy="mhra", alpha=0.5, window_s=1e9, max_batch=10**9,
+        store=store, monitoring=False, engine=engine, promotion=promotion,
+    )
+    t0 = time.perf_counter()
+    eng.submit_many(tasks, when=0.0)
+    eng.drain()
+    wall = time.perf_counter() - t0
+    s = eng.summary()
+    assignments = {
+        tid: ep for w in eng.windows for tid, ep in w.assignments.items()
+    }
+    return dict(
+        seconds=s.scheduling_s, wall_seconds=wall, tasks=s.tasks,
+        memo_hits=MEMO_STATS["hits"], memo_misses=MEMO_STATS["misses"],
+    ), assignments
+
+
+def run_wide_dag(sweep=WIDE_DAG_SWEEP):
+    """delta-epoch (reference) vs soa-epoch (the restored fast path) vs
+    soa-exact (the fragmented one); ``seconds`` is placement time only."""
+    rows = []
+    parity_ok = True
+    for n, mult, stages in sweep:
+        eps = scaled_testbed(mult)
+        tasks = _wide_dag_tasks(n, stages)
+        cells = (("delta", "epoch"), ("soa", "epoch"), ("soa", "exact"))
+        res, assigns = {}, {}
+        for engine, promotion in cells:
+            store = _seeded_store(eps)
+            r, a = _wide_dag_cell(tasks, eps, store, engine, promotion)
+            res[(engine, promotion)] = r
+            assigns[(engine, promotion)] = a
+        # epoch promotion must not change *what* gets placed where across
+        # engines (same floors, same scores, same argmins)
+        parity_ok = parity_ok and (
+            assigns[("delta", "epoch")] == assigns[("soa", "epoch")]
+        )
+        base = res[("delta", "epoch")]["seconds"]
+        for (engine, promotion), r in res.items():
+            rows.append(dict(
+                n_tasks=n, n_endpoints=len(eps), stages=stages,
+                engine=engine, promotion=promotion, **r,
+                speedup_vs_delta=base / max(r["seconds"], 1e-9),
+            ))
+    return rows, parity_ok
+
+
+# ---------------------------------------------------------------------------
 # Attribution throughput: vectorized pipeline vs legacy per-task loop
 # ---------------------------------------------------------------------------
 
@@ -252,10 +347,12 @@ def _run_all(args):
         sweep = ((args.tasks, 1),)
         t4_sizes = (args.tasks,)
         attr_tasks, attr_ref = min(args.tasks, 1024), min(args.tasks, 256)
+        wd_sweep = ((max(args.tasks - args.tasks % 4, 4), 1, 4),)
     else:
         sweep = SCALING_SWEEP
         t4_sizes = (256, 1792)
         attr_tasks, attr_ref = 4096, 512
+        wd_sweep = WIDE_DAG_SWEEP
 
     t4_rows, t4_parity = run(sizes=t4_sizes, repeats=args.repeats)
     print(f"{'strategy':<14}{'tasks':>7}{'time_s':>10}{'ms/task':>9}")
@@ -280,6 +377,24 @@ def _run_all(args):
           f"soa>=3x at >=16k tasks: "
           f"{'OK' if gate_ok else 'FAILED'} {[f'{s:.1f}x' for s in big_soa]}\n")
 
+    wd_rows, wd_parity = run_wide_dag(wd_sweep)
+    print(f"{'n_tasks':>8}{'eps':>5}{'engine':>8}{'promo':>7}{'sched_s':>10}"
+          f"{'memo hit/miss':>16}{'vs delta':>9}")
+    for r in wd_rows:
+        print(f"{r['n_tasks']:>8}{r['n_endpoints']:>5}{r['engine']:>8}"
+              f"{r['promotion']:>7}{r['seconds']:>10.3f}"
+              f"{r['memo_hits']:>9}/{r['memo_misses']:<6}"
+              f"{r['speedup_vs_delta']:>8.2f}x")
+    big_wd = [r["speedup_vs_delta"] for r in wd_rows
+              if r["engine"] == "soa" and r["promotion"] == "epoch"
+              and r["n_tasks"] >= 32768]
+    wd_gate_ok = all(s >= 2.0 for s in big_wd) if big_wd else True
+    print(f"wide-dag parity (soa-epoch == delta-epoch assignments): "
+          f"{'OK' if wd_parity else 'FAILED'}; "
+          f"epoch soa>=2x delta at >=32k: "
+          f"{'OK' if wd_gate_ok else 'FAILED'} "
+          f"{[f'{s:.1f}x' for s in big_wd]}\n")
+
     attr = run_attribution(attr_tasks, attr_ref)
     print(f"attribution: {attr['vectorized_tasks_per_s']:,.0f} tasks/s "
           f"vectorized vs {attr['legacy_tasks_per_s']:,.0f} legacy "
@@ -288,25 +403,34 @@ def _run_all(args):
     payload = dict(
         table4=t4_rows,
         scaling=sc_rows,
+        wide_dag=wd_rows,
         attribution=attr,
         parity=dict(
             table4_ok=t4_parity, scaling_ok=sc_parity,
             scaling_objectives_bitwise=sc_bitwise, rtol=PARITY_RTOL,
+            wide_dag_ok=wd_parity,
         ),
         gates=dict(soa_3x_at_16k=gate_ok,
-                   soa_speedups_at_16k_plus=big_soa),
+                   soa_speedups_at_16k_plus=big_soa,
+                   wide_dag_epoch_soa_2x_at_32k=wd_gate_ok,
+                   wide_dag_epoch_soa_speedups=big_wd),
     )
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {args.out}")
 
-    # smoke cells are too small for the speedup gate; parity always counts
-    ok = t4_parity and sc_parity and (gate_ok or args.tasks is not None)
+    # smoke cells are too small for the speedup gates; parity always counts
+    ok = (t4_parity and sc_parity and wd_parity
+          and ((gate_ok and wd_gate_ok) or args.tasks is not None))
     rows = []
     for r in t4_rows:
         rows.append((f"table4_{r['strategy']}_{r['n_tasks']}",
                      r["seconds"] * 1e6, f"ms_per_task={r['ms_per_task']:.3f}"))
     for r in sc_rows:
         rows.append((f"scaling_{r['engine']}_{r['n_tasks']}_{r['n_endpoints']}ep",
+                     r["seconds"] * 1e6,
+                     f"vs_delta={r['speedup_vs_delta']:.2f}x"))
+    for r in wd_rows:
+        rows.append((f"wide_dag_{r['engine']}_{r['promotion']}_{r['n_tasks']}",
                      r["seconds"] * 1e6,
                      f"vs_delta={r['speedup_vs_delta']:.2f}x"))
     return rows, ok

@@ -282,6 +282,34 @@ class CarbonIntensitySignal:
             traces[name] = CarbonTrace(ts, vals, period_s=period_s)
         return cls(traces, regions=regions)
 
+    def with_forecast_noise(self, sigma: float, seed: int = 0
+                            ) -> "CarbonIntensitySignal":
+        """The signal as a *forecast* would see it: every breakpoint's
+        intensity perturbed by seeded multiplicative Gaussian noise of
+        relative width ``sigma`` (floored at 1 gCO2/kWh so traces stay
+        valid).  Decision layers (placement snapshots, the deferral
+        queue's trough search) should consume the noisy view while
+        billing (``evaluate.carbon_footprint_g``) integrates the true
+        signal — the gap between signal-at-decision and signal-at-billing
+        is exactly the forecast error.  ``sigma=0`` returns ``self``
+        unchanged; traces are perturbed in sorted-name order, so the same
+        ``(sigma, seed)`` always yields the same forecast."""
+        if sigma < 0:
+            raise ValueError(f"sigma must be non-negative, got {sigma}")
+        if sigma == 0.0:
+            return self
+        rng = np.random.default_rng(seed)
+        traces = {}
+        for name in sorted(self.traces):
+            t = self.traces[name]
+            noisy = t.gco2_per_kwh * rng.normal(
+                1.0, sigma, t.gco2_per_kwh.shape
+            )
+            traces[name] = CarbonTrace(
+                t.times.copy(), np.maximum(noisy, 1.0), t.period_s
+            )
+        return CarbonIntensitySignal(traces, regions=self.regions)
+
     # -- persistence ---------------------------------------------------------
     def to_payload(self) -> dict:
         return {

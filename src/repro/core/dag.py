@@ -1,0 +1,274 @@
+"""Planning graph over the online engine's DAG: what a policy may *see*
+beyond the flat batch it is placing.
+
+GreenFaaS's online engine resolves dependencies before a policy runs, so
+until now policies scored one arrival window at a time with no knowledge
+of the downstream DAG.  :class:`DAGView` closes that gap: the engine
+registers every submitted task (including ones still parked in the
+ready-set) and every completion, and the view derives the planning
+quantities lookahead policies score with:
+
+- **upward rank** ``up_rank(t)`` — critical-path time from ``t`` through
+  its deepest descendant chain (HEFT's rank_u over fleet-mean runtimes),
+  and ``up_rest(t) = up_rank(t) - rt(t)``, the critical work *below* t.
+- **downward rank** ``down_rank(t)`` — longest-path time from any source
+  to ``t``'s earliest possible start.
+- **descendant dep-bytes mass** ``desc_bytes(t)`` — total edge payload
+  reachable from ``t`` (path-weighted: a diamond's shared descendant is
+  pulled once per incoming path, which is exactly how many transfers its
+  parents' placements influence).
+- **per-edge producer endpoints** ``producer(t)`` — where a completed
+  task's output physically lives, recorded at completion time.
+
+Ranks are recomputed lazily (one Kahn pass over the known graph) whenever
+the graph or the runtime estimates were invalidated, so engines that
+never query the view pay only dict appends per submission.
+
+:class:`LookaheadWeights` is the per-placement-call snapshot the greedy
+engines consume (the :class:`~repro.core.carbon.CarbonWeights` analogue):
+per-task rank weights and outbound-payload energies plus per-endpoint
+mean hop distances, frozen so engine run-memoization stays valid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.core.transfer import E_INC_J_PER_BYTE
+
+
+class DAGView:
+    """Incrementally built view of everything submitted to the engine.
+
+    ``runtime`` maps a function name to its fleet-mean predicted runtime
+    in seconds (the engine wires its profile store in); rank computations
+    cache one value per function per refresh.  ``add_task`` is idempotent
+    per task id; edges to parents that were never registered are kept and
+    become live once the parent arrives (the trace validator guarantees
+    topological submission, so in practice parents always precede).
+
+    Completed tasks stay in the graph (their producer endpoints remain
+    queryable and ``rank_scale`` keeps the campaign-wide normalizer
+    stable), so a rank refresh is O(total submitted); pruning finished
+    subgraphs for very long streaming campaigns is a ROADMAP follow-on.
+    """
+
+    def __init__(self, runtime: Callable[[str], float] | None = None):
+        self._runtime = runtime or (lambda fn: 1.0)
+        self._fn: dict[str, str] = {}
+        self._parents: dict[str, tuple[str, ...]] = {}
+        self._children: dict[str, list[tuple[str, float]]] = {}
+        self._producers: dict[str, tuple[str, float]] = {}
+        self._edges = 0
+        self._dirty = True
+        self._up: dict[str, float] = {}
+        self._down: dict[str, float] = {}
+        self._mass: dict[str, float] = {}
+        self._out_bytes: dict[str, float] = {}
+        self._rt: dict[str, float] = {}
+        self._rank_scale = 1.0
+
+    # -- construction (engine side) ----------------------------------------
+    def add_task(self, task) -> None:
+        """Register a :class:`~repro.core.scheduler.TaskSpec` node and its
+        parent edges (child pulls ``task.dep_bytes`` from *each* parent)."""
+        if task.id in self._fn:
+            return
+        self._fn[task.id] = task.fn
+        self._parents[task.id] = tuple(task.deps)
+        self._children.setdefault(task.id, [])
+        for p in task.deps:
+            self._children.setdefault(p, []).append((task.id, task.dep_bytes))
+            self._edges += 1
+        self._dirty = True
+
+    def complete(self, task_id: str, endpoint: str, t_end: float) -> None:
+        """Record where a finished task's output lives (producer endpoint)
+        and when it materialized."""
+        self._producers[task_id] = (endpoint, t_end)
+
+    def invalidate(self) -> None:
+        """Force a rank recompute on next query (the engine calls this
+        after profile updates shift the runtime estimates)."""
+        self._dirty = True
+
+    # -- queries (policy side) ---------------------------------------------
+    def __len__(self) -> int:
+        return len(self._fn)
+
+    def __contains__(self, task_id: str) -> bool:
+        return task_id in self._fn
+
+    @property
+    def n_edges(self) -> int:
+        return self._edges
+
+    def has_edges(self) -> bool:
+        return self._edges > 0
+
+    def children(self, task_id: str) -> tuple[tuple[str, float], ...]:
+        """((child id, edge bytes), ...) — the task's direct consumers."""
+        return tuple(self._children.get(task_id, ()))
+
+    def parents(self, task_id: str) -> tuple[str, ...]:
+        return self._parents.get(task_id, ())
+
+    def producer(self, task_id: str) -> tuple[str, float] | None:
+        """(endpoint, t_end) for a completed task, else None."""
+        return self._producers.get(task_id)
+
+    def up_rank(self, task_id: str) -> float:
+        """Critical-path seconds from this task to its deepest descendant,
+        including the task's own fleet-mean runtime (HEFT rank_u)."""
+        self._refresh()
+        return self._up.get(task_id, 0.0)
+
+    def up_rest(self, task_id: str) -> float:
+        """Critical-path seconds strictly *below* this task — 0 for sinks."""
+        self._refresh()
+        up = self._up.get(task_id)
+        if up is None:
+            return 0.0
+        return up - self._rt[self._fn[task_id]]
+
+    def down_rank(self, task_id: str) -> float:
+        """Longest-path seconds from any source to this task's start."""
+        self._refresh()
+        return self._down.get(task_id, 0.0)
+
+    def desc_bytes(self, task_id: str) -> float:
+        """Path-weighted dep-bytes mass of the task's descendant subgraph:
+        ``sum over child edges (edge bytes + desc_bytes(child))``."""
+        self._refresh()
+        return self._mass.get(task_id, 0.0)
+
+    def out_bytes(self, task_id: str) -> float:
+        """Bytes the task's direct children will pull from wherever this
+        task lands — the data-gravity payload."""
+        self._refresh()
+        return self._out_bytes.get(task_id, 0.0)
+
+    @property
+    def rank_scale(self) -> float:
+        """max up_rank over the graph (>= its longest chain); rank weights
+        are normalized by it so the lookahead term stays O(makespan)."""
+        self._refresh()
+        return self._rank_scale
+
+    # -- one-pass recompute -------------------------------------------------
+    def _refresh(self) -> None:
+        if not self._dirty:
+            return
+        fns = self._fn
+        rt = {fn: float(self._runtime(fn)) for fn in set(fns.values())}
+        # Kahn topological order over the known nodes (edges to unknown
+        # parents are ignored until the parent is registered)
+        indeg = {
+            tid: sum(1 for p in self._parents[tid] if p in fns)
+            for tid in fns
+        }
+        order = [tid for tid, d in indeg.items() if d == 0]
+        head = 0
+        while head < len(order):
+            tid = order[head]
+            head += 1
+            for child, _ in self._children.get(tid, ()):  # noqa: B007
+                indeg[child] -= 1
+                if indeg[child] == 0:
+                    order.append(child)
+        # a cycle leaves its members out of `order`; they simply get no
+        # ranks (downstream .get() defaults apply) — the engine's drain
+        # deadlock check is where cycles actually get diagnosed
+        up: dict[str, float] = {}
+        mass: dict[str, float] = {}
+        out_b: dict[str, float] = {}
+        for tid in reversed(order):
+            best = 0.0
+            m = 0.0
+            ob = 0.0
+            for child, nbytes in self._children.get(tid, ()):
+                cu = up.get(child)
+                if cu is not None and cu > best:
+                    best = cu
+                m += nbytes + mass.get(child, 0.0)
+                ob += nbytes
+            up[tid] = rt[fns[tid]] + best
+            mass[tid] = m
+            out_b[tid] = ob
+        down: dict[str, float] = {}
+        for tid in order:
+            best = 0.0
+            for p in self._parents[tid]:
+                if p in fns:
+                    d = down[p] + rt[fns[p]]
+                    if d > best:
+                        best = d
+            down[tid] = best
+        self._up, self._down, self._mass, self._out_bytes = up, down, mass, out_b
+        self._rt = rt
+        self._rank_scale = max(max(up.values(), default=1.0), 1e-9)
+        self._dirty = False
+
+
+@dataclasses.dataclass(frozen=True)
+class LookaheadWeights:
+    """One placement call's lookahead view, frozen like ``CarbonWeights``.
+
+    ``tail_w`` maps task id -> normalized downstream criticality
+    (``up_rest / rank_scale``, 0 for sinks); ``out_j`` maps task id ->
+    the joules-per-hop cost of shipping its outputs to its children
+    (``out_bytes * E_INC_J_PER_BYTE``); ``hops_mean`` is the fleet-mean
+    hop distance *from* each endpoint (engine endpoint order) — the
+    expected per-byte escape cost of parking data there.  ``lam`` scales
+    the whole lookahead term; the greedy engines add
+
+        lam * ( alpha * (out_j_sum * hops_mean[e]) / SF1
+                + (1 - alpha) * sum_t tail_w[t] * end_t / SF2 )
+
+    to every candidate score, so critical tasks chase early finishes and
+    heavy producers park their outputs where children can pull cheaply.
+    """
+
+    tail_w: Mapping[str, float]
+    out_j: Mapping[str, float]
+    hops_mean: tuple[float, ...]
+    lam: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.lam < 0:
+            raise ValueError(f"lam must be non-negative, got {self.lam}")
+
+    @classmethod
+    def from_dag(
+        cls,
+        dag: DAGView,
+        tasks: Sequence,
+        endpoints: Sequence,
+        transfer,
+        lam: float = 1.0,
+    ) -> "LookaheadWeights | None":
+        """Snapshot the lookahead terms for one batch; returns ``None``
+        when no task in the batch has downstream structure (every weight
+        zero), so the caller can fall back to the bit-identical myopic
+        path."""
+        if not dag.has_edges():
+            return None
+        scale = dag.rank_scale
+        tail_w: dict[str, float] = {}
+        out_j: dict[str, float] = {}
+        any_weight = False
+        for t in tasks:
+            tw = dag.up_rest(t.id) / scale if t.id in dag else 0.0
+            oj = dag.out_bytes(t.id) * E_INC_J_PER_BYTE if t.id in dag else 0.0
+            tail_w[t.id] = tw
+            out_j[t.id] = oj
+            if tw > 0.0 or oj > 0.0:
+                any_weight = True
+        if not any_weight:
+            return None
+        names = [e.name for e in endpoints]
+        hm = []
+        for a in names:
+            others = [transfer.hops(a, b) for b in names if b != a]
+            hm.append(sum(others) / len(others) if others else 0.0)
+        return cls(tail_w, out_j, tuple(hm), lam)

@@ -28,6 +28,7 @@ import time
 from typing import Sequence
 
 from repro.core.carbon import CarbonIntensitySignal
+from repro.core.dag import DAGView
 from repro.core.database import TaskDB
 from repro.core.endpoint import EndpointSpec
 from repro.core.executor import attribute_window
@@ -84,13 +85,34 @@ class OnlineEngine:
 
     **DAG workloads.**  A task whose ``deps`` name uncompleted parents is
     parked in ``waiting`` instead of ``pending``; when its last parent
-    completes, the engine promotes it with ``not_before`` set to the
-    latest parent completion time (so no engine — and no simulated
-    dispatch — can start it earlier) and with one transfer input per
-    parent reading ``dep_bytes`` from the parent's *producing endpoint*.
-    ``drain`` keeps flushing until the whole DAG has run, and raises
-    ``RuntimeError`` if tasks remain waiting with no completable parent
-    (dependency cycle or a dep id that was never submitted).
+    completes, the engine promotes it with ``not_before`` raised to a
+    ready floor no earlier than every parent's completion (so no engine —
+    and no simulated dispatch — can start it earlier) and with one
+    transfer input per parent reading ``dep_bytes`` from the parent's
+    *producing endpoint*.  ``promotion`` picks the floor granularity:
+
+    - ``"epoch"`` (default): every task promoted by one pass shares a
+      single floor — the latest parent completion across the whole
+      promoted set (its *completion epoch*).  A wide DAG stage then
+      releases children with identical ``not_before``, which keeps them
+      inside one SoA run-memoization run (the floor is part of the memo
+      key) and restores O(1) scoring on wide stages.
+    - ``"exact"``: each child's floor is its own parents' latest
+      completion — the tightest correct floor, at the cost of distinct
+      floors fragmenting the SoA fast path.
+
+    Both are conservative (a floor only grows), so DAG edges are honored
+    either way.  ``drain`` keeps flushing until the whole DAG has run,
+    and raises ``RuntimeError`` if tasks remain waiting with no
+    completable parent (dependency cycle or a dep id that was never
+    submitted).
+
+    The engine also maintains a :class:`~repro.core.dag.DAGView` over
+    everything submitted (``self.dag``): nodes/edges on submission,
+    producer endpoints on completion.  Each window's
+    :class:`PolicyContext` exposes it, so DAG-aware policies
+    (``lookahead_mhra``) see critical-path ranks and data gravity for
+    tasks that haven't even left the ready-set yet.
 
     **Units & mutation semantics.**  All energies are joules, times are
     seconds (reports divide by 1e3 for kJ).  ``submit``/``tick``/``flush``
@@ -119,6 +141,7 @@ class OnlineEngine:
         defer_horizon_s: float = 0.0,
         defer_max: int = 256,
         defer_margin: float = 0.05,
+        promotion: str = "epoch",
     ):
         """``engine`` selects the scheduling backend for registry-name
         mhra/cluster_mhra/carbon_mhra policies ("delta" or "soa") and the
@@ -145,12 +168,18 @@ class OnlineEngine:
         remains, so a drain can never deadlock on the queue."""
         self.endpoints = list(endpoints)
         self.backend = backend
+        if promotion not in ("epoch", "exact"):
+            raise ValueError(
+                f"promotion must be 'epoch' or 'exact', got {promotion!r}"
+            )
+        self.promotion = promotion
         if isinstance(policy, PlacementPolicy):
             self.policy = policy
         elif policy == "single_site":
             self.policy = get_policy(policy, site=site)
         elif engine is not None and policy in ("mhra", "cluster_mhra",
-                                               "carbon_mhra"):
+                                               "carbon_mhra",
+                                               "lookahead_mhra"):
             self.policy = get_policy(policy, engine=engine)
         else:
             self.policy = get_policy(policy)
@@ -178,6 +207,7 @@ class OnlineEngine:
         self.windows: list[WindowResult] = []
         self.waiting: dict[str, TaskSpec] = {}       # id -> dep-blocked task
         self.completed: dict[str, tuple[str, float]] = {}  # id -> (ep, t_end)
+        self.dag = DAGView(runtime=self._runtime_estimate)
         self.carbon = carbon
         if defer_horizon_s > 0.0 and carbon is None:
             raise ValueError("defer_horizon_s needs a carbon signal")
@@ -199,6 +229,7 @@ class OnlineEngine:
         ``deps`` is parked until its parents complete (see class docs)."""
         when = self.clock if when is None else when
         self.clock = max(self.clock, when)
+        self.dag.add_task(task)
         if task.deps:
             if any(d not in self.completed for d in task.deps):
                 self.waiting[task.id] = task
@@ -211,12 +242,17 @@ class OnlineEngine:
             return self.flush()
         return None
 
-    def _resolve_deps(self, task: TaskSpec) -> TaskSpec:
+    def _resolve_deps(self, task: TaskSpec, floor: float | None = None
+                      ) -> TaskSpec:
         """Concretize a dep-bearing task whose parents have all completed:
-        ready floor = latest parent completion, plus one transfer input per
-        parent pulling ``dep_bytes`` from the endpoint that produced it."""
+        ready floor = latest parent completion (or the shared epoch
+        ``floor``, when given — never earlier than the parents), plus one
+        transfer input per parent pulling ``dep_bytes`` from the endpoint
+        that produced it."""
         parents = [self.completed[d] for d in task.deps]
         not_before = max(end for _, end in parents)
+        if floor is not None and floor > not_before:
+            not_before = floor
         inputs = task.inputs
         if task.dep_bytes > 0.0:
             inputs = inputs + tuple(
@@ -228,16 +264,25 @@ class OnlineEngine:
 
     def _promote_ready(self) -> int:
         """Move every waiting task whose parents have all completed into
-        the pending queue; returns the number promoted."""
+        the pending queue; returns the number promoted.  In ``"epoch"``
+        promotion mode the whole promoted set shares one ready floor —
+        the latest parent completion across the set — so a wide stage's
+        children carry identical ``not_before`` values and coalesce into
+        one SoA memoization run."""
         ready = [
             t for t in self.waiting.values()
             if all(d in self.completed for d in t.deps)
         ]
+        floor = None
+        if self.promotion == "epoch" and ready:
+            floor = max(
+                self.completed[d][1] for t in ready for d in t.deps
+            )
         for t in ready:
             del self.waiting[t.id]
             if self._first_pending_at is None:
                 self._first_pending_at = self.clock
-            self.pending.append(self._resolve_deps(t))
+            self.pending.append(self._resolve_deps(t, floor=floor))
         return len(ready)
 
     def submit_many(self, tasks: Sequence[TaskSpec], when: float | None = None
@@ -333,7 +378,8 @@ class OnlineEngine:
                 return None     # whole window shifted to a cleaner grid
 
         ctx = PolicyContext(self.endpoints, self.store, self.transfer,
-                            self.alpha, carbon=self.carbon, now=submitted_at)
+                            self.alpha, carbon=self.carbon, now=submitted_at,
+                            dag=self.dag)
         # placement previews must not start tasks before this window opened
         self.state.advance_to(submitted_at)
         t0 = time.perf_counter()
@@ -346,14 +392,18 @@ class OnlineEngine:
         if self.backend is not None:
             sim = self.backend.execute_window(assignments, tasks, now=submitted_at)
             attributed = self._learn(sim)
+            # profile updates moved the runtime estimates under the ranks
+            self.dag.invalidate()
             self.clock = max(self.clock, submitted_at + self.window_s)
             for rec in sim.records:
                 self.completed[rec.task_id] = (rec.endpoint, rec.t_end)
+                self.dag.complete(rec.task_id, rec.endpoint, rec.t_end)
         else:
             # planner-only mode: completion times from the schedule timeline
             for t in tasks:
                 _, end = schedule.timeline[t.id]
                 self.completed[t.id] = (assignments[t.id], end)
+                self.dag.complete(t.id, assignments[t.id], end)
         res = WindowResult(
             index=len(self.windows), submitted_at=submitted_at, tasks=tasks,
             schedule=schedule, assignments=assignments, scheduling_s=sched_s,

@@ -57,6 +57,10 @@ class PolicyRun:
     powerup: float | None = None
     carbon_g: float | None = None    # time-integrated gCO2 (carbon runs only)
     deferred: int = 0                # tasks time-shifted by the deferral queue
+    cp_speedup: float | None = None  # CP lower bound / makespan (<= 1)
+    deadline_misses: int = 0         # finite-deadline tasks finishing late
+    deadline_total: int = 0          # tasks carrying a finite deadline
+    edp_vs_mhra: float | None = None # this row's EDP / the mhra row's EDP
 
     @property
     def edp(self) -> float:
@@ -73,6 +77,14 @@ class PolicyRun:
     @property
     def power_w(self) -> float:
         return self.energy_j / self.makespan_s if self.makespan_s > 0 else 0.0
+
+    @property
+    def deadline_miss_rate(self) -> float | None:
+        """Fraction of finite-deadline tasks completing past their
+        deadline (None when the trace sets no deadlines)."""
+        if self.deadline_total == 0:
+            return None
+        return self.deadline_misses / self.deadline_total
 
 
 @dataclasses.dataclass
@@ -103,6 +115,7 @@ class EvalResult:
             d["edp"] = r.edp
             d["power_w"] = r.power_w
             d["cdp"] = r.cdp
+            d["deadline_miss_rate"] = r.deadline_miss_rate
             rows.append(d)
         return {
             "workload": self.workload,
@@ -252,6 +265,49 @@ def verify_dag_order(windows) -> int:
     return checked
 
 
+def critical_path_bound_s(trace: WorkloadTrace) -> float:
+    """DAG critical-path lower bound on the makespan: every task on its
+    fastest endpoint, unlimited cores, transfers and queues free — the
+    earliest any schedule could possibly finish the trace.  For flat
+    traces this degenerates to ``max(arrival + fastest runtime)``."""
+    names = {e.name for e in trace.endpoints}
+    rt_min = {
+        fn: min(rt for m, (rt, _) in trace.profiles[fn].items() if m in names)
+        for fn in trace.functions
+    }
+    done: dict[str, float] = {}
+    best = 0.0
+    for t, arr in zip(trace.tasks, trace.arrivals):
+        ready = float(arr)
+        for p in t.deps:
+            if done[p] > ready:
+                ready = done[p]
+        end = ready + rt_min[t.fn]
+        done[t.id] = end
+        if end > best:
+            best = end
+    return best
+
+
+def deadline_misses(trace: WorkloadTrace, windows) -> tuple[int, int]:
+    """(missed, total) over the trace's finite-deadline tasks, judged on
+    the *executed* records' completion times."""
+    deadlines = {
+        t.id: t.deadline for t in trace.tasks if t.deadline != np.inf
+    }
+    if not deadlines:
+        return 0, 0
+    missed = 0
+    for w in windows:
+        if w.sim is None:
+            continue
+        for rec in w.sim.records:
+            d = deadlines.get(rec.task_id)
+            if d is not None and rec.t_end > d:
+                missed += 1
+    return missed, len(deadlines)
+
+
 def run_policy(
     trace: WorkloadTrace,
     policy: str,
@@ -269,6 +325,8 @@ def run_policy(
     defer_horizon_s: float = 0.0,
     defer_max: int = 256,
     defer_margin: float = 0.05,
+    promotion: str = "epoch",
+    carbon_forecast: CarbonIntensitySignal | None = None,
 ):
     """Replay ``trace`` under one policy and collect metrics.
 
@@ -284,20 +342,32 @@ def run_policy(
     recorded on the row for *every* policy (carbon-blind ones included —
     that is the comparison), the signal is exposed to carbon-aware
     policies, and ``defer_horizon_s > 0`` arms the engine's temporal
-    deferral queue.
+    deferral queue.  ``carbon_forecast`` separates the signal *known at
+    decision time* from the signal *billed at execution time*: the
+    engine (placement + deferral) sees the forecast, while the footprint
+    integrates the true ``carbon`` signal — so forecast error degrades
+    deferral gains exactly as it would against a real grid.
+
+    ``promotion`` selects the engine's DAG ready-floor granularity
+    (``"epoch"``/``"exact"``, see :class:`OnlineEngine`); the row's
+    ``cp_speedup`` annotates how close the executed makespan came to the
+    trace's critical-path lower bound, and ``deadline_misses``/``_total``
+    count finite-deadline tasks that completed late.
     """
     sim = TestbedSim(
         trace.endpoints, profiles=trace.profiles, signatures=trace.signatures,
         seed=seed, runtime_noise=runtime_noise,
     )
     store = warm_store(sim, trace, n_obs=warm_obs)
-    greedy = ("mhra", "cluster_mhra", "carbon_mhra")
+    greedy = ("mhra", "cluster_mhra", "carbon_mhra", "lookahead_mhra")
     eng = OnlineEngine(
         trace.endpoints, sim, policy=policy, alpha=alpha, window_s=window_s,
         max_batch=max_batch, store=store, monitoring=monitoring, site=site,
         engine=engine if policy in greedy else None,
-        carbon=carbon, defer_horizon_s=defer_horizon_s,
+        carbon=carbon_forecast if carbon_forecast is not None else carbon,
+        defer_horizon_s=defer_horizon_s,
         defer_max=defer_max, defer_margin=defer_margin,
+        promotion=promotion,
     )
     windows = trace.replay_into(eng)
     s = eng.summary()
@@ -316,6 +386,8 @@ def run_policy(
         carbon_g = carbon_footprint_g(
             carbon, trace.endpoints, windows, transfer_j=float(transfer_j)
         )
+    missed, total = deadline_misses(trace, windows)
+    cp_bound = critical_path_bound_s(trace)
     run = PolicyRun(
         policy=label, engine=engine_label,
         energy_j=float(e_tot), makespan_s=float(c_max),
@@ -325,6 +397,8 @@ def run_policy(
         per_endpoint_j=per_endpoint_energy(eng.state),
         placements=placements, assignments=assignments,
         carbon_g=carbon_g, deferred=s.deferred,
+        cp_speedup=cp_bound / float(c_max) if c_max > 0 else None,
+        deadline_misses=missed, deadline_total=total,
     )
     if return_windows:
         return run, windows
@@ -351,7 +425,9 @@ def evaluate_trace(
     ``carbon`` annotates every row with its time-integrated gCO2;
     ``defer_horizon_s`` arms temporal shifting for the carbon-aware
     ``carbon_mhra`` policy only, so carbon-blind rows stay bit-identical
-    to a carbon-free evaluation."""
+    to a carbon-free evaluation.  When an ``mhra`` row is present, every
+    row additionally gets ``edp_vs_mhra`` — its EDP relative to the
+    myopic greedy, the lookahead-vs-myopic comparison column."""
     rows: list[PolicyRun] = []
     if include_single_sites:
         for ep in trace.endpoints:
@@ -367,9 +443,12 @@ def evaluate_trace(
         ))
     sites = [r for r in rows if r.policy.startswith("site:")]
     base = min(sites, key=lambda r: r.edp) if sites else rows[0]
+    myopic = next((r for r in rows if r.policy == "mhra"), None)
     for r in rows:
         g, s, u = gpsup(base.energy_j, base.makespan_s, r.energy_j, r.makespan_s)
         r.greenup, r.speedup, r.powerup = g, s, u
+        if myopic is not None and myopic.edp > 0:
+            r.edp_vs_mhra = r.edp / myopic.edp
     return EvalResult(
         workload=trace.name, n_tasks=len(trace), alpha=alpha,
         rows=rows, baseline=base.policy,

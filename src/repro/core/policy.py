@@ -28,6 +28,7 @@ from typing import ClassVar, Sequence
 
 from repro.core import scheduler as sched
 from repro.core.carbon import CarbonIntensitySignal, CarbonWeights
+from repro.core.dag import DAGView, LookaheadWeights
 from repro.core.endpoint import EndpointSpec
 from repro.core.predictor import TaskProfileStore
 from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
@@ -56,6 +57,13 @@ class PolicyContext:
     placed: carbon-aware policies snapshot per-endpoint g/J rates from
     the signal at ``now`` (the arrival-window open time).  Both are
     optional — carbon-blind policies ignore them.
+
+    ``dag`` is the engine's live planning graph
+    (:class:`~repro.core.dag.DAGView`): critical-path ranks, descendant
+    dep-bytes mass, and producer endpoints over every *submitted* task —
+    including ones still parked in the ready-set.  DAG-aware policies
+    (``lookahead_mhra``) snapshot per-task weights from it; myopic
+    policies never touch it and pay nothing for it.
     """
     endpoints: Sequence[EndpointSpec]
     store: TaskProfileStore
@@ -63,6 +71,7 @@ class PolicyContext:
     alpha: float = 0.5
     carbon: CarbonIntensitySignal | None = None
     now: float = 0.0
+    dag: DAGView | None = None
 
 
 class PlacementPolicy(abc.ABC):
@@ -187,6 +196,51 @@ class CarbonMHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state, carbon=carbon,
+        )
+
+
+@register_policy
+class LookaheadMHRAPolicy(PlacementPolicy):
+    """MHRA over the planning graph: candidates are scored with two extra
+    DAG-aware terms snapshotted from ``ctx.dag`` —
+
+    - **rank weighting**: each task's candidate finish time enters the
+      objective weighted by its normalized downstream criticality
+      (``up_rest / rank_scale``), so tasks with long dependent chains
+      chase early finishes even where the myopic objective is
+      indifferent;
+    - **data gravity**: a task whose children will pull ``dep_bytes``
+      from wherever it lands is charged the expected escape cost of that
+      payload (``out_bytes * E_inc * mean hops from the candidate``),
+      pre-positioning heavy producers on well-connected endpoints.
+
+    ``lam`` scales both terms (0 = plain MHRA).  On a batch with no
+    downstream structure — flat workloads, or the DAG's sink stage — the
+    snapshot collapses to ``None`` and the placement is bit-identical to
+    plain MHRA.  The reported ``Schedule.objective`` stays the unshaped
+    base objective.
+    """
+
+    name = "lookahead_mhra"
+
+    def __init__(self, heuristics: Sequence[str] = sched.HEURISTICS,
+                 engine: str = "delta", lam: float = 1.0):
+        self.heuristics = tuple(heuristics)
+        self.engine = _check_engine(engine)
+        if lam < 0:
+            raise ValueError(f"lam must be non-negative, got {lam}")
+        self.lam = lam
+
+    def place(self, tasks, ctx, state=None):
+        lookahead = None
+        if ctx.dag is not None:
+            lookahead = LookaheadWeights.from_dag(
+                ctx.dag, tasks, ctx.endpoints, ctx.transfer, self.lam
+            )
+        return sched.mhra(
+            tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
+            self.heuristics, engine=self.engine, state=state,
+            lookahead=lookahead,
         )
 
 

@@ -151,24 +151,46 @@ _EVAL_CARBON_COLS = (
     ("CDP kg*s", "{cdp_kgs:>10.2f}", ">10"),
 )
 
+# appended when rows carry the DAG/deadline evaluation annotations:
+# cp-su    — critical-path speedup, CP lower bound / makespan (<= 1,
+#            1.0 = the schedule hit the theoretical floor)
+# EDP/mhra — this row's EDP relative to the myopic mhra row (the
+#            lookahead-vs-myopic comparison; < 1 beats the greedy)
+# miss%    — share of finite-deadline tasks that completed late
+_EVAL_CP_COL = (("cp-su", "{cp_su:>7.2f}", ">7"),)
+_EVAL_VS_MHRA_COL = (("EDP/mhra", "{edp_vs_mhra:>9.3f}", ">9"),)
+_EVAL_MISS_COL = (("miss%", "{miss_pct:>7.1f}", ">7"),)
+
 
 def _eval_cols(result) -> tuple:
+    cols = _EVAL_COLS
     if any(r.carbon_g is not None for r in result.rows):
-        return _EVAL_COLS + _EVAL_CARBON_COLS
-    return _EVAL_COLS
+        cols = cols + _EVAL_CARBON_COLS
+    if any(r.cp_speedup is not None for r in result.rows):
+        cols = cols + _EVAL_CP_COL
+    if any(r.edp_vs_mhra is not None for r in result.rows):
+        cols = cols + _EVAL_VS_MHRA_COL
+    if any(r.deadline_total > 0 for r in result.rows):
+        cols = cols + _EVAL_MISS_COL
+    return cols
 
 
 def _eval_row_values(r) -> dict:
+    nan = float("nan")
+    miss = r.deadline_miss_rate
     return {
         "policy": r.policy,
         "energy_kj": r.energy_j / 1e3,
         "makespan_s": r.makespan_s,
         "edp_kjs": r.edp / 1e3,
-        "greenup": r.greenup if r.greenup is not None else float("nan"),
-        "speedup": r.speedup if r.speedup is not None else float("nan"),
-        "powerup": r.powerup if r.powerup is not None else float("nan"),
-        "carbon_g": r.carbon_g if r.carbon_g is not None else float("nan"),
-        "cdp_kgs": r.cdp / 1e3 if r.cdp is not None else float("nan"),
+        "greenup": r.greenup if r.greenup is not None else nan,
+        "speedup": r.speedup if r.speedup is not None else nan,
+        "powerup": r.powerup if r.powerup is not None else nan,
+        "carbon_g": r.carbon_g if r.carbon_g is not None else nan,
+        "cdp_kgs": r.cdp / 1e3 if r.cdp is not None else nan,
+        "cp_su": r.cp_speedup if r.cp_speedup is not None else nan,
+        "edp_vs_mhra": r.edp_vs_mhra if r.edp_vs_mhra is not None else nan,
+        "miss_pct": miss * 100.0 if miss is not None else nan,
     }
 
 
@@ -198,22 +220,40 @@ def eval_html_report(results, path: str) -> str:
     blocks = []
     for res in results:
         with_carbon = any(r.carbon_g is not None for r in res.rows)
+        with_cp = any(r.cp_speedup is not None for r in res.rows)
+        with_vs = any(r.edp_vs_mhra is not None for r in res.rows)
+        with_miss = any(r.deadline_total > 0 for r in res.rows)
+        nan = float("nan")
+
+        def _vals(r):
+            out = [r.policy, r.energy_j / 1e3, r.makespan_s, r.edp / 1e3,
+                   r.greenup if r.greenup is not None else nan,
+                   r.speedup if r.speedup is not None else nan,
+                   r.powerup if r.powerup is not None else nan]
+            if with_carbon:
+                out += [r.carbon_g if r.carbon_g is not None else nan,
+                        r.cdp / 1e3 if r.cdp is not None else nan]
+            if with_cp:
+                out.append(r.cp_speedup if r.cp_speedup is not None else nan)
+            if with_vs:
+                out.append(r.edp_vs_mhra if r.edp_vs_mhra is not None else nan)
+            if with_miss:
+                m = r.deadline_miss_rate
+                out.append(m * 100.0 if m is not None else nan)
+            return out
+
         rows = "".join(
             "<tr>" + "".join(
                 f"<td>{esc(v) if isinstance(v, str) else format(v, '.2f')}</td>"
-                for v in (
-                    (r.policy, r.energy_j / 1e3, r.makespan_s, r.edp / 1e3,
-                     r.greenup or float("nan"), r.speedup or float("nan"),
-                     r.powerup or float("nan"))
-                    + ((r.carbon_g if r.carbon_g is not None else float("nan"),
-                        r.cdp / 1e3 if r.cdp is not None else float("nan"))
-                       if with_carbon else ())
-                )
+                for v in _vals(r)
             ) + "</tr>"
             for r in res.rows
         )
-        carbon_head = (
-            "<th>gCO2</th><th>CDP (kg&middot;s)</th>" if with_carbon else ""
+        extra_head = (
+            ("<th>gCO2</th><th>CDP (kg&middot;s)</th>" if with_carbon else "")
+            + ("<th>cp-su</th>" if with_cp else "")
+            + ("<th>EDP/mhra</th>" if with_vs else "")
+            + ("<th>miss%</th>" if with_miss else "")
         )
         blocks.append(
             f"<h2>{esc(res.workload)}</h2>"
@@ -221,7 +261,7 @@ def eval_html_report(results, path: str) -> str:
             f"GPS-UP baseline: {esc(res.baseline)}</p>"
             "<table><tr><th>policy</th><th>energy (kJ)</th><th>makespan (s)</th>"
             "<th>EDP (kJ&middot;s)</th><th>greenup</th><th>speedup</th>"
-            f"<th>powerup</th>{carbon_head}</tr>{rows}</table>"
+            f"<th>powerup</th>{extra_head}</tr>{rows}</table>"
         )
     html = (
         "<!doctype html><html><head><title>GreenFaaS evaluation</title>"

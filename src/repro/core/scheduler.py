@@ -44,9 +44,24 @@ import numpy as np
 
 from repro.core.carbon import CarbonWeights
 from repro.core.clustering import agglomerative_cluster
+from repro.core.dag import LookaheadWeights
 from repro.core.endpoint import EndpointSpec
 from repro.core.predictor import Prediction, TaskProfileStore
 from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel
+
+#: Run-memoization counters for the SoA greedy (``_greedy_soa``): a "hit"
+#: is a unit scored by reusing the previous unit's vectorized pass (the
+#: O(1) fast path), a "miss" is a full vectorized scoring pass.  Promoted
+#: DAG children share one ``not_before`` per completion epoch precisely so
+#: wide stages stay inside one run — the epoch is threaded into the memo
+#: key through that field.  Cumulative across calls; reset with
+#: :func:`reset_memo_stats`.
+MEMO_STATS = {"hits": 0, "misses": 0}
+
+
+def reset_memo_stats() -> None:
+    MEMO_STATS["hits"] = 0
+    MEMO_STATS["misses"] = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -695,6 +710,7 @@ def mhra(
     engine: str = "delta",
     state: SchedulerState | None = None,
     carbon: CarbonWeights | None = None,
+    lookahead: LookaheadWeights | None = None,
 ) -> Schedule:
     """Multi-Heuristic Resource Allocation. With clusters given, this is
     Cluster MHRA's greedy stage (one decision per cluster).
@@ -705,7 +721,13 @@ def mhra(
     ``gamma * G/SF3`` where G is the carbon-adjusted endpoint energy
     (gCO2) under the snapshot's per-endpoint g/J rates — all three
     engines score it, and ``carbon=None`` (the default) leaves every
-    code path bitwise-identical to the carbon-free build.
+    code path bitwise-identical to the carbon-free build.  ``lookahead``
+    (a :class:`~repro.core.dag.LookaheadWeights` snapshot) adds the
+    DAG-aware shaping term to every *candidate* score — rank-weighted
+    finish times plus data-gravity transfer credits — in all three
+    engines with the same clone/delta bitwise guarantee; the *reported*
+    ``Schedule.objective`` stays the unshaped base objective (E, C are
+    real; the shaping term prices hypothetical future placements).
     """
     if not heuristics:
         raise ValueError("mhra requires at least one ordering heuristic")
@@ -714,11 +736,16 @@ def mhra(
             f"carbon weights cover {len(carbon.rates)} endpoints but the "
             f"fleet has {len(endpoints)}"
         )
+    if lookahead is not None and len(lookahead.hops_mean) != len(endpoints):
+        raise ValueError(
+            f"lookahead weights cover {len(lookahead.hops_mean)} endpoints "
+            f"but the fleet has {len(endpoints)}"
+        )
     if engine == "clone":
         if state is not None:
             raise ValueError("engine='clone' does not support live state")
         return _mhra_clone(tasks, endpoints, store, transfer, alpha,
-                           heuristics, clusters, carbon)
+                           heuristics, clusters, carbon, lookahead)
     if engine not in ("delta", "soa"):
         raise ValueError(f"unknown engine {engine!r}")
 
@@ -733,7 +760,8 @@ def mhra(
     unit_indices = [[table.index[t.id] for t in u] for u in units]
     if engine == "soa":
         return _mhra_soa(units, unit_indices, endpoints, table, transfer,
-                         alpha, heuristics, sf1, sf2, state, carbon, sf3)
+                         alpha, heuristics, sf1, sf2, state, carbon, sf3,
+                         lookahead)
     soa_live: SoAState | None = None
     if isinstance(state, SoAState):
         # delta engine over a SoA-backed live state: run on a heap view,
@@ -746,7 +774,7 @@ def mhra(
         ordered = _sort_units_fast(units, h, table, unit_indices)
         sched, end_state = _greedy_delta(
             ordered, endpoints, table, transfer, alpha, sf1, sf2, h, state,
-            carbon, sf3,
+            carbon, sf3, lookahead,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -758,7 +786,8 @@ def mhra(
 
 
 def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
-              heuristics, sf1, sf2, state, carbon=None, sf3=1.0):
+              heuristics, sf1, sf2, state, carbon=None, sf3=1.0,
+              lookahead=None):
     """SoA-engine heuristic search: run :func:`_greedy_soa` per ordering
     heuristic, commit the winner into ``state`` (heap- or SoA-backed)."""
     heap_state: SchedulerState | None = None
@@ -772,7 +801,7 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
         ordered_idx = [unit_indices[i] for i in order]
         sched, end_state = _greedy_soa(
             ordered, ordered_idx, endpoints, table, transfer, alpha,
-            sf1, sf2, h, state, carbon, sf3,
+            sf1, sf2, h, state, carbon, sf3, lookahead,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -787,6 +816,7 @@ def _greedy_delta(
     units, endpoints, table: PredictionTable, transfer, alpha, sf1, sf2,
     heuristic, base_state: SchedulerState | None = None,
     carbon: CarbonWeights | None = None, sf3: float = 1.0,
+    lookahead: LookaheadWeights | None = None,
 ) -> tuple[Schedule, SchedulerState]:
     """Delta-evaluation greedy: score each candidate endpoint from the
     *change* it makes (peek the slot heap, delta the idle-span / dynamic
@@ -836,6 +866,9 @@ def _greedy_delta(
     mins = [h[0] for h in slots]  # heap peeks, refreshed on commit
     rates = carbon.rates if carbon is not None else None
     gamma = carbon.gamma if carbon is not None else 0.0
+    lw = lookahead
+    if lw is not None:
+        lk_tail, lk_out, lk_hm, lam = lw.tail_w, lw.out_j, lw.hops_mean, lw.lam
     idx = table.index
     rt_rows, en_rows = table.rt_rows, table.en_rows
     hops = transfer.hops
@@ -883,6 +916,14 @@ def _greedy_delta(
                         src, n_files, nbytes, shared = inp
                         ks = key_cache[inp] = f"{src}:{n_files}:{nbytes}"
                     prep.append((inp[0], ks, inp[1], inp[2], inp[3]))
+        if lw is not None:
+            if single:
+                u_tw = lk_tail.get(t0.id, 0.0)
+                u_oj = lk_out.get(t0.id, 0.0)
+            else:
+                u_oj = 0.0
+                for t in unit:
+                    u_oj += lk_out.get(t.id, 0.0)
         best_obj = inf
         best = None
         for ei in eps_r:
@@ -1021,6 +1062,18 @@ def _greedy_delta(
                         else:
                             g += rates[j] * (idle[j] * c)
                 obj = alpha * e / sf1 + beta * c / sf2 + gamma * g / sf3
+            if lw is not None:
+                # DAG-aware shaping: rank-weighted finish times + the
+                # gravity of shipping this unit's outputs off-endpoint.
+                # Same float expression as the clone engine's loop.
+                if single:
+                    lk_tail_sum = u_tw * end
+                else:
+                    lk_tail_sum = 0.0
+                    for _tid, _s, _e in entries:
+                        lk_tail_sum += lk_tail.get(_tid, 0.0) * _e
+                obj = obj + lam * (alpha * (u_oj * lk_hm[ei]) / sf1
+                                   + beta * lk_tail_sum / sf2)
             if obj < best_obj:
                 best_obj = obj
                 best = (ei, tj, new_keys, heap, entries, nf, nl, nd)
@@ -1072,6 +1125,7 @@ def _greedy_soa(
     units, unit_indices, endpoints, table: PredictionTable, transfer,
     alpha, sf1, sf2, heuristic, base_state: SoAState | None = None,
     carbon: CarbonWeights | None = None, sf3: float = 1.0,
+    lookahead: LookaheadWeights | None = None,
 ) -> tuple[Schedule, SoAState]:
     """Structure-of-arrays greedy: score a unit against *every* endpoint in
     a fixed handful of vectorized passes instead of a Python loop over
@@ -1146,6 +1200,22 @@ def _greedy_soa(
         gbuf = np.empty(n_ep)
     else:
         rates_v = None
+    # lookahead term: one extra vector register computed per run basis —
+    # lk = lam*b1*tail_w*end + lam*a1*out_j*hops_mean.  Both factors are
+    # part of the run key, so within a run only the committed endpoint's
+    # entry needs the scalar refresh (its candidate end moved).
+    if lookahead is not None:
+        lk_tail = lookahead.tail_w
+        lk_out = lookahead.out_j
+        hm_vec = np.asarray(lookahead.hops_mean, dtype=float)
+        lam = lookahead.lam
+        lk = np.empty(n_ep)
+        lk_tailv = np.empty(n_ep)
+        lk_c1 = lk_c2 = 0.0
+        u_tw = u_oj = 0.0
+    else:
+        lk = None
+    memo_hits = memo_misses = 0
     assignments: dict[str, str] = {}
     # preallocated per-unit buffers
     start = np.empty(n_ep)
@@ -1209,8 +1279,17 @@ def _greedy_soa(
             nb0 = t0.not_before
             # not_before is part of the run identity: tasks with different
             # ready floors score differently even with equal (fn, inputs)
-            key = (t0.fn, t0.inputs, nb0)
+            # — epoch-batched DAG promotion exists to keep a wide stage's
+            # floors equal so its children coalesce into one run.  Under
+            # lookahead the per-task rank/gravity weights join the key.
+            if lk is None:
+                key = (t0.fn, t0.inputs, nb0)
+            else:
+                u_tw = lk_tail.get(t0.id, 0.0)
+                u_oj = lk_out.get(t0.id, 0.0)
+                key = (t0.fn, t0.inputs, nb0, u_tw, u_oj)
             if need_full or key != run_key:
+                memo_misses += 1
                 run_key = key
                 run_rec = rec = _sig(t0.inputs[0]) if t0.inputs else None
                 run_rt = rtT[ti]
@@ -1259,8 +1338,16 @@ def _greedy_soa(
                     np.add(gbuf, g_base, out=gbuf)
                     np.multiply(gbuf, g1, out=gbuf)
                     np.add(obj, gbuf, out=obj)
+                if lk is not None:
+                    lk_c1 = lam * b1 * u_tw
+                    lk_c2 = lam * a1 * u_oj
+                    np.multiply(end, lk_c1, out=lk)
+                    np.multiply(hm_vec, lk_c2, out=tmp)
+                    np.add(lk, tmp, out=lk)
+                    np.add(obj, lk, out=obj)
                 need_full = False
             else:
+                memo_hits += 1
                 rec = run_rec
             ei = int(np.argmin(obj))
             # ---- commit: same scalar float ops as the vectorized pass ----
@@ -1319,6 +1406,10 @@ def _greedy_soa(
                     + (nd_v + float(run_en[ei]))
                 )
                 g_base[ei] = g_b
+            if lk is not None:
+                # same scalar op order as the vectorized lk pass
+                lk_e = e2 * lk_c1 + float(hm_vec[ei]) * lk_c2
+                lk[ei] = lk_e
             if end_v > c_cur:
                 # C_max advanced: refresh every candidate's makespan terms
                 # from the cached e_base (the rest of the score is intact)
@@ -1334,20 +1425,26 @@ def _greedy_soa(
                     np.add(gbuf, g_base, out=gbuf)
                     np.multiply(gbuf, g1, out=gbuf)
                     np.add(obj, gbuf, out=obj)
+                if lk is not None:
+                    np.add(obj, lk, out=obj)
             else:
                 c2 = nl2 if nl2 > c_cur else c_cur
                 e_s = idle_on_sum * c2 + e_b
                 if rates_v is None:
-                    obj[ei] = a1 * e_s + b1 * c2
+                    o_v = a1 * e_s + b1 * c2
                 else:
-                    obj[ei] = (a1 * e_s + b1 * c2
-                               + g1 * (w_idle_on * c2 + g_b))
+                    o_v = (a1 * e_s + b1 * c2
+                           + g1 * (w_idle_on * c2 + g_b))
+                if lk is not None:
+                    o_v = o_v + lk_e
+                obj[ei] = o_v
             timeline[t0.id] = (start_v, end_v)
             assignments[t0.id] = names[ei]
             continue
         # ---- general path: clustered / multi-input units -----------------
         run_key = None
         need_full = True
+        memo_misses += 1
         np.subtract(const.sum(), const, out=static)
         if rates_v is not None:
             np.subtract(const_g.sum(), const_g, out=static_g)
@@ -1364,6 +1461,7 @@ def _greedy_soa(
             f_e = first[ei]
             l_e = last[ei]
             d_e = dyn[ei]
+            tl_e = 0.0
             entries = []
             for t, tix in zip(unit, uidx):
                 s_v = heappop(heap)
@@ -1378,11 +1476,15 @@ def _greedy_soa(
                 if e_v > l_e:
                     l_e = e_v
                 d_e = d_e + enT[tix, ei]
+                if lk is not None:
+                    tl_e += lk_tail.get(t.id, 0.0) * e_v
                 entries.append((t.id, s_v, e_v))
             tjv[ei] = tj_e
             nf[ei] = f_e
             nl[ei] = l_e
             nd[ei] = d_e
+            if lk is not None:
+                lk_tailv[ei] = tl_e
             cand.append((heap, entries, new_keys))
         np.maximum(nl, c_cur, out=c)
         np.subtract(nl, nf, out=tmp)
@@ -1405,6 +1507,14 @@ def _greedy_soa(
             np.add(gbuf, g_base, out=gbuf)
             np.multiply(gbuf, g1, out=gbuf)
             np.add(obj, gbuf, out=obj)
+        if lk is not None:
+            u_oj = 0.0
+            for t in unit:
+                u_oj += lk_out.get(t.id, 0.0)
+            np.multiply(lk_tailv, lam * b1, out=lk)
+            np.multiply(hm_vec, lam * a1 * u_oj, out=tmp)
+            np.add(lk, tmp, out=lk)
+            np.add(obj, lk, out=obj)
         ei = int(np.argmin(obj))
         heap, entries, new_keys = cand[ei]
         transfer_j = float(tjv[ei])
@@ -1435,6 +1545,8 @@ def _greedy_soa(
             timeline[tid] = (s_v, e_v)
             assignments[tid] = name
 
+    MEMO_STATS["hits"] += memo_hits
+    MEMO_STATS["misses"] += memo_misses
     state.transfer_j = transfer_j
     e_tot, c_max, tj = state.metrics()
     obj_f = alpha * e_tot / sf1 + (1 - alpha) * c_max / sf2
@@ -1454,7 +1566,7 @@ def _greedy_soa(
 
 
 def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
-                carbon=None):
+                carbon=None, lookahead=None):
     per_ep = _predict_all(tasks, endpoints, store)
     if clusters is None:
         units = [[t] for t in tasks]
@@ -1473,7 +1585,8 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
         }
         ordered = _sort_units(units, h, mean_preds)
         sched = _greedy_multi_ep(
-            ordered, endpoints, per_ep, transfer, alpha, tasks, h, carbon
+            ordered, endpoints, per_ep, transfer, alpha, tasks, h, carbon,
+            lookahead,
         )
         if best is None or sched.objective < best.objective:
             best = sched
@@ -1481,21 +1594,37 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
 
 
 def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
-                     heuristic, carbon=None):
+                     heuristic, carbon=None, lookahead=None):
     # SF normalizers from endpoint-specific predictions
     sf1, sf2, sf3 = _normalizers(tasks, endpoints, per_ep, transfer, carbon)
 
     state = SchedulerState(endpoints, transfer)
     assignments: dict[str, str] = {}
     for unit in units:
+        u_oj = 0.0
+        if lookahead is not None:
+            for t in unit:
+                u_oj += lookahead.out_j.get(t.id, 0.0)
         best_obj, best_ep = np.inf, None
-        for ep in endpoints:
+        for ei, ep in enumerate(endpoints):
             trial = state.clone()
-            trial.assign(unit, ep, per_ep[ep.name])
+            # candidate timelines start empty, so with lookahead on the
+            # trial records exactly this unit's (start, end) pairs
+            trial.assign(unit, ep, per_ep[ep.name],
+                         record_timeline=lookahead is not None)
             e, c, _ = trial.metrics()
             obj = alpha * e / sf1 + (1 - alpha) * c / sf2
             if carbon is not None:
                 obj = obj + carbon.gamma * state_carbon_g(trial, carbon.rates) / sf3
+            if lookahead is not None:
+                lk_tail_sum = 0.0
+                for t in unit:
+                    lk_tail_sum += (lookahead.tail_w.get(t.id, 0.0)
+                                    * trial.timeline[t.id][1])
+                obj = obj + lookahead.lam * (
+                    alpha * (u_oj * lookahead.hops_mean[ei]) / sf1
+                    + (1 - alpha) * lk_tail_sum / sf2
+                )
             if obj < best_obj:
                 best_obj, best_ep = obj, ep
         state.assign(unit, best_ep, per_ep[best_ep.name], record_timeline=True)
@@ -1542,6 +1671,7 @@ def cluster_mhra(
     engine: str = "delta",
     state: SchedulerState | None = None,
     carbon: CarbonWeights | None = None,
+    lookahead: LookaheadWeights | None = None,
 ) -> Schedule:
     """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
     tasks = list(tasks)
@@ -1566,11 +1696,13 @@ def cluster_mhra(
             feats, energies, cap, max_cluster_size=max_cluster_size
         )
         return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
-                    clusters, engine="clone", carbon=carbon)
+                    clusters, engine="clone", carbon=carbon,
+                    lookahead=lookahead)
     table = PredictionTable(tasks, endpoints, store)
     clusters = compute_clusters(tasks, endpoints, table, max_cluster_size)
     return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
-                clusters, engine=engine, state=state, carbon=carbon)
+                clusters, engine=engine, state=state, carbon=carbon,
+                lookahead=lookahead)
 
 
 # ---------------------------------------------------------------------------

@@ -8,8 +8,11 @@
   (dock → simulate → train → infer with data dependencies).
 - :mod:`repro.workloads.carbon_traces` — per-endpoint grid
   carbon-intensity signals (seeded synthetic + real-trace JSON I/O).
+- :mod:`repro.workloads.wfcommons` — WfCommons/Pegasus JSON importer for
+  published workflow DAGs (+ a committed Montage-shaped sample).
 - :mod:`repro.workloads.trace` — the :class:`WorkloadTrace` container +
-  replay helper every generator returns.
+  replay helper every generator returns (and the deadline-distribution
+  helper :func:`~repro.workloads.trace.apply_deadline_slack`).
 """
 from repro.workloads.arrivals import (
     ARRIVAL_PROCESSES,
@@ -29,16 +32,20 @@ from repro.workloads.moldesign import (
     moldesign_endpoints,
 )
 from repro.workloads.synthetic import FUNCTION_CLASSES, synthetic_edp_workload
-from repro.workloads.trace import WorkloadTrace
+from repro.workloads.trace import WorkloadTrace, apply_deadline_slack
+from repro.workloads.wfcommons import load_wfcommons, load_wfcommons_sample
 
 __all__ = [
     "ARRIVAL_PROCESSES",
     "FUNCTION_CLASSES",
     "MOLDESIGN_DAG_PROFILES",
     "WorkloadTrace",
+    "apply_deadline_slack",
     "bursty_arrivals",
     "diurnal_arrivals",
     "load_carbon_signal",
+    "load_wfcommons",
+    "load_wfcommons_sample",
     "make_arrivals",
     "moldesign_dag_workload",
     "moldesign_endpoints",

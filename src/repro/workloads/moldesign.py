@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.endpoint import table1_testbed
 from repro.core.scheduler import TaskSpec
 from repro.workloads.arrivals import poisson_arrivals
-from repro.workloads.trace import WorkloadTrace
+from repro.workloads.trace import WorkloadTrace, apply_deadline_slack
 
 #    fn -> machine -> (runtime_s, dynamic_watts)
 MOLDESIGN_DAG_PROFILES = {
@@ -66,6 +66,7 @@ def moldesign_dag_workload(
     infers_per_wave: int = 96,
     seed: int = 0,
     submit_rate_hz: float = 64.0,
+    deadline_slack: tuple[float, float] | None = None,
 ) -> WorkloadTrace:
     """Build the molecular-design DAG trace.
 
@@ -75,6 +76,10 @@ def moldesign_dag_workload(
     simulate → train → infer.  ``meta['wave_ids']`` lists each wave's
     task ids for callers that interleave application logic (e.g. the real
     JAX surrogate in ``examples/molecular_design.py``).
+
+    ``deadline_slack=(lo, hi)`` assigns seeded per-task deadlines via
+    :func:`~repro.workloads.trace.apply_deadline_slack`; the ancestor
+    chain estimate means wave-3 tasks get wave-3-feasible deadlines.
     """
     if waves <= 0 or docks_per_wave <= 0 or sims_per_wave <= 0 or infers_per_wave <= 0:
         raise ValueError("waves and per-wave stage sizes must be positive")
@@ -119,6 +124,11 @@ def moldesign_dag_workload(
         wave_ids.append(ids)
 
     arrivals = poisson_arrivals(len(tasks), submit_rate_hz, seed=seed)
+    if deadline_slack is not None:
+        tasks = apply_deadline_slack(
+            tasks, arrivals, MOLDESIGN_DAG_PROFILES, deadline_slack,
+            seed=seed + 3,
+        )
     return WorkloadTrace(
         name=f"moldesign_dag_{waves}w",
         tasks=tasks,

@@ -24,7 +24,7 @@ from repro.core.endpoint import table1_testbed
 from repro.core.scheduler import TaskSpec
 from repro.core.testbed import BASE_PROFILES, FN_SIGNATURES
 from repro.workloads.arrivals import make_arrivals
-from repro.workloads.trace import WorkloadTrace
+from repro.workloads.trace import WorkloadTrace, apply_deadline_slack
 
 FUNCTION_CLASSES = {
     "compute": ("graph_bfs", "graph_mst", "graph_pagerank"),
@@ -45,6 +45,7 @@ def synthetic_edp_workload(
     class_mix: tuple[float, float, float] = (0.45, 0.25, 0.30),
     home: str = "desktop",
     user: str = "user0",
+    deadline_slack: tuple[float, float] | None = None,
     **arrival_kwargs,
 ) -> WorkloadTrace:
     """Build the synthetic EDP trace.
@@ -56,6 +57,13 @@ def synthetic_edp_workload(
     a few minutes of simulated submissions).  Same ``(n_tasks, arrival,
     seed, class_mix)``, same trace — task order, ids, inputs, arrivals
     are all derived from one seeded generator.
+
+    ``deadline_slack=(lo, hi)`` draws per-task deadline distributions
+    (see :func:`~repro.workloads.trace.apply_deadline_slack`): deadline =
+    arrival + (1 + U(lo, hi)) x fleet-mean runtime.  Deadlines bound the
+    carbon deferral queue and feed the miss-rate evaluation column; they
+    never change placement, so a trace with deadlines replays
+    identically to one without.
     """
     if n_tasks <= 0:
         raise ValueError(f"n_tasks must be positive, got {n_tasks}")
@@ -87,6 +95,10 @@ def synthetic_edp_workload(
     endpoints = table1_testbed()
     if home not in {e.name for e in endpoints}:
         raise ValueError(f"home={home!r} is not a Table-I endpoint")
+    if deadline_slack is not None:
+        tasks = apply_deadline_slack(
+            tasks, arrivals, BASE_PROFILES, deadline_slack, seed=seed + 2
+        )
     return WorkloadTrace(
         name=f"synthetic_edp_{n_tasks}_{arrival}",
         tasks=tasks,

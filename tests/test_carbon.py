@@ -436,3 +436,55 @@ def test_eval_text_report_carbon_columns_conditional():
                             include_single_sites=False, carbon=sig)
     txt = eval_text_report(carbon)
     assert "gCO2" in txt and "CDP" in txt
+
+
+# ---------------------------------------------------------------------------
+# Forecast noise: signal-at-decision vs signal-at-billing
+# ---------------------------------------------------------------------------
+
+
+def test_forecast_noise_seeded_and_validated():
+    sig = table1_carbon_signal(seed=0, period_s=600.0)
+    assert sig.with_forecast_noise(0.0) is sig          # identity, no copy
+    a = sig.with_forecast_noise(0.3, seed=7)
+    b = sig.with_forecast_noise(0.3, seed=7)
+    c = sig.with_forecast_noise(0.3, seed=8)
+    names = sorted(sig.traces)
+    for n in names:
+        assert np.array_equal(a.traces[n].gco2_per_kwh,
+                              b.traces[n].gco2_per_kwh)
+        assert a.traces[n].period_s == sig.traces[n].period_s
+        assert np.all(a.traces[n].gco2_per_kwh >= 1.0)  # validity floor
+    assert any(
+        not np.array_equal(a.traces[n].gco2_per_kwh, c.traces[n].gco2_per_kwh)
+        for n in names
+    )
+    assert any(
+        not np.array_equal(a.traces[n].gco2_per_kwh,
+                           sig.traces[n].gco2_per_kwh)
+        for n in names
+    )
+    with pytest.raises(ValueError, match="sigma"):
+        sig.with_forecast_noise(-0.1)
+
+
+def test_deferral_gains_shrink_with_forecast_noise():
+    """The deferral queue trusts the *forecast*; billing integrates the
+    true signal.  With a perfect forecast deferral cuts gCO2; with a wild
+    one it shifts work into hours that only looked clean."""
+    n = 56
+    peak = min(n / 300.0, 1.5)
+    car = synthetic_edp_workload(
+        n_tasks=n, arrival="diurnal", seed=0, period_s=600.0,
+        peak_rate_hz=peak, trough_rate_hz=peak / 16.0,
+    )
+    sig = table1_carbon_signal(seed=0, period_s=600.0)
+    plain = run_policy(car, "mhra", seed=0, carbon=sig)
+    ratios = {}
+    for sigma in (0.0, 2.0):
+        fc = sig.with_forecast_noise(sigma, seed=7)
+        cm = run_policy(car, "carbon_mhra", seed=0, carbon=sig,
+                        carbon_forecast=fc, defer_horizon_s=120.0)
+        ratios[sigma] = cm.carbon_g / plain.carbon_g
+    assert ratios[0.0] < 1.0                      # clean forecast helps
+    assert ratios[0.0] < ratios[2.0]              # noise erodes the gain

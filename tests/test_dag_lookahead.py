@@ -1,0 +1,326 @@
+"""Planning graph (DAGView), lookahead_mhra engine parity, epoch-batched
+promotion, and the SoA memoization-hit regression guard."""
+import numpy as np
+import pytest
+
+from repro.core import scheduler as sched
+from repro.core.dag import DAGView, LookaheadWeights
+from repro.core.endpoint import table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.evaluate import (
+    critical_path_bound_s,
+    run_policy,
+    verify_dag_order,
+)
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import (
+    MEMO_STATS,
+    TaskSpec,
+    mhra,
+    reset_memo_stats,
+)
+from repro.core.testbed import SEBS_FUNCTIONS, TestbedSim
+from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel
+from repro.workloads import moldesign_dag_workload
+
+
+# ---------------------------------------------------------------------------
+# DAGView rank / mass hand-checks
+# ---------------------------------------------------------------------------
+
+RT = {"fa": 2.0, "fb": 3.0, "fc": 1.0, "fd": 4.0}
+
+
+def _diamond() -> DAGView:
+    r"""a(2) -> b(3) [10 B], a -> c(1) [5 B], b -> d(4) [7 B], c -> d [7 B].
+
+    d pulls dep_bytes=7 from *each* parent, so both b->d and c->d edges
+    weigh 7.
+    """
+    dag = DAGView(runtime=RT.__getitem__)
+    dag.add_task(TaskSpec(id="a", fn="fa"))
+    dag.add_task(TaskSpec(id="b", fn="fb", deps=("a",), dep_bytes=10.0))
+    dag.add_task(TaskSpec(id="c", fn="fc", deps=("a",), dep_bytes=5.0))
+    dag.add_task(TaskSpec(id="d", fn="fd", deps=("b", "c"), dep_bytes=7.0))
+    return dag
+
+
+def test_dagview_up_ranks_hand_checked():
+    dag = _diamond()
+    assert dag.up_rank("d") == 4.0
+    assert dag.up_rank("b") == 3.0 + 4.0
+    assert dag.up_rank("c") == 1.0 + 4.0
+    assert dag.up_rank("a") == 2.0 + 7.0          # through the b chain
+    assert dag.rank_scale == 9.0
+    assert dag.up_rest("a") == 7.0
+    assert dag.up_rest("d") == 0.0                 # sink
+
+
+def test_dagview_down_ranks_hand_checked():
+    dag = _diamond()
+    assert dag.down_rank("a") == 0.0
+    assert dag.down_rank("b") == 2.0
+    assert dag.down_rank("c") == 2.0
+    assert dag.down_rank("d") == 5.0               # a(2) + b(3)
+
+
+def test_dagview_mass_and_out_bytes_hand_checked():
+    dag = _diamond()
+    # path-weighted: a sees b's edge+subtree (10+7) and c's (5+7)
+    assert dag.desc_bytes("a") == 29.0
+    assert dag.desc_bytes("b") == 7.0
+    assert dag.desc_bytes("d") == 0.0
+    assert dag.out_bytes("a") == 15.0
+    assert dag.out_bytes("b") == 7.0
+    assert dag.out_bytes("d") == 0.0
+
+
+def test_dagview_incremental_and_producers():
+    dag = DAGView(runtime=lambda fn: 1.0)
+    dag.add_task(TaskSpec(id="p", fn="f"))
+    assert not dag.has_edges()
+    assert dag.up_rank("p") == 1.0
+    dag.add_task(TaskSpec(id="k", fn="f", deps=("p",), dep_bytes=3.0))
+    dag.add_task(TaskSpec(id="k", fn="f", deps=("p",), dep_bytes=3.0))  # idempotent
+    assert dag.n_edges == 1
+    assert dag.up_rank("p") == 2.0                 # rank refreshed lazily
+    assert dag.producer("p") is None
+    dag.complete("p", "ic", 12.5)
+    assert dag.producer("p") == ("ic", 12.5)
+    assert dag.children("p") == (("k", 3.0),)
+
+
+def test_lookahead_weights_snapshot():
+    dag = _diamond()
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    tasks = [TaskSpec(id="a", fn="fa"), TaskSpec(id="d", fn="fd")]
+    lw = LookaheadWeights.from_dag(dag, tasks, eps, tm, lam=2.0)
+    assert lw is not None and lw.lam == 2.0
+    assert lw.tail_w["a"] == pytest.approx(7.0 / 9.0)
+    assert lw.tail_w["d"] == 0.0
+    assert lw.out_j["a"] == pytest.approx(15.0 * E_INC_J_PER_BYTE)
+    assert len(lw.hops_mean) == len(eps)
+    # desktop: mean of hops to theta/ic/faster
+    hops = [tm.hops("desktop", n) for n in ("theta", "ic", "faster")]
+    assert lw.hops_mean[0] == pytest.approx(sum(hops) / 3.0)
+
+
+def test_lookahead_weights_collapse_to_none_without_structure():
+    dag = DAGView()
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    flat = [TaskSpec(id="x", fn="f")]
+    dag.add_task(flat[0])
+    assert LookaheadWeights.from_dag(dag, flat, eps, tm) is None
+    # sink-only batches on a real DAG collapse too
+    diamond = _diamond()
+    sinks = [TaskSpec(id="d", fn="fd", deps=("b", "c"))]
+    assert LookaheadWeights.from_dag(diamond, sinks, eps, tm) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine parity under lookahead scoring
+# ---------------------------------------------------------------------------
+
+
+def _store(eps):
+    store = TaskProfileStore(eps)
+    sim = TestbedSim(eps, seed=0)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            rt, w, _ = sim.task_truth(fn, ep.name)
+            for _ in range(3):
+                store.record(fn, ep.name, rt, rt * w)
+    return store
+
+
+def _batch_lookahead(n=96):
+    """A flat batch + a DAGView that assigns it downstream structure, so
+    every engine scores real rank/gravity terms in batch mode."""
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    store = _store(eps)
+    dag = DAGView(runtime=lambda fn: 5.0)
+    tasks = []
+    for i in range(n):
+        t = TaskSpec(id=f"t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)])
+        tasks.append(t)
+        dag.add_task(t)
+        # every third task gets a heavy waiting child; depth varies
+        if i % 3 == 0:
+            dag.add_task(TaskSpec(id=f"c{i}", fn="graph_bfs",
+                                  deps=(t.id,), dep_bytes=(1 + i % 5) * 1e6))
+        if i % 9 == 0:
+            dag.add_task(TaskSpec(id=f"g{i}", fn="thumbnail",
+                                  deps=(f"c{i}",), dep_bytes=2e6))
+    lw = LookaheadWeights.from_dag(dag, tasks, eps, tm, lam=1.0)
+    assert lw is not None
+    return tasks, eps, store, tm, lw
+
+
+def test_clone_delta_bitwise_parity_under_lookahead():
+    tasks, eps, store, tm, lw = _batch_lookahead()
+    d = mhra(tasks, eps, store, tm, alpha=0.4, lookahead=lw, engine="delta")
+    c = mhra(tasks, eps, store, tm, alpha=0.4, lookahead=lw, engine="clone")
+    assert d.assignments == c.assignments
+    assert d.objective == c.objective              # bitwise
+    assert d.energy_j == c.energy_j
+    assert d.makespan_s == c.makespan_s
+
+
+def test_delta_soa_parity_under_lookahead_batch():
+    tasks, eps, store, tm, lw = _batch_lookahead()
+    d = mhra(tasks, eps, store, tm, alpha=0.4, lookahead=lw, engine="delta")
+    s = mhra(tasks, eps, store, tm, alpha=0.4, lookahead=lw, engine="soa")
+    assert d.assignments == s.assignments
+    assert np.isclose(d.objective, s.objective, rtol=1e-12, atol=0.0)
+
+
+def test_lookahead_weight_validation():
+    tasks, eps, store, tm, lw = _batch_lookahead(n=8)
+    bad = LookaheadWeights(lw.tail_w, lw.out_j, lw.hops_mean[:2], lw.lam)
+    with pytest.raises(ValueError, match="lookahead weights cover"):
+        mhra(tasks, eps, store, tm, lookahead=bad)
+    with pytest.raises(ValueError, match="lam"):
+        LookaheadWeights({}, {}, (0.0,), lam=-1.0)
+
+
+def test_delta_soa_parity_under_lookahead_online_dag():
+    trace = moldesign_dag_workload(waves=2, docks_per_wave=6, sims_per_wave=6,
+                                   infers_per_wave=8)
+    d, dw = run_policy(trace, "lookahead_mhra", engine="delta", alpha=0.3,
+                       seed=0, return_windows=True)
+    s = run_policy(trace, "lookahead_mhra", engine="soa", alpha=0.3, seed=0)
+    assert d.assignments == s.assignments
+    assert verify_dag_order(dw) > 0
+
+
+def test_lookahead_degrades_to_mhra_on_flat_workloads():
+    """No DAG structure -> identical placements and objective to mhra."""
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=0)
+    flat = [TaskSpec(id=f"f{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)])
+            for i in range(40)]
+    outs = {}
+    for pol in ("mhra", "lookahead_mhra"):
+        eng = OnlineEngine(table1_testbed(), TestbedSim(eps, seed=0),
+                           policy=pol, monitoring=False, max_batch=10**6)
+        eng.submit_many(flat)
+        res = eng.flush()
+        outs[pol] = (res.assignments, res.schedule.objective)
+    assert outs["mhra"] == outs["lookahead_mhra"]
+
+
+# ---------------------------------------------------------------------------
+# Epoch-batched promotion
+# ---------------------------------------------------------------------------
+
+
+def _wide_stage_tasks(stages=3, width=48):
+    tasks = []
+    for s in range(stages):
+        fn = SEBS_FUNCTIONS[s % len(SEBS_FUNCTIONS)]
+        for j in range(width):
+            deps = (f"s{s - 1}_{(j + 1) % width}",) if s else ()
+            tasks.append(TaskSpec(id=f"s{s}_{j}", fn=fn, deps=deps))
+    return tasks
+
+
+def _drain_wide(engine_name, promotion, stages=3, width=48):
+    eps = table1_testbed()
+    eng = OnlineEngine(eps, None, policy="mhra", monitoring=False,
+                       max_batch=10**9, engine=engine_name,
+                       promotion=promotion, store=_store(eps))
+    eng.submit_many(_wide_stage_tasks(stages, width), when=0.0)
+    eng.drain()
+    return eng
+
+
+def test_epoch_promotion_shares_one_floor_per_stage():
+    eng = _drain_wide("delta", "epoch")
+    # every promoted stage carries exactly one distinct not_before
+    for w in eng.windows[1:]:
+        floors = {t.not_before for t in w.tasks}
+        assert len(floors) == 1
+        # and it is the stage's completion epoch: >= every parent's end
+        floor = floors.pop()
+        for t in w.tasks:
+            for p in t.deps:
+                assert floor >= eng.completed[p][1]
+
+
+def test_exact_promotion_keeps_tight_per_child_floors():
+    eng = _drain_wide("delta", "exact")
+    saw_distinct = False
+    for w in eng.windows[1:]:
+        for t in w.tasks:
+            assert t.not_before == max(eng.completed[p][1] for p in t.deps)
+        if len({t.not_before for t in w.tasks}) > 1:
+            saw_distinct = True
+    assert saw_distinct, "workload too degenerate to distinguish the modes"
+
+
+def test_epoch_vs_exact_assignment_parity_on_moldesign():
+    trace = moldesign_dag_workload(waves=2, docks_per_wave=8, sims_per_wave=8,
+                                   infers_per_wave=12)
+    for pol in ("mhra", "lookahead_mhra"):
+        ep = run_policy(trace, pol, alpha=0.3, seed=0, promotion="epoch")
+        ex = run_policy(trace, pol, alpha=0.3, seed=0, promotion="exact")
+        assert ep.assignments == ex.assignments, pol
+
+
+def test_promotion_mode_validated():
+    with pytest.raises(ValueError, match="promotion"):
+        OnlineEngine(table1_testbed(), None, promotion="eager")
+
+
+# ---------------------------------------------------------------------------
+# SoA run-memoization counter regression (the epoch fast path's receipts)
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_promotion_restores_soa_memoization():
+    stages, width = 3, 48
+    n_heur = len(sched.HEURISTICS)
+    reset_memo_stats()
+    _drain_wide("soa", "epoch", stages, width)
+    epoch = dict(MEMO_STATS)
+    reset_memo_stats()
+    _drain_wide("soa", "exact", stages, width)
+    exact = dict(MEMO_STATS)
+    # epoch: each stage is one window of identical (fn, inputs, floor)
+    # tasks -> exactly one full pass per (stage, heuristic)
+    assert epoch["misses"] == stages * n_heur
+    assert epoch["hits"] == (stages * width - stages) * n_heur
+    # exact: distinct per-child floors fragment the runs
+    assert exact["misses"] > epoch["misses"]
+    assert exact["hits"] < epoch["hits"]
+
+
+def test_memo_stats_reset():
+    reset_memo_stats()
+    assert MEMO_STATS == {"hits": 0, "misses": 0}
+
+
+# ---------------------------------------------------------------------------
+# Evaluation annotations
+# ---------------------------------------------------------------------------
+
+
+def test_critical_path_bound_hand_checked():
+    trace = moldesign_dag_workload(waves=1, docks_per_wave=2, sims_per_wave=2,
+                                   infers_per_wave=2, submit_rate_hz=1e9)
+    # all arrivals ~0; fastest: dock 0.8 (faster), simulate 2.5 (faster),
+    # train 8.0 (desktop), infer 0.6 (faster)
+    assert critical_path_bound_s(trace) == pytest.approx(
+        0.8 + 2.5 + 8.0 + 0.6, abs=1e-6
+    )
+
+
+def test_cp_speedup_reported_and_bounded():
+    trace = moldesign_dag_workload(waves=2, docks_per_wave=6, sims_per_wave=6,
+                                   infers_per_wave=8)
+    r = run_policy(trace, "mhra", alpha=0.3, seed=0)
+    assert r.cp_speedup is not None
+    assert 0.0 < r.cp_speedup <= 1.0 + 1e-9

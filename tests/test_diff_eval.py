@@ -115,3 +115,84 @@ def test_cli_exit_codes_and_summary(tmp_path):
     # >10% regression exits 1
     curr.write_text(json.dumps(_payload(edp=120.0)))
     assert main([str(prev), str(curr)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# rolling history (slow-drift detection)
+# ---------------------------------------------------------------------------
+
+from benchmarks.diff_eval import (  # noqa: E402
+    history_baseline,
+    snapshot,
+    update_history,
+)
+
+
+def test_snapshot_keeps_only_compared_metrics():
+    snap = snapshot(_payload(edp=100.0, carbon_g=5.0), meta={"label": "x"})
+    row = snap["workloads"]["synthetic"]["mhra"]
+    assert row == {"edp": 100.0, "greenup": 1.0, "speedup": 1.0,
+                   "powerup": 1.0, "carbon_g": 5.0}
+    assert snap["meta"] == {"label": "x"}
+
+
+def test_history_baseline_is_per_metric_median():
+    hist = None
+    for edp in (100.0, 110.0, 400.0):      # median robust to the outlier
+        hist = update_history(hist, _payload(edp=edp))
+    base = history_baseline(hist)
+    row = base["workloads"][0]["rows"][0]
+    assert row["edp"] == 110.0
+    assert history_baseline({"entries": []}) is None
+
+
+def test_update_history_prunes_oldest_first():
+    hist = None
+    for edp in range(8):
+        hist = update_history(hist, _payload(edp=float(edp)), keep=3)
+    edps = [e["workloads"]["synthetic"]["mhra"]["edp"]
+            for e in hist["entries"]]
+    assert edps == [5.0, 6.0, 7.0]
+    with pytest.raises(ValueError, match="keep"):
+        update_history(None, _payload(), keep=0)
+
+
+def test_slow_drift_trips_against_rolling_median(tmp_path):
+    """+1.5%/run never trips a previous-run diff (inside the 2% warn
+    band) but accumulates past the rolling median's warn threshold."""
+    hist = None
+    edp = 100.0
+    for _ in range(4):
+        hist = update_history(hist, _payload(edp=edp))
+        edp *= 1.015
+    # pairwise vs the immediately previous run: still OK
+    rows, worst = diff_payloads(_payload(edp=edp / 1.015), _payload(edp=edp))
+    assert worst == OK
+    # vs the rolling median: the drift is visible
+    rows, worst = diff_payloads(history_baseline(hist), _payload(edp=edp))
+    assert worst == WARN
+
+
+def test_cli_history_mode_creates_then_diffs(tmp_path):
+    hist = tmp_path / "hist.json"
+    curr = tmp_path / "curr.json"
+    curr.write_text(json.dumps(_payload(edp=100.0)))
+    # first run: no baseline yet, history created with one entry
+    assert main([str(curr), "--history", str(hist), "--meta", "r1"]) == 0
+    h = json.loads(hist.read_text())
+    assert len(h["entries"]) == 1
+    assert h["entries"][0]["meta"] == {"label": "r1"}
+    # second run with a >10% EDP regression: fails against the median
+    curr.write_text(json.dumps(_payload(edp=120.0)))
+    summary = tmp_path / "sum.md"
+    assert main([str(curr), "--history", str(hist),
+                 "--summary", str(summary)]) == 1
+    assert "rolling median of 1 run(s)" in summary.read_text()
+    assert len(json.loads(hist.read_text())["entries"]) == 2
+
+
+def test_cli_history_mode_argument_validation(tmp_path):
+    with pytest.raises(SystemExit):
+        main(["a.json", "b.json", "--history", "h.json"])
+    with pytest.raises(SystemExit):
+        main(["only_one.json"])

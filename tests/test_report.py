@@ -147,3 +147,28 @@ def test_eval_html_report_escapes_and_well_formed(tmp_path):
     assert "&lt;wl&gt;" in html
     assert "<wl>" not in html
     assert "site:a&amp;b" in html
+
+
+def test_eval_report_dag_deadline_columns_conditional(tmp_path):
+    """cp-su / EDP-vs-mhra / miss% columns appear exactly when rows carry
+    the annotations."""
+    plain = _eval_result()
+    txt = eval_text_report(plain)
+    assert "cp-su" not in txt and "EDP/mhra" not in txt and "miss%" not in txt
+
+    annotated = _eval_result()
+    for r in annotated.rows:
+        r.cp_speedup = 0.5
+        r.edp_vs_mhra = 1.25
+        r.deadline_total = 10
+        r.deadline_misses = 3
+    txt = eval_text_report(annotated)
+    assert "cp-su" in txt and "EDP/mhra" in txt and "miss%" in txt
+    mhra_line = next(l for l in txt.splitlines() if l.startswith("mhra"))
+    assert "0.50" in mhra_line        # cp-su
+    assert "1.250" in mhra_line       # EDP/mhra
+    assert "30.0" in mhra_line        # miss%
+
+    html = eval_html_report(annotated, tmp_path / "eval.html")
+    assert_well_formed(html)
+    assert "cp-su" in html and "miss%" in html

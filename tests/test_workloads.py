@@ -223,3 +223,182 @@ def test_not_before_floors_planned_and_simulated_starts():
     start, _ = res.schedule.timeline["t"]
     assert start >= 123.0
     assert res.sim.records[0].t_start >= 123.0
+
+
+# ---------------------------------------------------------------------------
+# deadline distributions
+# ---------------------------------------------------------------------------
+
+
+def test_apply_deadline_slack_flat_hand_checked():
+    from repro.workloads import apply_deadline_slack
+
+    profiles = {"f": {"a": (2.0, 1.0), "b": (4.0, 1.0)}}   # mean rt = 3.0
+    tasks = [TaskSpec(id="t0", fn="f"), TaskSpec(id="t1", fn="f")]
+    arrivals = np.array([1.0, 5.0])
+    out = apply_deadline_slack(tasks, arrivals, profiles, (2.0, 4.0), seed=0)
+    for t, arr in zip(out, arrivals):
+        # deadline = arrival + rt_mean + U(2,4)*rt_mean
+        assert arr + 3.0 + 2.0 * 3.0 <= t.deadline <= arr + 3.0 + 4.0 * 3.0
+    # seeded: same inputs, same deadlines
+    again = apply_deadline_slack(tasks, arrivals, profiles, (2.0, 4.0), seed=0)
+    assert [t.deadline for t in again] == [t.deadline for t in out]
+    with pytest.raises(ValueError, match="slack_range"):
+        apply_deadline_slack(tasks, arrivals, profiles, (3.0, 1.0))
+
+
+def test_apply_deadline_slack_respects_ancestor_chains():
+    from repro.workloads import apply_deadline_slack
+
+    profiles = {"f": {"a": (10.0, 1.0)}}
+    tasks = [
+        TaskSpec(id="p", fn="f"),
+        TaskSpec(id="k", fn="f", deps=("p",)),
+        TaskSpec(id="g", fn="f", deps=("k",)),
+    ]
+    arrivals = np.array([0.0, 0.0, 0.0])
+    out = apply_deadline_slack(tasks, arrivals, profiles, (0.0, 0.0), seed=0)
+    # zero slack -> deadline == earliest plausible completion of the chain
+    assert [t.deadline for t in out] == [10.0, 20.0, 30.0]
+
+
+def test_generators_set_deadlines_without_changing_placement():
+    plain = synthetic_edp_workload(n_tasks=32, seed=0)
+    dated = synthetic_edp_workload(n_tasks=32, seed=0,
+                                   deadline_slack=(4.0, 8.0))
+    assert all(t.deadline == np.inf for t in plain.tasks)
+    assert all(t.deadline < np.inf for t in dated.tasks)
+    # deadlines never steer placement
+    from repro.core.evaluate import run_policy
+    a = run_policy(plain, "mhra", seed=0)
+    b = run_policy(dated, "mhra", seed=0)
+    assert a.assignments == b.assignments
+    assert b.deadline_total == 32
+    dag = moldesign_dag_workload(waves=2, docks_per_wave=4, sims_per_wave=4,
+                                 infers_per_wave=6, deadline_slack=(4.0, 8.0))
+    assert all(t.deadline < np.inf for t in dag.tasks)
+
+
+def test_deadline_miss_rate_counts_late_completions():
+    from repro.core.evaluate import run_policy
+
+    # one slow always-on endpoint; second task queues behind the first and
+    # blows its (tight) deadline
+    eps = [EndpointSpec("a", cores=1, idle_power_w=1.0, tdp_w=10.0,
+                        queue_delay_s=0.0, has_batch_scheduler=False)]
+    profiles = {"f": {"a": (10.0, 1.0)}}
+    tasks = [
+        TaskSpec(id="t0", fn="f", deadline=11.0),
+        TaskSpec(id="t1", fn="f", deadline=11.0),   # will end ~20s: miss
+    ]
+    trace = WorkloadTrace(
+        name="misses", tasks=tasks, arrivals=np.array([0.0, 0.0]),
+        endpoints=eps, profiles=profiles, signatures={"f": np.ones(4)},
+    )
+    r = run_policy(trace, "mhra", seed=0)
+    assert (r.deadline_misses, r.deadline_total) == (1, 2)
+    assert r.deadline_miss_rate == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# WfCommons importer
+# ---------------------------------------------------------------------------
+
+
+def test_wfcommons_sample_loads_and_validates():
+    from repro.workloads import load_wfcommons_sample
+
+    tr = load_wfcommons_sample()
+    assert len(tr) == 19
+    assert tr.functions == sorted([
+        "mProject", "mDiffFit", "mConcatFit", "mBgModel", "mBackground",
+        "mImgtbl", "mAdd", "mViewer",
+    ])
+    # submission order is topological (validate() raised otherwise) and
+    # dep payloads come from the matched parent output files
+    by_id = {t.id: t for t in tr.tasks}
+    viewer = by_id["mViewer_00000001"]
+    assert viewer.deps == ("mAdd_00000001",)
+    assert viewer.dep_bytes == pytest.approx(1.6e7)     # mosaic.fits
+    diff = by_id["mDiffFit_00000001"]
+    assert len(diff.deps) == 2
+    assert diff.dep_bytes == pytest.approx(8.0e6 / 2)   # two p*.fits / 2
+    # every function has a per-endpoint profile the sim can execute
+    for fn in tr.functions:
+        assert set(tr.profiles[fn]) == {e.name for e in tr.endpoints}
+
+
+def test_wfcommons_sample_runs_through_engine_and_lookahead():
+    from repro.core.evaluate import run_policy, verify_dag_order
+    from repro.workloads import load_wfcommons_sample
+
+    tr = load_wfcommons_sample(deadline_slack=(8.0, 16.0))
+    d, w = run_policy(tr, "lookahead_mhra", engine="delta", alpha=0.3,
+                      seed=0, return_windows=True)
+    s = run_policy(tr, "lookahead_mhra", engine="soa", alpha=0.3, seed=0)
+    assert verify_dag_order(w) == 37
+    assert d.assignments == s.assignments
+    assert d.deadline_total == 19
+
+
+def test_wfcommons_rejects_cycles_and_missing_runtimes(tmp_path):
+    import json
+
+    from repro.workloads import load_wfcommons
+
+    cyc = {"workflow": {"tasks": [
+        {"name": "a", "runtimeInSeconds": 1.0, "parents": ["b"]},
+        {"name": "b", "runtimeInSeconds": 1.0, "parents": ["a"]},
+    ]}}
+    p = tmp_path / "cyc.json"
+    p.write_text(json.dumps(cyc))
+    with pytest.raises(ValueError, match="cycle"):
+        load_wfcommons(p)
+    bad = {"workflow": {"tasks": [{"name": "a", "parents": []}]}}
+    p2 = tmp_path / "bad.json"
+    p2.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="runtime"):
+        load_wfcommons(p2)
+
+
+def test_wfcommons_derives_parents_from_children(tmp_path):
+    import json
+
+    from repro.workloads import load_wfcommons
+
+    doc = {"workflow": {"jobs": [
+        {"name": "up_001", "runtime": 2.0, "children": ["down_001"],
+         "files": [{"link": "output", "name": "o.dat", "sizeInBytes": 5e6}]},
+        {"name": "down_001", "runtime": 1.0,
+         "files": [{"link": "input", "name": "o.dat", "sizeInBytes": 5e6}]},
+    ]}}
+    p = tmp_path / "legacy.json"
+    p.write_text(json.dumps(doc))
+    tr = load_wfcommons(p)
+    child = next(t for t in tr.tasks if t.id == "down_001")
+    assert child.deps == ("up_001",)
+    assert child.dep_bytes == pytest.approx(5e6)
+    assert child.fn == "down"                      # instance suffix stripped
+
+
+def test_wfcommons_control_only_edges_stay_free(tmp_path):
+    """Recorded file data with no parent-produced inputs means the edge
+    really carries nothing — no phantom default payload."""
+    import json
+
+    from repro.workloads import load_wfcommons
+
+    doc = {"workflow": {"tasks": [
+        {"name": "gate_001", "runtimeInSeconds": 1.0, "parents": [],
+         "files": [{"link": "output", "name": "log.txt", "sizeInBytes": 10}]},
+        {"name": "work_001", "runtimeInSeconds": 2.0, "parents": ["gate_001"],
+         "files": [{"link": "input", "name": "external.dat",
+                    "sizeInBytes": 1e9}]},
+        {"name": "blind_001", "runtimeInSeconds": 2.0, "parents": ["gate_001"]},
+    ]}}
+    p = tmp_path / "ctl.json"
+    p.write_text(json.dumps(doc))
+    tr = load_wfcommons(p, default_dep_bytes=7e5)
+    by_id = {t.id: t for t in tr.tasks}
+    assert by_id["work_001"].dep_bytes == 0.0      # data recorded, none pulled
+    assert by_id["blind_001"].dep_bytes == 7e5     # no file data: fallback
