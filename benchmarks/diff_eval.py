@@ -41,7 +41,9 @@ import statistics
 import sys
 
 # metric -> lower_is_better (EDP/gCO2/CDP shrink when things improve;
-# GPS-UP ratios grow)
+# GPS-UP ratios grow).  The latency percentiles make BENCH_latency.json
+# payloads diffable with the same tool: same row shape, so the pairwise
+# and rolling-history modes work unchanged.
 METRICS: dict[str, bool] = {
     "edp": True,
     "greenup": False,
@@ -49,6 +51,9 @@ METRICS: dict[str, bool] = {
     "powerup": False,
     "carbon_g": True,
     "cdp": True,
+    "p50_ms": True,
+    "p95_ms": True,
+    "p99_ms": True,
 }
 
 OK, WARN, FAIL = "OK", "WARN", "FAIL"

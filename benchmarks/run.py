@@ -40,6 +40,7 @@ def main() -> None:
         alpha_sweep,
         molecular_design,
         monitoring_overhead,
+        placement_latency,
         placement_strategies,
         profile_tasks,
         roofline,
@@ -78,6 +79,13 @@ def main() -> None:
         # standalone `python benchmarks/scheduler_overhead.py` run)
         "scheduler_overhead": lambda: scheduler_overhead.main(
             [] if args.full else ["--tasks", "1792"]
+        ),
+        # per-decision latency SLO cell; --full runs the whole fleet sweep
+        # + the 16k long-stream pruning replay, default is one smoke cell
+        "placement_latency": lambda: placement_latency.main(
+            (["--out", "BENCH_latency.json"] if args.full
+             else ["--tasks", "192" if args.quick else "640",
+                   "--out", "/tmp/BENCH_latency_smoke.json"])
         ),
         "placement_strategies": lambda: placement_strategies.main(n_per=n_per),
         "alpha_sweep": lambda: alpha_sweep.main() if not args.quick else _alpha(n_alpha),

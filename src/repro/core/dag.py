@@ -20,9 +20,27 @@ quantities lookahead policies score with:
 - **per-edge producer endpoints** ``producer(t)`` — where a completed
   task's output physically lives, recorded at completion time.
 
-Ranks are recomputed lazily (one Kahn pass over the known graph) whenever
-the graph or the runtime estimates were invalidated, so engines that
-never query the view pay only dict appends per submission.
+Ranks are recomputed lazily (one Kahn pass over the retained graph)
+whenever the graph or the runtime estimates were invalidated, so engines
+that never query the view pay only dict appends per submission.
+
+**Live-state pruning.**  With ``prune=True`` (the default) the view
+retires every node *at the moment it completes*, so a rank refresh costs
+O(live) — the uncompleted tasks — instead of O(total-ever-submitted).
+Immediate retirement is safe because a completed node can never be a
+**descendant** of a live one (a child only completes after its parents),
+and every live-node planning quantity reads downward: ``up_rank`` and
+``out_bytes``/``desc_bytes`` walk children only, ``rank_scale`` is the
+max ``up_rank`` over live nodes, and ``down_rank``/``live_depth`` are
+defined over *uncompleted* parents in both modes (a completed parent's
+output already exists, so it imposes no future wait).  Producer
+endpoints are kept forever — transfer billing for late-arriving children
+still resolves — but retired nodes no longer carry ranks or mass.
+Pruning is therefore *placement-parity-safe*: :class:`LookaheadWeights`
+snapshots — and every engine's assignments — are identical with pruning
+on or off (``tests/test_live_state.py``).  Rank/mass queries on
+*completed* nodes are the only thing pruning may change (they fall back
+to 0 once the node retires).
 
 :class:`LookaheadWeights` is the per-placement-call snapshot the greedy
 engines consume (the :class:`~repro.core.carbon.CarbonWeights` analogue):
@@ -32,6 +50,7 @@ mean hop distances, frozen so engine run-memoization stays valid.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Mapping, Sequence
 
 from repro.core.transfer import E_INC_J_PER_BYTE
@@ -47,19 +66,23 @@ class DAGView:
     become live once the parent arrives (the trace validator guarantees
     topological submission, so in practice parents always precede).
 
-    Completed tasks stay in the graph (their producer endpoints remain
-    queryable and ``rank_scale`` keeps the campaign-wide normalizer
-    stable), so a rank refresh is O(total submitted); pruning finished
-    subgraphs for very long streaming campaigns is a ROADMAP follow-on.
+    ``prune`` controls the live-state lifecycle (see module docstring):
+    ``True`` retires each node the moment it completes, so refreshes stay
+    O(live); ``False`` keeps every node forever (the pre-pruning
+    behaviour, used by the parity tests as the reference).
     """
 
-    def __init__(self, runtime: Callable[[str], float] | None = None):
+    def __init__(self, runtime: Callable[[str], float] | None = None,
+                 prune: bool = True):
         self._runtime = runtime or (lambda fn: 1.0)
+        self._prune = prune
         self._fn: dict[str, str] = {}
         self._parents: dict[str, tuple[str, ...]] = {}
         self._children: dict[str, list[tuple[str, float]]] = {}
         self._producers: dict[str, tuple[str, float]] = {}
-        self._edges = 0
+        self._edges = 0          # retained edges (all edges when prune=False)
+        self._retired = 0        # nodes dropped from the rank graph so far
+        self._retired_buf: list[str] = []   # drained by the engine (timeline GC)
         self._dirty = True
         self._up: dict[str, float] = {}
         self._down: dict[str, float] = {}
@@ -67,6 +90,12 @@ class DAGView:
         self._out_bytes: dict[str, float] = {}
         self._rt: dict[str, float] = {}
         self._rank_scale = 1.0
+        self._live_depth = 0
+        self._live_width = 0
+        # rank-refresh stall accounting (the latency benchmark's metric)
+        self._refreshes = 0
+        self._last_refresh_s = 0.0
+        self._max_refresh_s = 0.0
 
     # -- construction (engine side) ----------------------------------------
     def add_task(self, task) -> None:
@@ -78,14 +107,48 @@ class DAGView:
         self._parents[task.id] = tuple(task.deps)
         self._children.setdefault(task.id, [])
         for p in task.deps:
+            if p in self._producers and p not in self._fn:
+                # parent already retired: the edge can never influence a
+                # live rank (the child resolves its transfer inputs from
+                # the retained producer record instead)
+                continue
             self._children.setdefault(p, []).append((task.id, task.dep_bytes))
             self._edges += 1
         self._dirty = True
 
     def complete(self, task_id: str, endpoint: str, t_end: float) -> None:
         """Record where a finished task's output lives (producer endpoint)
-        and when it materialized."""
+        and when it materialized; with pruning on, retire the node from
+        the rank graph immediately (see module docstring)."""
         self._producers[task_id] = (endpoint, t_end)
+        if task_id in self._fn:
+            # the live set shrank: live-only rank aggregates (rank_scale,
+            # depth/width) are stale in BOTH modes — identical refresh
+            # cadence is what keeps pruned/unpruned placements bitwise
+            # equal (unpruned just pays the refresh over every node ever
+            # submitted, which is the cost pruning exists to bound)
+            self._dirty = True
+            if self._prune:
+                self._retire(task_id)
+
+    def _retire(self, task_id: str) -> None:
+        """Drop a just-completed node from the rank graph.  Its outgoing
+        edges all point at retained (live) children, so the retained-edge
+        counter drops by the child-list length; its incoming edges were
+        already released when each parent retired at *its* completion —
+        except edges from parents that were never registered, which the
+        child releases (and unlinks) here."""
+        parents = self._parents.pop(task_id, ())
+        del self._fn[task_id]
+        self._edges -= len(self._children.pop(task_id, ()))
+        for p in parents:
+            if p not in self._fn and p not in self._producers:
+                kids = self._children.get(p)
+                if kids:
+                    self._children[p] = [e for e in kids if e[0] != task_id]
+                    self._edges -= len(kids) - len(self._children[p])
+        self._retired += 1
+        self._retired_buf.append(task_id)
 
     def invalidate(self) -> None:
         """Force a rank recompute on next query (the engine calls this
@@ -94,6 +157,7 @@ class DAGView:
 
     # -- queries (policy side) ---------------------------------------------
     def __len__(self) -> int:
+        """Retained (rank-graph) nodes — O(live) under pruning."""
         return len(self._fn)
 
     def __contains__(self, task_id: str) -> bool:
@@ -102,6 +166,17 @@ class DAGView:
     @property
     def n_edges(self) -> int:
         return self._edges
+
+    @property
+    def retired(self) -> int:
+        """Nodes retired from the rank graph so far (0 when prune=False)."""
+        return self._retired
+
+    def drain_retired(self) -> list[str]:
+        """Task ids retired since the last drain — the engine drops their
+        live-state timeline entries (scoring never reads them)."""
+        out, self._retired_buf = self._retired_buf, []
+        return out
 
     def has_edges(self) -> bool:
         return self._edges > 0
@@ -132,7 +207,11 @@ class DAGView:
         return up - self._rt[self._fn[task_id]]
 
     def down_rank(self, task_id: str) -> float:
-        """Longest-path seconds from any source to this task's start."""
+        """Longest-path seconds of *remaining upstream work* before this
+        task can start: the max over uncompleted parents of their
+        ``down_rank + runtime`` (a completed parent's output already
+        exists, so it contributes no future wait — and, equivalently, the
+        value is identical with pruning on or off)."""
         self._refresh()
         return self._down.get(task_id, 0.0)
 
@@ -150,19 +229,45 @@ class DAGView:
 
     @property
     def rank_scale(self) -> float:
-        """max up_rank over the graph (>= its longest chain); rank weights
-        are normalized by it so the lookahead term stays O(makespan)."""
+        """max up_rank over the *live* (uncompleted) nodes; rank weights
+        are normalized by it so the lookahead term stays O(makespan).
+        Restricting the max to live nodes keeps the normalizer identical
+        with pruning on or off — completed roots would otherwise pin it
+        to the campaign-wide max in one mode only."""
         self._refresh()
         return self._rank_scale
+
+    @property
+    def live_depth(self) -> int:
+        """Longest live chain, in nodes (0 when nothing is live)."""
+        self._refresh()
+        return self._live_depth
+
+    @property
+    def live_width(self) -> int:
+        """Widest live level (max antichain by depth level; 0 when empty)."""
+        self._refresh()
+        return self._live_width
+
+    def refresh_stats(self) -> dict[str, float]:
+        """Rank-refresh stall accounting: number of refreshes plus the
+        last/worst wall-clock seconds one cost — the latency benchmark's
+        "max rank-refresh stall" comes from ``max_s``."""
+        return {
+            "refreshes": float(self._refreshes),
+            "last_s": self._last_refresh_s,
+            "max_s": self._max_refresh_s,
+        }
 
     # -- one-pass recompute -------------------------------------------------
     def _refresh(self) -> None:
         if not self._dirty:
             return
+        t0 = time.perf_counter()
         fns = self._fn
         rt = {fn: float(self._runtime(fn)) for fn in set(fns.values())}
-        # Kahn topological order over the known nodes (edges to unknown
-        # parents are ignored until the parent is registered)
+        # Kahn topological order over the retained nodes (edges to unknown
+        # or retired parents are ignored)
         indeg = {
             tid: sum(1 for p in self._parents[tid] if p in fns)
             for tid in fns
@@ -173,9 +278,10 @@ class DAGView:
             tid = order[head]
             head += 1
             for child, _ in self._children.get(tid, ()):  # noqa: B007
-                indeg[child] -= 1
-                if indeg[child] == 0:
-                    order.append(child)
+                if child in indeg:
+                    indeg[child] -= 1
+                    if indeg[child] == 0:
+                        order.append(child)
         # a cycle leaves its members out of `order`; they simply get no
         # ranks (downstream .get() defaults apply) — the engine's drain
         # deadlock check is where cycles actually get diagnosed
@@ -196,18 +302,65 @@ class DAGView:
             mass[tid] = m
             out_b[tid] = ob
         down: dict[str, float] = {}
+        producers = self._producers
+        # live structure: depth levels over uncompleted nodes only (a
+        # completed parent contributes level 0 — its children are live
+        # roots), plus the widest level.  Identical with pruning on or
+        # off: live nodes and live-live edges are the same set.
+        level: dict[str, int] = {}
+        width_at: dict[int, int] = {}
+        depth = 0
+        scale = 0.0
         for tid in order:
             best = 0.0
             for p in self._parents[tid]:
-                if p in fns:
+                # uncompleted parents only: completed upstream work waits
+                # for nothing, and pruning may already have dropped it
+                if p in fns and p not in producers:
                     d = down[p] + rt[fns[p]]
                     if d > best:
                         best = d
             down[tid] = best
+            if tid not in producers:
+                lvl = 1
+                for p in self._parents[tid]:
+                    pl = level.get(p)
+                    if pl is not None and pl + 1 > lvl:
+                        lvl = pl + 1
+                level[tid] = lvl
+                width_at[lvl] = width_at.get(lvl, 0) + 1
+                if lvl > depth:
+                    depth = lvl
+                u = up[tid]
+                if u > scale:
+                    scale = u
         self._up, self._down, self._mass, self._out_bytes = up, down, mass, out_b
         self._rt = rt
-        self._rank_scale = max(max(up.values(), default=1.0), 1e-9)
+        self._rank_scale = max(scale if level else 1.0, 1e-9)
+        self._live_depth = depth
+        self._live_width = max(width_at.values(), default=0)
         self._dirty = False
+        dt = time.perf_counter() - t0
+        self._refreshes += 1
+        self._last_refresh_s = dt
+        if dt > self._max_refresh_s:
+            self._max_refresh_s = dt
+
+
+def structure_scale(depth: int, width: int) -> float:
+    """Lookahead steering strength warranted by the live planning graph:
+    ``min(1, (depth-1)/2) * min(1, width/2)``.
+
+    A 2-node chain (depth 2, width 1) gets 0.25 — there is almost no
+    downstream structure to steer for, and full-strength ``lam`` was
+    measured to over-steer such batches (PR 5 follow-on).  Any graph at
+    least 3 levels deep and 2 wide (a diamond, every paper workload)
+    scales by exactly 1.0, so headline placements are unchanged."""
+    if depth <= 1:
+        return 0.0
+    d = (depth - 1) / 2.0
+    w = width / 2.0
+    return min(1.0, d) * min(1.0, w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,8 +403,17 @@ class LookaheadWeights:
         """Snapshot the lookahead terms for one batch; returns ``None``
         when no task in the batch has downstream structure (every weight
         zero), so the caller can fall back to the bit-identical myopic
-        path."""
+        path.
+
+        The effective ``lam`` is scaled by :func:`structure_scale` of the
+        live graph's depth/width, so near-structureless DAGs (a 2-node
+        chain) are steered proportionally less — full-strength shaping on
+        a tiny graph was measured to over-steer placements.  The scale is
+        1.0 for every graph at least 3 levels deep and 2 wide."""
         if not dag.has_edges():
+            return None
+        sscale = structure_scale(dag.live_depth, dag.live_width)
+        if sscale == 0.0 or lam == 0.0:
             return None
         scale = dag.rank_scale
         tail_w: dict[str, float] = {}
@@ -271,4 +433,4 @@ class LookaheadWeights:
         for a in names:
             others = [transfer.hops(a, b) for b in names if b != a]
             hm.append(sum(others) / len(others) if others else 0.0)
-        return cls(tail_w, out_j, tuple(hm), lam)
+        return cls(tail_w, out_j, tuple(hm), lam * sscale)

@@ -36,11 +36,24 @@ class TaskDB:
     at insertion time — call :meth:`reindex` after mutating them.
     """
 
-    def __init__(self, path: str | None = None):
+    def __init__(self, path: str | None = None,
+                 max_records: int | None = None):
+        """``max_records`` caps the retained record list to a rolling
+        window of the most recent records (None = keep all).  Aggregates
+        are *cumulative over everything ever added* either way — eviction
+        compacts the raw rows into the already-maintained rolling
+        summaries, so report queries stay exact while memory stays
+        O(max_records) on unbounded streams.  With persistence enabled,
+        call :meth:`save` at least every ``max_records`` adds or evicted
+        rows are gone before they hit disk."""
+        if max_records is not None and max_records <= 0:
+            raise ValueError(f"max_records must be positive, got {max_records}")
         self.path = pathlib.Path(path) if path else None
+        self.max_records = max_records
         self.records: list[TaskRecord] = []
         self._reset_aggregates()
-        self._saved = 0            # records already persisted to self.path
+        self._added = 0            # records ever added (monotone)
+        self._saved = 0            # records ever persisted to self.path
         self._legacy_file = False  # loaded from a JSON-array blob
         if self.path and self.path.exists():
             self.load()
@@ -77,14 +90,26 @@ class TaskDB:
 
     def add(self, rec: TaskRecord) -> None:
         self.records.append(rec)
+        self._added += 1
         self._index(rec)
+        if (self.max_records is not None
+                and len(self.records) > self.max_records):
+            del self.records[:len(self.records) - self.max_records]
 
     def extend(self, recs) -> None:
         for r in recs:
             self.add(r)
 
+    @property
+    def evicted(self) -> int:
+        """Records compacted out of the rolling window so far."""
+        return self._added - len(self.records)
+
     def reindex(self) -> None:
-        """Rebuild aggregates from scratch (after in-place record edits)."""
+        """Rebuild aggregates from scratch (after in-place record edits).
+        Under ``max_records`` this only sees the retained window —
+        evicted rows' contributions are rebuilt from nothing, so reindex
+        is for the unbounded configuration (or right after load)."""
         self._reset_aggregates()
         for r in self.records:
             self._index(r)
@@ -127,11 +152,15 @@ class TaskDB:
                 for r in self.records:
                     f.write(json.dumps(dataclasses.asdict(r)) + "\n")
             self._legacy_file = False
-        elif self._saved < len(self.records):
+        elif self._saved < self._added:
+            # the unsaved tail is the last (_added - _saved) retained rows;
+            # anything evicted before this save never reaches disk
+            tail = self.records[max(0, len(self.records)
+                                    - (self._added - self._saved)):]
             with self.path.open("a") as f:
-                for r in self.records[self._saved:]:
+                for r in tail:
                     f.write(json.dumps(dataclasses.asdict(r)) + "\n")
-        self._saved = len(self.records)
+        self._saved = self._added
 
     def load(self) -> None:
         text = self.path.read_text()
@@ -144,5 +173,9 @@ class TaskDB:
             data = [json.loads(line) for line in text.splitlines() if line.strip()]
             self._legacy_file = False
         self.records = [TaskRecord(**d) for d in data]
-        self._saved = len(self.records)
-        self.reindex()
+        self._added = self._saved = len(self.records)
+        self.reindex()      # aggregates over *everything* in the file...
+        if (self.max_records is not None
+                and len(self.records) > self.max_records):
+            # ...then compact the raw rows down to the rolling window
+            del self.records[:len(self.records) - self.max_records]

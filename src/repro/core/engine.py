@@ -35,7 +35,9 @@ from repro.core.executor import attribute_window
 from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
 from repro.core.power_model import LinearPowerModel
 from repro.core.predictor import TaskProfileStore
-from repro.core.scheduler import Schedule, SchedulerState, SoAState, TaskSpec
+from repro.core.scheduler import (
+    Schedule, SchedulerState, SoAState, TaskSpec, auto_engine,
+)
 from repro.core.testbed import SimResult, TestbedSim
 from repro.core.transfer import TransferModel
 
@@ -136,21 +138,40 @@ class OnlineEngine:
         db: TaskDB | None = None,
         monitoring: bool = True,
         site: str | None = None,
-        engine: str | None = None,
+        engine: str | None = "auto",
         carbon: CarbonIntensitySignal | None = None,
         defer_horizon_s: float = 0.0,
         defer_max: int = 256,
         defer_margin: float = 0.05,
         promotion: str = "epoch",
+        prune: bool = True,
+        retain_windows: int | None = None,
     ):
         """``engine`` selects the scheduling backend for registry-name
         mhra/cluster_mhra/carbon_mhra policies ("delta" or "soa") and the
         live state's layout: "soa" carries a :class:`SoAState` (flat
         arrays) across windows, anything else the heap-backed
-        :class:`SchedulerState`.  With a policy *instance*, the state
-        layout follows the instance's own ``engine`` attribute.
-        ``engine="clone"`` is rejected here: the clone engine cannot
-        place against a live state, so every window would fail.
+        :class:`SchedulerState`.  The default ``"auto"`` resolves the
+        calibrated fleet-size/window-size crossover
+        (:func:`~repro.core.scheduler.auto_engine`) when the first window
+        flushes — using that window's actual size — and the layout then
+        stays fixed for the engine's lifetime, so no window ever pays a
+        cross-layout (``from_heap``/``write_back``) conversion.  With a
+        policy *instance*, the state layout follows the instance's own
+        ``engine`` attribute (an instance carrying ``"auto"`` defers the
+        same way).  ``engine="clone"`` is rejected here: the clone engine
+        cannot place against a live state, so every window would fail.
+
+        ``prune`` (default on) retires finished subgraphs from the live
+        :class:`~repro.core.dag.DAGView` and drops their timeline entries
+        from the live state, keeping per-decision cost a function of
+        *live* tasks instead of everything ever submitted.  Producer
+        endpoints of retained frontier nodes survive retirement, so
+        transfer billing for still-waiting children is unchanged —
+        placements are bitwise-identical with pruning on or off.
+        ``retain_windows`` caps the kept :class:`WindowResult` history
+        (None = keep all); ``summary()`` aggregates stay exact either
+        way, via running counters.
 
         ``carbon`` exposes a grid-intensity signal to carbon-aware
         policies (via the per-window :class:`PolicyContext`) and, with
@@ -183,10 +204,18 @@ class OnlineEngine:
             self.policy = get_policy(policy, engine=engine)
         else:
             self.policy = get_policy(policy)
-        self.engine = (
-            engine if engine is not None
-            else getattr(self.policy, "engine", "delta")
-        )
+        pol_engine = getattr(self.policy, "engine", None)
+        if engine is None or (engine == "auto"
+                              and isinstance(policy, PlacementPolicy)):
+            # a policy instance knows its engine; follow it (it may itself
+            # carry "auto", which defers to the first window)
+            self.engine = pol_engine if pol_engine is not None else "delta"
+        elif engine == "auto" and pol_engine is None:
+            # engine-less policies (round_robin, single_site) gain nothing
+            # from the SoA layout; keep the heap default
+            self.engine = "delta"
+        else:
+            self.engine = engine
         if self.engine == "clone":
             raise ValueError(
                 "OnlineEngine requires a live-state engine ('delta' or "
@@ -201,13 +230,25 @@ class OnlineEngine:
         self.db = db or TaskDB()
         self.models = {e.name: LinearPowerModel() for e in self.endpoints}
         self.monitoring = monitoring
-        state_cls = SoAState if self.engine == "soa" else SchedulerState
-        self.state = state_cls(self.endpoints, self.transfer)
+        if self.engine == "auto":
+            # resolved at the first flush, when the window size is known;
+            # self.engine then becomes the concrete choice
+            self.state = None
+        else:
+            state_cls = SoAState if self.engine == "soa" else SchedulerState
+            self.state = state_cls(self.endpoints, self.transfer)
+        self.prune = prune
+        self.retain_windows = retain_windows
         self.pending: list[TaskSpec] = []
         self.windows: list[WindowResult] = []
+        # running aggregates so summary() stays exact under retain_windows
+        self._n_windows = 0
+        self._n_tasks = 0
+        self._sched_s = 0.0
+        self._attr_j = 0.0
         self.waiting: dict[str, TaskSpec] = {}       # id -> dep-blocked task
         self.completed: dict[str, tuple[str, float]] = {}  # id -> (ep, t_end)
-        self.dag = DAGView(runtime=self._runtime_estimate)
+        self.dag = DAGView(runtime=self._runtime_estimate, prune=prune)
         self.carbon = carbon
         if defer_horizon_s > 0.0 and carbon is None:
             raise ValueError("defer_horizon_s needs a carbon signal")
@@ -380,6 +421,12 @@ class OnlineEngine:
         ctx = PolicyContext(self.endpoints, self.store, self.transfer,
                             self.alpha, carbon=self.carbon, now=submitted_at,
                             dag=self.dag)
+        if self.state is None:
+            # engine="auto": first window — resolve the crossover on the
+            # actual fleet and window size, then keep that layout for life
+            self.engine = auto_engine(len(self.endpoints), len(tasks))
+            state_cls = SoAState if self.engine == "soa" else SchedulerState
+            self.state = state_cls(self.endpoints, self.transfer)
         # placement previews must not start tasks before this window opened
         self.state.advance_to(submitted_at)
         t0 = time.perf_counter()
@@ -404,12 +451,26 @@ class OnlineEngine:
                 _, end = schedule.timeline[t.id]
                 self.completed[t.id] = (assignments[t.id], end)
                 self.dag.complete(t.id, assignments[t.id], end)
+        # timeline GC: completions may have retired finished subgraphs from
+        # the planning graph — their (start, end) records can never be read
+        # again (scoring only consults endpoint registers; transfer billing
+        # reads retained producer records), so the live state sheds them
+        retired = self.dag.drain_retired()
+        if retired:
+            self.state.drop_timeline(retired)
         res = WindowResult(
-            index=len(self.windows), submitted_at=submitted_at, tasks=tasks,
+            index=self._n_windows, submitted_at=submitted_at, tasks=tasks,
             schedule=schedule, assignments=assignments, scheduling_s=sched_s,
             sim=sim, attributed_j=attributed,
         )
+        self._n_windows += 1
+        self._n_tasks += len(tasks)
+        self._sched_s += sched_s
+        self._attr_j += attributed
         self.windows.append(res)
+        if (self.retain_windows is not None
+                and len(self.windows) > self.retain_windows):
+            del self.windows[:len(self.windows) - self.retain_windows]
         self._promote_ready()
         return res
 
@@ -459,16 +520,18 @@ class OnlineEngine:
 
     # ------------------------------------------------------------------
     def summary(self) -> EngineSummary:
-        e, c, tj = self.state.metrics()
+        e, c, tj = (
+            self.state.metrics() if self.state is not None else (0.0, 0.0, 0.0)
+        )
         last = self.windows[-1].schedule.objective if self.windows else float("nan")
         return EngineSummary(
-            windows=len(self.windows),
-            tasks=sum(len(w.tasks) for w in self.windows),
+            windows=self._n_windows,
+            tasks=self._n_tasks,
             objective=last,
             energy_j=e,
             makespan_s=c,
             transfer_j=tj,
-            scheduling_s=sum(w.scheduling_s for w in self.windows),
-            attributed_j=sum(w.attributed_j for w in self.windows),
+            scheduling_s=self._sched_s,
+            attributed_j=self._attr_j,
             deferred=len(self._deferred_ids),
         )

@@ -34,7 +34,7 @@ from repro.core.predictor import TaskProfileStore
 from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
 from repro.core.transfer import TransferModel
 
-ENGINES = ("delta", "clone", "soa")
+ENGINES = ("delta", "clone", "soa", "auto")
 
 
 def _check_engine(engine: str) -> str:
@@ -148,7 +148,10 @@ class MHRAPolicy(PlacementPolicy):
 
     ``engine`` selects the greedy backend: ``delta`` (incremental,
     default), ``soa`` (structure-of-arrays, fastest at large fleets /
-    task counts), or ``clone`` (the seed reference).
+    task counts), ``clone`` (the seed reference), or ``auto`` (the
+    calibrated fleet-size/window-size crossover — see
+    :func:`~repro.core.scheduler.auto_engine`; in online mode it follows
+    the live state's layout so no cross-layout conversion ever happens).
     """
 
     name = "mhra"

@@ -64,6 +64,33 @@ def reset_memo_stats() -> None:
     MEMO_STATS["misses"] = 0
 
 
+#: Calibrated ``engine="auto"`` crossover (measured on the scaled SeBS
+#: testbed, min-of-30 timings, post constant-factor shave): soa beats
+#: delta at *every* batch size from 16 endpoints up (0.98x at the n=4
+#: worst case, >1.2x elsewhere); below 16 endpoints its per-call array
+#: setup needs endpoints*tasks score cells to amortize — measured break-
+#: even at 4 eps x 64 tasks and 8 eps x 32 tasks, i.e. ~256 cells.
+AUTO_SOA_MIN_ENDPOINTS = 16
+AUTO_SOA_MIN_CELLS = 256
+
+
+def auto_engine(n_endpoints: int, n_tasks: int | None = None) -> str:
+    """Resolve ``engine="auto"`` to a concrete greedy backend.
+
+    Fleet-size/window-size crossover: ``soa`` needs enough endpoints for
+    its vectorized candidate passes to beat delta's python loop, and (in
+    batch mode, where ``n_tasks`` is known) enough score cells to
+    amortize its per-call array setup.  ``n_tasks=None`` (streaming:
+    window sizes are unknown up front) decides on fleet size alone,
+    conservatively — delta is never worse than soa by much at small
+    fleets, while soa's setup can triple a tiny window's latency."""
+    if n_endpoints >= AUTO_SOA_MIN_ENDPOINTS:
+        return "soa"
+    if n_tasks is None:
+        return "delta"
+    return "soa" if n_endpoints * n_tasks >= AUTO_SOA_MIN_CELLS else "delta"
+
+
 @dataclasses.dataclass(frozen=True)
 class TaskSpec:
     """One task submission.
@@ -183,6 +210,19 @@ class SchedulerState:
         self.transfer_j = other.transfer_j
         self.cached = other.cached
         self.timeline = other.timeline
+
+    def drop_timeline(self, task_ids) -> int:
+        """Retire finished tasks' timeline entries (live-state pruning:
+        the online engine drops a task once it has completed, so per-window
+        timeline snapshots and heuristic-search clones stay O(live) instead
+        of O(total-ever-placed)).  Scoring never reads the timeline, so
+        this cannot affect placement parity.  Returns the count dropped."""
+        pop = self.timeline.pop
+        n = 0
+        for tid in task_ids:
+            if pop(tid, None) is not None:
+                n += 1
+        return n
 
     # -- transfer bookkeeping shared by assign() and preview() -------------
     def _transfer_delta(self, unit, name: str):
@@ -338,6 +378,15 @@ class SoAState:
         self.transfer_j = other.transfer_j
         self.cached = other.cached
         self.timeline = other.timeline
+
+    def drop_timeline(self, task_ids) -> int:
+        """Same contract as :meth:`SchedulerState.drop_timeline`."""
+        pop = self.timeline.pop
+        n = 0
+        for tid in task_ids:
+            if pop(tid, None) is not None:
+                n += 1
+        return n
 
     def advance_to(self, now: float) -> None:
         """Vectorized twin of SchedulerState.advance_to: raise every core's
@@ -746,6 +795,13 @@ def mhra(
             raise ValueError("engine='clone' does not support live state")
         return _mhra_clone(tasks, endpoints, store, transfer, alpha,
                            heuristics, clusters, carbon, lookahead)
+    if engine == "auto":
+        if state is not None:
+            # online mode: match the live state's layout so no window ever
+            # pays a from_heap/write_back conversion round-trip
+            engine = "soa" if isinstance(state, SoAState) else "delta"
+        else:
+            engine = auto_engine(len(endpoints), len(tasks))
     if engine not in ("delta", "soa"):
         raise ValueError(f"unknown engine {engine!r}")
 
@@ -780,6 +836,11 @@ def mhra(
             best, best_state = sched, end_state
     if state is not None:
         state.replace_with(best_state)
+        # the winner's timeline IS the live timeline now; snapshot it so
+        # the returned Schedule survives later windows' mutations (losing
+        # heuristics' schedules never get copied — one O(live) copy per
+        # call instead of one per heuristic)
+        best.timeline = dict(best.timeline)
     if soa_live is not None:
         soa_live.replace_with(SoAState.from_heap(state))
     return best
@@ -807,8 +868,10 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
             best, best_state = sched, end_state
     if heap_state is not None:
         best_state.write_back(heap_state)
+        best.timeline = dict(best.timeline)
     elif state is not None:
         state.replace_with(best_state)
+        best.timeline = dict(best.timeline)
     return best
 
 
@@ -1116,8 +1179,10 @@ def _greedy_delta(
     if rates is not None:
         carbon_g = state_carbon_g(state, rates)
         obj = obj + gamma * carbon_g / sf3
+    # the timeline is passed by reference: mhra() snapshots the winning
+    # heuristic's copy once, iff a live state adopts it
     sched = Schedule(assignments, obj, e, c, tj, heuristic,
-                     dict(state.timeline), carbon_g=carbon_g)
+                     state.timeline, carbon_g=carbon_g)
     return sched, state
 
 
@@ -1185,6 +1250,28 @@ def _greedy_soa(
     const = np.where(bt_mask & used, idle * span + su, 0.0) + dyn
     static = const.sum() - const
 
+    # python-float mirrors of every register the singleton fast path reads
+    # scalar-by-scalar: a numpy scalar index costs ~5x a list index, and at
+    # small fleets those constant factors dominate per-decision latency
+    # (the 4-endpoint soa-vs-delta regression).  The arrays stay
+    # authoritative for the vectorized passes; commits dual-write.  Values
+    # are the same float64 doubles either way, so parity is untouched.
+    mins_l = mins.tolist()
+    first_l = first.tolist()
+    last_l = last.tolist()
+    dyn_l = dyn.tolist()
+    const_l = const.tolist()
+    qd_l = qd_vec.tolist()
+    idle_bt_l = idle_bt.tolist()
+    su_bt_l = su_bt.tolist()
+    bt_l = bt_mask.tolist()
+    # per-endpoint slot lists are authoritative during this call (python
+    # min/index replace np.argmin/np.min reductions on tiny arrays); the
+    # flat free array is rebuilt once at the end
+    slots_l = [free[offsets[j]:offsets[j + 1]].tolist() for j in eps_r]
+    run_rt_l = run_en_l = None
+    nl_l = e_base_l = obj_l = g_base_l = lk_l = None
+
     rtT, enT = table.transposed()
     a1 = alpha / sf1
     b1 = (1.0 - alpha) / sf2
@@ -1198,6 +1285,8 @@ def _greedy_soa(
         static_g = const_g.sum() - const_g
         g_base = np.empty(n_ep)
         gbuf = np.empty(n_ep)
+        rates_l = rates_v.tolist()
+        const_g_l = const_g.tolist()
     else:
         rates_v = None
     # lookahead term: one extra vector register computed per run basis —
@@ -1208,6 +1297,7 @@ def _greedy_soa(
         lk_tail = lookahead.tail_w
         lk_out = lookahead.out_j
         hm_vec = np.asarray(lookahead.hops_mean, dtype=float)
+        hm_l = hm_vec.tolist()
         lam = lookahead.lam
         lk = np.empty(n_ep)
         lk_tailv = np.empty(n_ep)
@@ -1253,6 +1343,10 @@ def _greedy_soa(
                 "eff_add": np.where(staged, 0.0, add),
                 "eff_ready": np.where(staged, 0.0, ready) + qd_vec,
             }
+            # python-float mirrors for the scalar commit path (kept in
+            # sync with the arrays at every staging update)
+            rec["eff_add_l"] = rec["eff_add"].tolist()
+            rec["eff_ready_l"] = rec["eff_ready"].tolist()
         return rec
 
     # --- run memoization over the sorted unit stream ----------------------
@@ -1345,88 +1439,117 @@ def _greedy_soa(
                     np.multiply(hm_vec, lk_c2, out=tmp)
                     np.add(lk, tmp, out=lk)
                     np.add(obj, lk, out=obj)
+                # refresh the scalar mirrors the hit/commit path works on
+                # (arrays go stale between misses; nothing vectorized
+                # reads nl/e_base/obj/lk/g_base until the next full pass
+                # overwrites them)
+                run_rt_l = run_rt.tolist()
+                run_en_l = run_en.tolist()
+                nl_l = nl.tolist()
+                e_base_l = e_base.tolist()
+                obj_l = obj.tolist()
+                if rates_v is not None:
+                    g_base_l = g_base.tolist()
+                if lk is not None:
+                    lk_l = lk.tolist()
                 need_full = False
             else:
                 memo_hits += 1
                 rec = run_rec
-            ei = int(np.argmin(obj))
-            # ---- commit: same scalar float ops as the vectorized pass ----
+            ei = obj_l.index(min(obj_l))   # first-min, like np.argmin
+            # ---- commit: same scalar float ops as the vectorized pass,
+            # read from the python mirrors (identical doubles) ------------
             if rec is None:
-                ready_e = float(qd_vec[ei])
+                ready_e = qd_l[ei]
             else:
-                ready_e = float(rec["eff_ready"][ei])
-                transfer_j += float(rec["eff_add"][ei])
+                ready_e = rec["eff_ready_l"][ei]
+                transfer_j += rec["eff_add_l"][ei]
                 if rec["shared"] and not rec["staged"][ei]:
                     cached.add(rec["keys"][ei])
                     rec["staged"][ei] = True
                     rec["eff_add"][ei] = 0.0
-                    rec["eff_ready"][ei] = float(qd_vec[ei])
-            m_e = float(mins[ei])
+                    rec["eff_add_l"][ei] = 0.0
+                    rec["eff_ready"][ei] = qd_l[ei]
+                    rec["eff_ready_l"][ei] = qd_l[ei]
+            m_e = mins_l[ei]
             start_v = m_e if m_e >= ready_e else ready_e
             if start_v < nb0:
                 start_v = nb0
-            end_v = start_v + float(run_rt[ei])
-            f_e = float(first[ei])
+            end_v = start_v + run_rt_l[ei]
+            f_e = first_l[ei]
             nf_v = start_v if start_v < f_e else f_e
-            l_e = float(last[ei])
+            l_e = last_l[ei]
             nl_v = end_v if end_v > l_e else l_e
-            nd_v = float(dyn[ei]) + float(run_en[ei])
-            sl = free[offsets[ei]:offsets[ei + 1]]
-            sl[int(np.argmin(sl))] = end_v
-            mins[ei] = sl.min()
+            nd_v = dyn_l[ei] + run_en_l[ei]
+            # heap pop-min+push as "overwrite the first min slot": the
+            # mins register *is* the slot min, so list.index finds the
+            # same slot np.argmin would
+            sl_l = slots_l[ei]
+            sl_l[sl_l.index(m_e)] = end_v
+            m2 = min(sl_l)
+            mins[ei] = m2
+            mins_l[ei] = m2
             first[ei] = nf_v
+            first_l[ei] = nf_v
             last[ei] = nl_v
+            last_l[ei] = nl_v
             dyn[ei] = nd_v
-            const[ei] = (
-                (nl_v - nf_v) * float(idle_bt[ei]) + float(su_bt[ei]) + nd_v
-                if bt_mask[ei] else nd_v
+            dyn_l[ei] = nd_v
+            c_e = (
+                (nl_v - nf_v) * idle_bt_l[ei] + su_bt_l[ei] + nd_v
+                if bt_l[ei] else nd_v
             )
+            const[ei] = c_e
+            const_l[ei] = c_e
             if rates_v is not None:
-                const_g[ei] = float(rates_v[ei]) * float(const[ei])
+                cg_e = rates_l[ei] * c_e
+                const_g[ei] = cg_e
+                const_g_l[ei] = cg_e
             # refresh this endpoint's next-task row on the run's basis
             # (same scalar float op order as the vectorized pass)
-            ready2 = float(rec["eff_ready"][ei]) if rec is not None else ready_e
-            m2 = float(mins[ei])
+            ready2 = rec["eff_ready_l"][ei] if rec is not None else ready_e
             s2 = m2 if m2 >= ready2 else ready2
             if s2 < nb0:
                 s2 = nb0
-            e2 = s2 + float(run_rt[ei])
+            e2 = s2 + run_rt_l[ei]
             nf2 = s2 if s2 < nf_v else nf_v
             nl2 = e2 if e2 > nl_v else nl_v
-            nl[ei] = nl2
-            e_b = (c_sum_b - float(const[ei])) + (nd_v + float(run_en[ei]))
-            e_b = e_b + ((nl2 - nf2) * float(idle_bt[ei]) + float(su_bt[ei]))
+            nl_l[ei] = nl2
+            e_b = (c_sum_b - c_e) + (nd_v + run_en_l[ei])
+            e_b = e_b + ((nl2 - nf2) * idle_bt_l[ei] + su_bt_l[ei])
             if rec is not None:
-                e_b = e_b + float(rec["eff_add"][ei])
+                e_b = e_b + rec["eff_add_l"][ei]
             e_b = e_b + tj_b
-            e_base[ei] = e_b
+            e_base_l[ei] = e_b
             if rates_v is not None:
-                g_b = (cg_sum_b - float(const_g[ei])) + float(rates_v[ei]) * (
-                    ((nl2 - nf2) * float(idle_bt[ei]) + float(su_bt[ei]))
-                    + (nd_v + float(run_en[ei]))
+                g_b = (cg_sum_b - cg_e) + rates_l[ei] * (
+                    ((nl2 - nf2) * idle_bt_l[ei] + su_bt_l[ei])
+                    + (nd_v + run_en_l[ei])
                 )
-                g_base[ei] = g_b
+                g_base_l[ei] = g_b
             if lk is not None:
                 # same scalar op order as the vectorized lk pass
-                lk_e = e2 * lk_c1 + float(hm_vec[ei]) * lk_c2
-                lk[ei] = lk_e
+                lk_e = e2 * lk_c1 + hm_l[ei] * lk_c2
+                lk_l[ei] = lk_e
             if end_v > c_cur:
                 # C_max advanced: refresh every candidate's makespan terms
-                # from the cached e_base (the rest of the score is intact)
+                # from the cached e_base (the rest of the score is intact).
+                # Scalar loop over the mirrors, element-for-element the
+                # ops the vectorized refresh performed — identical floats.
                 c_cur = end_v
-                np.maximum(nl, c_cur, out=c)
-                np.multiply(c, idle_on_sum, out=e)
-                np.add(e, e_base, out=e)
-                np.multiply(e, a1, out=obj)
-                np.multiply(c, b1, out=tmp)
-                np.add(obj, tmp, out=obj)
-                if rates_v is not None:
-                    np.multiply(c, w_idle_on, out=gbuf)
-                    np.add(gbuf, g_base, out=gbuf)
-                    np.multiply(gbuf, g1, out=gbuf)
-                    np.add(obj, gbuf, out=obj)
-                if lk is not None:
-                    np.add(obj, lk, out=obj)
+                for j in eps_r:
+                    c2 = nl_l[j]
+                    if c2 < c_cur:
+                        c2 = c_cur
+                    e_s = idle_on_sum * c2 + e_base_l[j]
+                    if rates_v is None:
+                        o_v = a1 * e_s + b1 * c2
+                    else:
+                        o_v = (a1 * e_s + b1 * c2
+                               + g1 * (w_idle_on * c2 + g_base_l[j]))
+                    if lk is not None:
+                        o_v = o_v + lk_l[j]
+                    obj_l[j] = o_v
             else:
                 c2 = nl2 if nl2 > c_cur else c_cur
                 e_s = idle_on_sum * c2 + e_b
@@ -1437,7 +1560,7 @@ def _greedy_soa(
                            + g1 * (w_idle_on * c2 + g_b))
                 if lk is not None:
                     o_v = o_v + lk_e
-                obj[ei] = o_v
+                obj_l[ei] = o_v
             timeline[t0.id] = (start_v, end_v)
             assignments[t0.id] = names[ei]
             continue
@@ -1456,7 +1579,7 @@ def _greedy_soa(
                 transfer, cached, transfer_j, unit, names[ei]
             )
             ready_e += qd_vec[ei]
-            heap = free[offsets[ei]:offsets[ei + 1]].tolist()
+            heap = list(slots_l[ei])   # authoritative slots (see init)
             heapq.heapify(heap)
             f_e = first[ei]
             l_e = last[ei]
@@ -1526,20 +1649,33 @@ def _greedy_soa(
                         if k in new_keys and not rec["staged"][j]:
                             rec["staged"][j] = True
                             rec["eff_add"][j] = 0.0
+                            rec["eff_add_l"][j] = 0.0
                             rec["eff_ready"][j] = qd_vec[j]
-        free[offsets[ei]:offsets[ei + 1]] = heap
+                            rec["eff_ready_l"][j] = qd_l[j]
+        slots_l[ei] = heap
         mins[ei] = heap[0]
-        first[ei] = nf[ei]
-        last[ei] = nl[ei]
-        dyn[ei] = nd[ei]
-        if nl[ei] > c_cur:
-            c_cur = float(nl[ei])
-        const[ei] = (
-            idle_bt[ei] * (nl[ei] - nf[ei]) + su_bt[ei] + nd[ei]
-            if bt_mask[ei] else nd[ei]
+        mins_l[ei] = heap[0]
+        nf_v = float(nf[ei])
+        nl_v = float(nl[ei])
+        nd_v = float(nd[ei])
+        first[ei] = nf_v
+        first_l[ei] = nf_v
+        last[ei] = nl_v
+        last_l[ei] = nl_v
+        dyn[ei] = nd_v
+        dyn_l[ei] = nd_v
+        if nl_v > c_cur:
+            c_cur = nl_v
+        c_e = (
+            idle_bt_l[ei] * (nl_v - nf_v) + su_bt_l[ei] + nd_v
+            if bt_l[ei] else nd_v
         )
+        const[ei] = c_e
+        const_l[ei] = c_e
         if rates_v is not None:
-            const_g[ei] = float(rates_v[ei]) * float(const[ei])
+            cg_e = rates_l[ei] * c_e
+            const_g[ei] = cg_e
+            const_g_l[ei] = cg_e
         name = names[ei]
         for tid, s_v, e_v in entries:
             timeline[tid] = (s_v, e_v)
@@ -1547,6 +1683,10 @@ def _greedy_soa(
 
     MEMO_STATS["hits"] += memo_hits
     MEMO_STATS["misses"] += memo_misses
+    # the python slot lists were authoritative during the loop; restore the
+    # flat free array (the state outlives this call)
+    for j in eps_r:
+        free[offsets[j]:offsets[j + 1]] = slots_l[j]
     state.transfer_j = transfer_j
     e_tot, c_max, tj = state.metrics()
     obj_f = alpha * e_tot / sf1 + (1 - alpha) * c_max / sf2
@@ -1554,8 +1694,9 @@ def _greedy_soa(
     if carbon is not None:
         carbon_g = state_carbon_g(state, carbon.rates)
         obj_f = obj_f + carbon.gamma * carbon_g / sf3
+    # timeline by reference; _mhra_soa snapshots the winner's once
     sched = Schedule(assignments, obj_f, e_tot, c_max, tj, heuristic,
-                     dict(state.timeline), carbon_g=carbon_g)
+                     state.timeline, carbon_g=carbon_g)
     return sched, state
 
 

@@ -85,9 +85,14 @@ def test_dagview_incremental_and_producers():
     assert dag.n_edges == 1
     assert dag.up_rank("p") == 2.0                 # rank refreshed lazily
     assert dag.producer("p") is None
-    dag.complete("p", "ic", 12.5)
-    assert dag.producer("p") == ("ic", 12.5)
     assert dag.children("p") == (("k", 3.0),)
+    dag.complete("p", "ic", 12.5)
+    # completion retires the node from the rank graph immediately (it can
+    # never be a live node's descendant); the producer record survives
+    assert dag.producer("p") == ("ic", 12.5)
+    assert "p" not in dag
+    assert dag.retired == 1 and dag.drain_retired() == ["p"]
+    assert dag.children("p") == ()
 
 
 def test_lookahead_weights_snapshot():

@@ -1,0 +1,328 @@
+"""Live-state lifecycle: retire-at-completion pruning (DAGView), pruned
+vs unpruned placement parity across engines, the O(live) memory bound,
+timeline GC, rolling TaskDB/window compaction, adaptive engine
+selection, and the tiny-DAG lookahead ``lam`` scaling regression."""
+import numpy as np
+import pytest
+
+from repro.core.dag import DAGView, LookaheadWeights, structure_scale
+from repro.core.database import TaskDB
+from repro.core.counters import TaskRecord
+from repro.core.endpoint import table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import (
+    AUTO_SOA_MIN_CELLS,
+    AUTO_SOA_MIN_ENDPOINTS,
+    SchedulerState,
+    SoAState,
+    TaskSpec,
+    auto_engine,
+    mhra,
+)
+from repro.core.testbed import SEBS_FUNCTIONS, TestbedSim
+from repro.core.transfer import TransferModel
+from repro.workloads import moldesign_dag_workload
+
+
+# ---------------------------------------------------------------------------
+# DAGView retirement units
+# ---------------------------------------------------------------------------
+
+
+def _chain(n=3, prune=True):
+    dag = DAGView(runtime=lambda fn: 1.0, prune=prune)
+    for i in range(n):
+        deps = (f"t{i - 1}",) if i else ()
+        dag.add_task(TaskSpec(id=f"t{i}", fn="f", deps=deps, dep_bytes=7.0))
+    return dag
+
+
+def test_retire_at_completion_walks_down_the_chain():
+    dag = _chain()
+    assert len(dag) == 3 and dag.n_edges == 2
+    dag.complete("t0", "ic", 1.0)
+    # t0 leaves the rank graph at once, even though t1/t2 are still live
+    assert "t0" not in dag and len(dag) == 2
+    assert dag.retired == 1 and dag.n_edges == 1
+    assert dag.producer("t0") == ("ic", 1.0)      # billing record survives
+    dag.complete("t1", "theta", 2.0)
+    dag.complete("t2", "theta", 3.0)
+    assert len(dag) == 0 and dag.n_edges == 0 and dag.retired == 3
+    assert dag.drain_retired() == ["t0", "t1", "t2"]
+    assert dag.drain_retired() == []              # drained buffers clear
+
+
+def test_prune_off_retires_nothing():
+    dag = _chain(prune=False)
+    for i, t in enumerate(("t0", "t1", "t2")):
+        dag.complete(t, "ic", float(i))
+    assert len(dag) == 3 and dag.retired == 0
+    assert dag.n_edges == 2
+    assert dag.drain_retired() == []
+
+
+def test_edges_to_retired_parents_are_never_added():
+    dag = _chain(n=2)
+    dag.complete("t0", "ic", 1.0)
+    dag.complete("t1", "ic", 2.0)
+    # a straggler child naming a retired parent: no retained edge appears,
+    # and its transfer inputs resolve from the producer record instead
+    dag.add_task(TaskSpec(id="late", fn="f", deps=("t1",), dep_bytes=3.0))
+    assert dag.n_edges == 0
+    assert dag.up_rank("late") == 1.0             # no live structure above
+    assert dag.producer("t1") == ("ic", 2.0)
+
+
+def test_down_rank_counts_uncompleted_parents_only():
+    for prune in (True, False):
+        dag = _chain(prune=prune)
+        assert dag.down_rank("t2") == 2.0
+        dag.complete("t0", "ic", 1.0)
+        # t0's output exists: t2's remaining upstream wait is t1 alone --
+        # and the value is identical with pruning on or off
+        assert dag.down_rank("t2") == 1.0, prune
+
+
+def test_rank_scale_tracks_the_live_set():
+    dag = _chain(n=3)
+    assert dag.rank_scale == 3.0
+    dag.complete("t0", "ic", 1.0)
+    assert dag.rank_scale == 2.0                  # live chain is t1 -> t2
+    dag.complete("t1", "ic", 2.0)
+    assert dag.rank_scale == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Pruned vs unpruned placement parity (the guarantee the engine relies on)
+# ---------------------------------------------------------------------------
+
+
+def _replay_moldesign(engine, prune):
+    trace = moldesign_dag_workload(waves=3, docks_per_wave=6, sims_per_wave=6,
+                                   infers_per_wave=8)
+    sim = TestbedSim(trace.endpoints, profiles=trace.profiles,
+                     signatures=trace.signatures, seed=0, runtime_noise=0.0)
+    from repro.core.evaluate import warm_store
+
+    eng = OnlineEngine(
+        trace.endpoints, sim, policy="lookahead_mhra", alpha=0.3,
+        window_s=5.0, max_batch=512, store=warm_store(sim, trace, n_obs=3),
+        monitoring=False, engine=engine, prune=prune,
+    )
+    trace.replay_into(eng)
+    assignments = {}
+    for w in eng.windows:
+        assignments.update(w.assignments)
+    return eng, assignments
+
+
+@pytest.mark.parametrize("engine", ["delta", "soa", "auto"])
+def test_pruning_parity_on_moldesign_dag(engine):
+    """Multi-epoch DAG campaign: assignments and final metrics must be
+    bitwise identical with pruning on and off, for every live engine."""
+    on, a_on = _replay_moldesign(engine, prune=True)
+    off, a_off = _replay_moldesign(engine, prune=False)
+    assert a_on == a_off
+    assert on.state.metrics() == off.state.metrics()     # bitwise
+    assert on.dag.retired > 0 and off.dag.retired == 0
+    assert len(on.state.timeline) < len(off.state.timeline)
+
+
+def _epoch_tasks(epoch, width, fns=SEBS_FUNCTIONS):
+    prev = f"r{epoch - 1}" if epoch else None
+    workers = [
+        TaskSpec(id=f"e{epoch}_{j}", fn=fns[j % len(fns)],
+                 deps=(prev,) if prev else (), dep_bytes=1e6)
+        for j in range(width)
+    ]
+    reducer = TaskSpec(id=f"r{epoch}", fn=fns[epoch % len(fns)],
+                       deps=tuple(w.id for w in workers), dep_bytes=1e6)
+    return workers + [reducer]
+
+
+def test_long_stream_stays_o_live():
+    """Epoch-by-epoch synthetic stream: with pruning, the retained rank
+    graph and the live-state timeline stay bounded by one epoch's frontier
+    while everything-ever-submitted grows without bound."""
+    width, epochs = 24, 12
+    eps = table1_testbed()
+    eng = OnlineEngine(eps, None, policy="lookahead_mhra", monitoring=False,
+                       window_s=1e9, max_batch=10**9, engine="delta")
+    max_live = max_timeline = 0
+    for e in range(epochs):
+        eng.submit_many(_epoch_tasks(e, width), when=float(e))
+        eng.drain()
+        max_live = max(max_live, len(eng.dag))
+        max_timeline = max(max_timeline, len(eng.state.timeline))
+    total = epochs * (width + 1)
+    assert eng.summary().tasks == total
+    assert eng.dag.retired == total
+    # bound: one epoch's workers + reducer + the previous frontier
+    assert max_live <= 2 * (width + 1)
+    assert max_timeline <= 2 * (width + 1)
+    assert len(eng.dag) == 0 and len(eng.state.timeline) == 0
+
+
+# ---------------------------------------------------------------------------
+# Timeline GC on the live states
+# ---------------------------------------------------------------------------
+
+
+def _placed_state(cls):
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    store = TaskProfileStore(eps)
+    sim = TestbedSim(eps, seed=0)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            rt, w, _ = sim.task_truth(fn, ep.name)
+            store.record(fn, ep.name, rt, rt * w)
+    state = cls(eps, tm)
+    tasks = [TaskSpec(id=f"t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)])
+             for i in range(12)]
+    mhra(tasks, eps, store, tm, state=state)
+    return state
+
+
+@pytest.mark.parametrize("cls", [SchedulerState, SoAState])
+def test_drop_timeline_removes_only_named_tasks(cls):
+    state = _placed_state(cls)
+    before = state.metrics()
+    assert len(state.timeline) == 12
+    assert state.drop_timeline(["t0", "t5", "missing"]) == 2
+    assert len(state.timeline) == 10
+    assert "t0" not in state.timeline and "t5" not in state.timeline
+    assert state.metrics() == before       # GC never touches the objective
+
+
+# ---------------------------------------------------------------------------
+# Rolling compaction: TaskDB record cap + engine window history cap
+# ---------------------------------------------------------------------------
+
+
+def _rec(i, ep="ic"):
+    return TaskRecord(task_id=f"t{i}", fn="f", endpoint=ep, worker_pid=1,
+                      t_start=float(i), t_end=float(i + 1), energy_j=2.0)
+
+
+def test_taskdb_max_records_keeps_aggregates_exact():
+    db = TaskDB(max_records=4)
+    for i in range(10):
+        db.add(_rec(i))
+    assert len(db.records) == 4
+    assert [r.task_id for r in db.records] == ["t6", "t7", "t8", "t9"]
+    assert db.evicted == 6
+    # aggregates are cumulative over everything ever added
+    assert db.energy_by_endpoint() == {"ic": 20.0}
+    with pytest.raises(ValueError, match="max_records"):
+        TaskDB(max_records=0)
+
+
+def test_taskdb_capped_save_appends_unsaved_tail(tmp_path):
+    p = tmp_path / "db.jsonl"
+    db = TaskDB(path=str(p), max_records=3)
+    db.extend([_rec(i) for i in range(3)])
+    db.save()
+    db.add(_rec(3))                 # evicts t0 from memory, not from disk
+    db.save()                       # appends only the unsaved tail (t3)
+    loaded = TaskDB(path=str(p), max_records=3)
+    assert loaded.evicted == 1      # 4 rows on disk, rolling window of 3
+    assert [r.task_id for r in loaded.records] == ["t1", "t2", "t3"]
+    assert loaded.energy_by_endpoint() == {"ic": 8.0}
+
+
+def test_retain_windows_caps_history_but_not_summary():
+    eps = table1_testbed()
+    eng = OnlineEngine(eps, TestbedSim(eps, seed=0), policy="mhra",
+                       monitoring=False, window_s=1e9, max_batch=10**9,
+                       retain_windows=2)
+    for w in range(5):
+        eng.submit_many([TaskSpec(id=f"w{w}t{i}", fn="graph_bfs")
+                         for i in range(6)])
+        eng.flush()
+    assert len(eng.windows) == 2
+    assert [w.index for w in eng.windows] == [3, 4]
+    s = eng.summary()
+    assert s.windows == 5 and s.tasks == 30
+    assert s.scheduling_s > 0 and s.attributed_j > 0
+
+
+# ---------------------------------------------------------------------------
+# Adaptive engine selection
+# ---------------------------------------------------------------------------
+
+
+def test_auto_engine_crossover():
+    assert AUTO_SOA_MIN_ENDPOINTS == 16
+    assert auto_engine(16) == "soa"               # large fleet: always soa
+    assert auto_engine(32, 1) == "soa"
+    assert auto_engine(4) == "delta"              # unknown window: heap
+    assert auto_engine(4, AUTO_SOA_MIN_CELLS // 4) == "soa"
+    assert auto_engine(4, AUTO_SOA_MIN_CELLS // 4 - 1) == "delta"
+    assert auto_engine(8, 32) == "soa"            # 256 score cells
+    assert auto_engine(8, 31) == "delta"
+
+
+def test_online_engine_auto_resolves_at_first_flush():
+    eps = table1_testbed()                        # 4 endpoints
+    eng = OnlineEngine(eps, TestbedSim(eps, seed=0), monitoring=False,
+                       window_s=1e9, max_batch=10**9)
+    assert eng.engine == "auto" and eng.state is None
+    eng.submit_many([TaskSpec(id=f"t{i}", fn="graph_bfs") for i in range(8)])
+    eng.flush()                                   # 4 eps x 8 tasks < 256
+    assert eng.engine == "delta"
+    assert isinstance(eng.state, SchedulerState)
+
+    eng2 = OnlineEngine(eps, TestbedSim(eps, seed=0), monitoring=False,
+                        window_s=1e9, max_batch=10**9)
+    eng2.submit_many([TaskSpec(id=f"t{i}", fn="graph_bfs")
+                      for i in range(64)])
+    eng2.flush()                                  # 4 eps x 64 tasks = 256
+    assert eng2.engine == "soa"
+    assert isinstance(eng2.state, SoAState)
+
+
+# ---------------------------------------------------------------------------
+# Tiny-DAG lookahead lam scaling (2-node regression)
+# ---------------------------------------------------------------------------
+
+
+def test_structure_scale_hand_checked():
+    assert structure_scale(0, 0) == 0.0
+    assert structure_scale(1, 64) == 0.0          # flat batch: no steering
+    assert structure_scale(2, 1) == 0.25          # the 2-node chain
+    assert structure_scale(2, 2) == 0.5
+    assert structure_scale(3, 1) == 0.5
+    assert structure_scale(3, 2) == 1.0           # any diamond or wider
+    assert structure_scale(10, 64) == 1.0
+
+
+def test_two_node_chain_scales_lam_down():
+    """A live 2-node chain must steer at quarter strength: full-strength
+    lam over-steered structureless graphs (the regression this pins)."""
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    dag = DAGView(runtime=lambda fn: 2.0)
+    parent = TaskSpec(id="p", fn="f")
+    dag.add_task(parent)
+    dag.add_task(TaskSpec(id="k", fn="f", deps=("p",), dep_bytes=1e6))
+    lw = LookaheadWeights.from_dag(dag, [parent], eps, tm, lam=1.0)
+    assert lw is not None
+    assert lw.lam == pytest.approx(0.25)
+    # and the weights themselves are untouched by the scaling
+    assert lw.tail_w["p"] == pytest.approx(0.5)   # up_rest 2 / rank_scale 4
+
+
+def test_diamond_keeps_full_strength_lam():
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    dag = DAGView(runtime=lambda fn: 1.0)
+    dag.add_task(TaskSpec(id="a", fn="f"))
+    dag.add_task(TaskSpec(id="b", fn="f", deps=("a",), dep_bytes=1e6))
+    dag.add_task(TaskSpec(id="c", fn="f", deps=("a",), dep_bytes=1e6))
+    dag.add_task(TaskSpec(id="d", fn="f", deps=("b", "c"), dep_bytes=1e6))
+    lw = LookaheadWeights.from_dag(
+        dag, [TaskSpec(id="a", fn="f")], eps, tm, lam=0.8
+    )
+    assert lw is not None and lw.lam == pytest.approx(0.8)

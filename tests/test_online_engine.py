@@ -103,7 +103,20 @@ def test_windows_share_live_state():
         assert res.schedule.energy_j == e      # schedule reports cumulative
     assert metrics[0][0] < metrics[1][0] < metrics[2][0]
     assert metrics[0][1] <= metrics[1][1] <= metrics[2][1]
+    # live-state pruning: flat tasks retire as they complete, so the
+    # timeline holds only live work (here: none) while the cumulative
+    # metrics above still cover everything ever placed
+    assert len(eng.state.timeline) == 0
+    assert eng.dag.retired == 3 * 56
+
+
+def test_prune_off_keeps_full_timeline():
+    eng, _ = _engine(monitoring=False, prune=False)
+    for w in range(3):
+        eng.submit_many(_window_tasks(w, n=56))
+        eng.flush()
     assert len(eng.state.timeline) == 3 * 56
+    assert eng.dag.retired == 0
 
 
 def test_stream_tasks_start_after_submission():

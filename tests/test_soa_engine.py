@@ -126,8 +126,14 @@ def test_online_engine_param_builds_soa_policy():
     eng = OnlineEngine(eps, policy="mhra", engine="soa")
     assert eng.policy.engine == "soa"
     assert isinstance(eng.state, SoAState)
+    # default engine is "auto": no live state until the first window
+    # reveals its size, then the crossover fixes the layout for life
     eng2 = OnlineEngine(eps, policy="mhra")
-    assert isinstance(eng2.state, SchedulerState)
+    assert eng2.engine == "auto"
+    assert eng2.policy.engine == "auto"
+    assert eng2.state is None
+    eng3 = OnlineEngine(eps, policy="mhra", engine="delta")
+    assert isinstance(eng3.state, SchedulerState)
 
 
 def test_online_engine_rejects_clone_engine():
