@@ -23,18 +23,28 @@ best single site:
    deferral) emits *strictly less* gCO2 than plain MHRA at a makespan
    within ``MAKESPAN_BOUND``; delta/soa stay assignment-identical under
    carbon weighting.
+4. **Chaos scenario** (``--faults``): the synthetic workload on a
+   warm-pool fleet under a seeded endpoint-churn script (plus straggler
+   inflation + speculative re-execution).  Gates: an *empty* fault trace
+   is a bitwise no-op (identical assignments and energy to a fault-free
+   run, goodput 1.0); under churn both fault-aware and fault-oblivious
+   MHRA finish everything (goodput 1.0, retries bounded), the oblivious
+   baseline burns real re-execution energy, and fault-aware MHRA wins
+   strictly on goodput-per-megajoule; delta/soa stay
+   assignment-identical under the alive mask + warm-pool weights.
 
 Results are persisted to ``BENCH_eval.json`` and rendered to
 ``reports/eval.html`` via ``repro.core.report``.  Runnable bare from the
 repo root (no PYTHONPATH needed):
 
     python examples/paper_eval.py                # medium sizes
-    python examples/paper_eval.py --tiny --carbon  # CI smoke
-    python examples/paper_eval.py --full --carbon  # paper sizes
+    python examples/paper_eval.py --tiny --carbon --faults  # CI smoke
+    python examples/paper_eval.py --full --carbon --faults  # paper sizes
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import pathlib
 import sys
 import time
@@ -44,12 +54,18 @@ try:
 except ModuleNotFoundError:  # bare run from a checkout: add src/ ourselves
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core.evaluate import evaluate_trace, run_policy, verify_dag_order
+from repro.core.evaluate import (
+    EvalResult, evaluate_trace, gpsup, run_policy, verify_dag_order,
+)
+from repro.core.faults import FaultTrace
 from repro.core.report import eval_html_report, eval_text_report, write_bench_json
 from repro.workloads import (
+    add_failover,
+    churn_fault_trace,
     moldesign_dag_workload,
     synthetic_edp_workload,
     table1_carbon_signal,
+    with_warm_pool,
 )
 
 SIZES = {
@@ -67,6 +83,24 @@ MAKESPAN_BOUND = 1.25       # carbon_mhra makespan <= bound * plain MHRA's
 # quality, and that the carbon deferral queue keeps real slack to spend
 DEADLINE_SLACK = (8.0, 40.0)
 
+# chaos scenario (--faults): target dead fraction per churned endpoint,
+# straggler mix, and the speculative re-execution trigger.  The always-on
+# desktop — the small-task magnet — is deliberately *not* protected, so a
+# fault-oblivious policy keeps feeding a dead endpoint; "ic" never fails,
+# keeping the fleet placeable at all times.
+FAULT_CHURN = 0.10
+FAULT_CHURNED = ("desktop",)   # outages hit the always-on home node — the
+                               # fleet's placement magnet and data home, where
+                               # blind re-dispatch hurts most; batch sites
+                               # already absorb delay through their queues
+FAULT_ARRIVAL_SLOWDOWN = 4.0   # chaos runs at service load (shallow queues):
+                               # at saturation every policy's backlog rides
+                               # into outages identically and the scenario
+                               # measures queueing, not fault handling
+FAULT_STRAGGLER_P = 0.08
+FAULT_STRAGGLER_X = 4.0
+SPEC_FACTOR = 3.0
+
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -74,6 +108,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--full", action="store_true", help="paper sizes (1792 tasks)")
     ap.add_argument("--carbon", action="store_true",
                     help="run the carbon-aware scenario (gCO2 + deferral gates)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the chaos scenario (churn/goodput/reexec gates)")
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_eval.json")
@@ -222,6 +258,120 @@ def main(argv=None) -> dict:
             "carbon_deferred": cm.deferred,
             "carbon_engine_parity": True,
             "carbon_deadline_miss_rate": cm.deadline_miss_rate,
+        })
+
+    # --- 4. chaos scenario (--faults) ---------------------------------
+    if args.faults:
+        # gate 1: an empty fault trace must be a bitwise no-op
+        base = run_policy(syn, "mhra", engine="delta", alpha=args.alpha,
+                          seed=args.seed)
+        noop = run_policy(syn, "mhra", engine="delta", alpha=args.alpha,
+                          seed=args.seed, faults=FaultTrace.empty())
+        assert noop.assignments == base.assignments, (
+            "empty fault trace changed placements"
+        )
+        assert noop.energy_j == base.energy_j, (
+            f"empty fault trace changed energy: {noop.energy_j!r} vs "
+            f"{base.energy_j!r}"
+        )
+        assert noop.goodput == 1.0 and noop.failures == 0
+        print("\nfault no-op gate: empty trace bitwise-identical to a "
+              "fault-free run (goodput 1.0)")
+
+        # chaos trace: same workload on a warm-pool fleet plus an
+        # always-on failover twin of the desktop ("login"); every other
+        # endpoint churns, with outages scripted inside the fault-free
+        # run's actual busy span.  A fault-aware policy fails over to the
+        # login node for a small premium; a fault-oblivious one keeps
+        # re-dispatching into the outage and re-bills each attempt.
+        ch_eps, ch_prof = add_failover(with_warm_pool(syn.endpoints),
+                                       syn.profiles)
+        cha = dataclasses.replace(
+            syn, name=syn.name + "_chaos",
+            endpoints=ch_eps, profiles=ch_prof,
+            arrivals=syn.arrivals * FAULT_ARRIVAL_SLOWDOWN,
+        )
+        # script outages inside the chaos trace's own fault-free busy span
+        ch_base = run_policy(cha, "mhra", engine="delta", alpha=args.alpha,
+                             seed=args.seed)
+        horizon = float(ch_base.sim_makespan_s)
+        # longer-than-trivial outages: fault-aware failover pays a one-time
+        # staging cost (the io dataset gets cached at the failover site)
+        # while blind re-dispatch keeps burning idle span for the whole
+        # outage — short blips would hide that asymmetry
+        mttr = min(max(horizon / 2.5, 60.0), 300.0)
+        ft = churn_fault_trace(
+            [e.name for e in cha.endpoints], horizon,
+            churn=FAULT_CHURN, mttr_s=mttr, seed=args.seed,
+            protect=[e.name for e in cha.endpoints
+                     if e.name not in FAULT_CHURNED],
+            straggler_p=FAULT_STRAGGLER_P,
+            straggler_factor=FAULT_STRAGGLER_X,
+        )
+        aware = run_policy(cha, "mhra", engine="delta", alpha=args.alpha,
+                           seed=args.seed, faults=ft, fault_aware=True,
+                           spec_factor=SPEC_FACTOR)
+        obliv = run_policy(cha, "mhra", engine="delta", alpha=args.alpha,
+                           seed=args.seed, faults=ft, fault_aware=False,
+                           spec_factor=SPEC_FACTOR)
+        aware.policy = "mhra_fault_aware"
+        obliv.policy = "mhra_fault_oblivious"
+        for r in (aware, obliv):
+            g, s_, u = gpsup(obliv.energy_j, obliv.makespan_s,
+                             r.energy_j, r.makespan_s)
+            r.greenup, r.speedup, r.powerup = g, s_, u
+        flt_res = EvalResult(
+            workload=cha.name, n_tasks=len(cha), alpha=args.alpha,
+            rows=[aware, obliv], baseline="mhra_fault_oblivious",
+        )
+        print()
+        print(eval_text_report(flt_res))
+        gpj_ratio = (aware.goodput_per_mj / obliv.goodput_per_mj
+                     if obliv.goodput_per_mj > 0 else float("inf"))
+        print(f"\nchaos ({FAULT_CHURN:.0%} churn, mttr {mttr:.0f}s): "
+              f"fault-aware gp/MJ {aware.goodput_per_mj:.2f} vs oblivious "
+              f"{obliv.goodput_per_mj:.2f} ({gpj_ratio:.3f}x); oblivious "
+              f"wasted {obliv.reexec_j / 1e3:.2f} kJ on {obliv.failures} "
+              f"kills, aware {aware.reexec_j / 1e3:.2f} kJ on "
+              f"{aware.failures}")
+        assert aware.goodput == 1.0, (
+            f"fault-aware goodput {aware.goodput:.3f} != 1.0 "
+            f"(lost tasks under churn)"
+        )
+        assert obliv.goodput == 1.0, (
+            f"fault-oblivious goodput {obliv.goodput:.3f} != 1.0 "
+            f"(retry budget exhausted)"
+        )
+        assert obliv.reexec_j > 0.0, (
+            "chaos trace produced no re-execution energy: churn never "
+            "caught an in-flight or misplaced task"
+        )
+        assert aware.goodput_per_mj > obliv.goodput_per_mj, (
+            f"fault-aware MHRA gp/MJ {aware.goodput_per_mj:.3f} not "
+            f"strictly above oblivious {obliv.goodput_per_mj:.3f}"
+        )
+        # engine parity must survive the alive mask + warm-pool weights
+        aware_soa = run_policy(cha, "mhra", engine="soa", alpha=args.alpha,
+                               seed=args.seed, faults=ft, fault_aware=True,
+                               spec_factor=SPEC_FACTOR)
+        assert aware.assignments == aware_soa.assignments, (
+            "delta and soa engines diverged under the fault mask"
+        )
+        print(f"fault engine parity: delta/soa agree on all "
+              f"{len(aware.assignments)} assignments")
+        results.append(flt_res)
+        extra.update({
+            "fault_noop_parity": True,
+            "fault_engine_parity": True,
+            "fault_churn": FAULT_CHURN,
+            "fault_mttr_s": mttr,
+            "fault_goodput_aware": aware.goodput,
+            "fault_goodput_oblivious": obliv.goodput,
+            "fault_gpj_ratio": gpj_ratio,
+            "fault_reexec_j_aware": aware.reexec_j,
+            "fault_reexec_j_oblivious": obliv.reexec_j,
+            "fault_cold_starts_aware": aware.cold_starts,
+            "fault_spec_launched": aware.spec_launched,
         })
 
     # --- persist + render ---------------------------------------------

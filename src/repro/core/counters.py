@@ -46,6 +46,7 @@ class TaskRecord:
     node_energy_j: float | None = None # incl. idle share
     transfer_j: float = 0.0
     user: str = "user0"
+    failed: bool = False               # killed by endpoint churn (partial span)
 
     @property
     def runtime(self) -> float:

@@ -42,6 +42,17 @@ on or off (``tests/test_live_state.py``).  Rank/mass queries on
 *completed* nodes are the only thing pruning may change (they fall back
 to 0 once the node retires).
 
+**Failure semantics.**  A task killed by endpoint churn never calls
+``complete()`` — the engine re-enters it into the pending stream instead
+— so a failed task stays *live* in the view (it keeps its ranks and
+mass, and its children keep waiting) until some retry actually finishes.
+Retirement pruning composes with the retry path for free: only genuine
+completions retire nodes, so a re-entered task is still un-retired and a
+pruned view scores its re-placement identically to an unpruned one
+(``tests/test_faults.py`` locks this under mid-stream churn).
+Speculative ``@spec`` backups never enter the DAG at all — the engine
+completes the *base* task id once a winner is known.
+
 :class:`LookaheadWeights` is the per-placement-call snapshot the greedy
 engines consume (the :class:`~repro.core.carbon.CarbonWeights` analogue):
 per-task rank weights and outbound-payload energies plus per-endpoint

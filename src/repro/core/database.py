@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import warnings
 from collections import defaultdict
 
 from repro.core.counters import TaskRecord
@@ -55,6 +56,7 @@ class TaskDB:
         self._added = 0            # records ever added (monotone)
         self._saved = 0            # records ever persisted to self.path
         self._legacy_file = False  # loaded from a JSON-array blob
+        self._truncated = 0        # half-written JSONL lines skipped on load
         if self.path and self.path.exists():
             self.load()
 
@@ -104,6 +106,13 @@ class TaskDB:
     def evicted(self) -> int:
         """Records compacted out of the rolling window so far."""
         return self._added - len(self.records)
+
+    @property
+    def truncated(self) -> int:
+        """Half-written trailing JSONL lines skipped by :meth:`load` — a
+        crash mid-append leaves one; nonzero means the previous process
+        died while persisting."""
+        return self._truncated
 
     def reindex(self) -> None:
         """Rebuild aggregates from scratch (after in-place record edits).
@@ -170,8 +179,26 @@ class TaskDB:
             data = json.loads(text)
             self._legacy_file = True
         else:
-            data = [json.loads(line) for line in text.splitlines() if line.strip()]
             self._legacy_file = False
+            lines = [ln for ln in text.splitlines() if ln.strip()]
+            data = []
+            for i, ln in enumerate(lines):
+                try:
+                    data.append(json.loads(ln))
+                except json.JSONDecodeError:
+                    if i != len(lines) - 1:
+                        raise    # corruption mid-file: not a crash artifact
+                    # a crash mid-append leaves exactly one half-written
+                    # tail line; the record never fully landed — skip it,
+                    # count it, and rewrite the file clean on next save
+                    self._truncated += 1
+                    self._legacy_file = True
+                    warnings.warn(
+                        f"{self.path}: dropped truncated trailing JSONL "
+                        f"line ({len(ln)} bytes); file will be rewritten "
+                        f"on next save",
+                        RuntimeWarning,
+                    )
         self.records = [TaskRecord(**d) for d in data]
         self._added = self._saved = len(self.records)
         self.reindex()      # aggregates over *everything* in the file...

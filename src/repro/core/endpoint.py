@@ -19,6 +19,10 @@ class EndpointSpec:
     has_batch_scheduler: bool = True # desktop-style endpoints: False
     perf_scale: float = 1.0          # relative per-core speed (sim only)
     hops: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    # --- warm-pool dynamics (defaults = always-warm: exact no-op) ---
+    cold_start_s: float = 0.0        # latency of spinning up a cold worker
+    cold_start_j: float = 0.0        # startup energy of a cold worker
+    keepalive_s: float = float("inf")  # idle gap after which a worker goes cold
     # --- TPU-fleet extras (unused by the CPU testbed) ---
     chips: int = 0
     peak_flops: float = 0.0          # per chip, FLOP/s (bf16)

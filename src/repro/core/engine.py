@@ -32,6 +32,7 @@ from repro.core.dag import DAGView
 from repro.core.database import TaskDB
 from repro.core.endpoint import EndpointSpec
 from repro.core.executor import attribute_window
+from repro.core.faults import FaultTrace, WarmWeights
 from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
 from repro.core.power_model import LinearPowerModel
 from repro.core.predictor import TaskProfileStore
@@ -74,6 +75,20 @@ class EngineSummary:
     scheduling_s: float      # total time spent in placement decisions
     attributed_j: float
     deferred: int = 0        # tasks time-shifted by the carbon deferral queue
+    # --- fault tolerance (all zero / 1.0 on fault-free runs) ---
+    submitted: int = 0       # distinct task ids submitted
+    completed: int = 0       # distinct task ids that reached completion
+    goodput: float = 1.0     # completed / submitted
+    failures: int = 0        # task executions killed by endpoint churn
+    retries: int = 0         # re-placements of killed tasks
+    permanent_failures: int = 0  # tasks dropped after exhausting retry_cap
+    wasted_j: float = 0.0    # partial energy billed to killed executions
+    cold_starts: int = 0     # cold worker spin-ups paid in the sim
+    cold_j: float = 0.0      # startup energy billed to cold spin-ups
+    spec_launched: int = 0   # speculative backups launched for stragglers
+    spec_wins: int = 0       # backups that beat their straggling primary
+    spec_wasted_j: float = 0.0   # energy of the losing copy of each pair
+    mean_recovery_s: float | None = None  # first-failure -> completion
 
 
 class OnlineEngine:
@@ -146,6 +161,11 @@ class OnlineEngine:
         promotion: str = "epoch",
         prune: bool = True,
         retain_windows: int | None = None,
+        faults: FaultTrace | None = None,
+        fault_aware: bool = True,
+        retry_cap: int = 6,
+        retry_backoff_s: float = 15.0,
+        spec_factor: float | None = None,
     ):
         """``engine`` selects the scheduling backend for registry-name
         mhra/cluster_mhra/carbon_mhra policies ("delta" or "soa") and the
@@ -186,7 +206,28 @@ class OnlineEngine:
         their starts exactly as they do for promoted DAG children.  Each
         task defers at most once (no starvation), and ``drain`` advances
         the clock to the earliest release when only deferred work
-        remains, so a drain can never deadlock on the queue."""
+        remains, so a drain can never deadlock on the queue.
+
+        ``faults`` is the shared :class:`~repro.core.faults.FaultTrace`
+        script (give the *same* trace to the backend sim).  The engine
+        always reacts to failures it observes — killed executions re-enter
+        the pending queue with exponential backoff (``retry_backoff_s *
+        2**(attempt-1)`` via the ``not_before`` floor) up to ``retry_cap``
+        attempts, after which the task lands in ``failed_permanently``.
+        ``fault_aware`` controls only what placement *sees*: when True,
+        each window's :class:`PolicyContext` carries an up/down mask
+        snapshotted at the window-open time (dead endpoints excluded from
+        candidate scoring; if the whole fleet is dark the window jumps to
+        the earliest recovery) and a :class:`WarmWeights` expected
+        cold-start penalty.  ``fault_aware=False`` is the chaos-eval
+        baseline: same retries, but placement is blind to the trace.
+        ``spec_factor`` (None = off) arms straggler mitigation: a task
+        whose observed runtime exceeds ``spec_factor`` times its
+        pre-update predicted runtime gets a speculative backup copy; the
+        first finisher wins and the loser's energy is billed as
+        speculation waste.  With ``faults=None`` (or an empty trace) and
+        ``spec_factor=None`` every placement and simulation path is
+        bitwise-identical to a fault-free engine."""
         self.endpoints = list(endpoints)
         self.backend = backend
         if promotion not in ("epoch", "exact"):
@@ -258,6 +299,36 @@ class OnlineEngine:
         self.deferred: list[tuple[float, int, TaskSpec]] = []  # release heap
         self._deferred_ids: set[str] = set()         # defer-once guard
         self._defer_seq = itertools.count()
+        self.faults = faults if faults else None   # empty trace -> fault-free
+        self.fault_aware = fault_aware
+        if retry_cap < 0:
+            raise ValueError(f"retry_cap must be >= 0, got {retry_cap}")
+        if retry_backoff_s < 0.0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}"
+            )
+        if spec_factor is not None and spec_factor <= 1.0:
+            raise ValueError(
+                f"spec_factor must be > 1 (None disables), got {spec_factor}"
+            )
+        self.retry_cap = retry_cap
+        self.retry_backoff_s = retry_backoff_s
+        self.spec_factor = spec_factor
+        self.failed_permanently: set[str] = set()
+        self._submitted_ids: set[str] = set()
+        self._attempts: dict[str, int] = {}          # id -> failed attempts
+        self._first_fail_at: dict[str, float] = {}   # id -> first kill time
+        self._recovery_s: list[float] = []           # first-fail -> completion
+        self._spec_primary: dict[str, object] = {}   # base id -> primary record
+        self._spec_done: set[str] = set()            # never re-speculate
+        self._failures = 0
+        self._retries = 0
+        self._wasted_j = 0.0
+        self._cold_starts = 0
+        self._cold_j = 0.0
+        self._spec_launched = 0
+        self._spec_wins = 0
+        self._spec_wasted_j = 0.0
         self.clock = 0.0
         self._first_pending_at: float | None = None
         if backend is not None:
@@ -271,6 +342,7 @@ class OnlineEngine:
         when = self.clock if when is None else when
         self.clock = max(self.clock, when)
         self.dag.add_task(task)
+        self._submitted_ids.add(task.id)
         if task.deps:
             if any(d not in self.completed for d in task.deps):
                 self.waiting[task.id] = task
@@ -418,15 +490,40 @@ class OnlineEngine:
             if not tasks:
                 return None     # whole window shifted to a cleaner grid
 
-        ctx = PolicyContext(self.endpoints, self.store, self.transfer,
-                            self.alpha, carbon=self.carbon, now=submitted_at,
-                            dag=self.dag)
         if self.state is None:
             # engine="auto": first window — resolve the crossover on the
             # actual fleet and window size, then keep that layout for life
             self.engine = auto_engine(len(self.endpoints), len(tasks))
             state_cls = SoAState if self.engine == "soa" else SchedulerState
             self.state = state_cls(self.endpoints, self.transfer)
+        alive = warm = None
+        if self.fault_aware:
+            if self.faults is not None:
+                alive_l = [self.faults.is_up(e.name, submitted_at)
+                           for e in self.endpoints]
+                if not any(alive_l):
+                    # whole fleet dark: open the window at the earliest
+                    # recovery instead of placing onto dead endpoints
+                    t_up = min(self.faults.next_up(e.name, submitted_at)
+                               for e in self.endpoints)
+                    if t_up == float("inf"):
+                        raise RuntimeError(
+                            "every endpoint is down and none recovers: "
+                            "cannot place this window"
+                        )
+                    submitted_at = t_up
+                    self.clock = max(self.clock, t_up)
+                    alive_l = [self.faults.is_up(e.name, submitted_at)
+                               for e in self.endpoints]
+                if not all(alive_l):
+                    alive = tuple(alive_l)
+            # snapshot idle gaps before advance_to erases them
+            warm = WarmWeights.from_state(
+                self.endpoints, self.state, submitted_at, self.faults
+            )
+        ctx = PolicyContext(self.endpoints, self.store, self.transfer,
+                            self.alpha, carbon=self.carbon, now=submitted_at,
+                            dag=self.dag, alive=alive, warm=warm)
         # placement previews must not start tasks before this window opened
         self.state.advance_to(submitted_at)
         t0 = time.perf_counter()
@@ -438,13 +535,16 @@ class OnlineEngine:
         attributed = 0.0
         if self.backend is not None:
             sim = self.backend.execute_window(assignments, tasks, now=submitted_at)
+            # straggler candidates are judged against *pre-update*
+            # predictions, before _learn folds this window's runtimes in
+            spec_new = self._spec_candidates(sim)
             attributed = self._learn(sim)
             # profile updates moved the runtime estimates under the ranks
             self.dag.invalidate()
             self.clock = max(self.clock, submitted_at + self.window_s)
-            for rec in sim.records:
-                self.completed[rec.task_id] = (rec.endpoint, rec.t_end)
-                self.dag.complete(rec.task_id, rec.endpoint, rec.t_end)
+            self._cold_starts += sim.cold_starts
+            self._cold_j += sim.cold_j
+            self._process_records(sim, {t.id: t for t in tasks}, spec_new)
         else:
             # planner-only mode: completion times from the schedule timeline
             for t in tasks:
@@ -474,6 +574,95 @@ class OnlineEngine:
         self._promote_ready()
         return res
 
+    # ------------------------------------------------------------------
+    # fault handling: retries, permanent failures, speculation
+    def _requeue(self, task: TaskSpec) -> None:
+        """Put a retry/backup copy straight into the pending queue (its
+        ``not_before`` floor carries the backoff / launch delay)."""
+        if self._first_pending_at is None:
+            self._first_pending_at = self.clock
+        self.pending.append(task)
+
+    def _spec_candidates(self, sim: SimResult) -> dict[str, float]:
+        """Successful records whose runtime blew past ``spec_factor x`` the
+        pre-update prediction: base task id -> predicted runtime (s)."""
+        if self.spec_factor is None:
+            return {}
+        out: dict[str, float] = {}
+        for rec in sim.records:
+            tid = rec.task_id
+            if (rec.failed or tid.endswith("@spec") or tid in self._spec_done
+                    or tid in self._spec_primary):
+                continue
+            pred = self.store.predict(rec.fn, rec.endpoint).runtime_s
+            if pred > 0.0 and rec.runtime > self.spec_factor * pred:
+                out[tid] = pred
+        return out
+
+    def _process_records(self, sim: SimResult, by_id: dict[str, TaskSpec],
+                         spec_new: dict[str, float]) -> None:
+        """Route one window's execution records: completions feed the DAG,
+        kills re-enter the pending queue with exponential backoff (until
+        ``retry_cap``), stragglers race a speculative backup copy."""
+        for rec in sim.records:
+            tid = rec.task_id
+            if tid.endswith("@spec"):
+                self._resolve_speculation(tid, rec)
+                continue
+            if rec.failed:
+                self._failures += 1
+                self._wasted_j += rec.energy_j or 0.0
+                self._first_fail_at.setdefault(tid, rec.t_end)
+                attempts = self._attempts.get(tid, 0) + 1
+                self._attempts[tid] = attempts
+                if attempts > self.retry_cap:
+                    self.failed_permanently.add(tid)
+                    self._first_fail_at.pop(tid, None)
+                    continue
+                self._retries += 1
+                backoff = self.retry_backoff_s * (2.0 ** (attempts - 1))
+                self._requeue(dataclasses.replace(
+                    by_id[tid],
+                    not_before=max(by_id[tid].not_before, rec.t_end + backoff),
+                ))
+                continue
+            if tid in spec_new:
+                # straggling primary: hold its completion, race a backup
+                # (deps already concretized when the primary was placed)
+                self._spec_primary[tid] = rec
+                self._spec_done.add(tid)
+                self._spec_launched += 1
+                release = rec.t_start + self.spec_factor * spec_new[tid]
+                self._requeue(dataclasses.replace(
+                    by_id[tid], id=tid + "@spec", deps=(),
+                    not_before=max(by_id[tid].not_before, release),
+                ))
+                continue
+            if tid in self._first_fail_at:
+                self._recovery_s.append(
+                    rec.t_end - self._first_fail_at.pop(tid)
+                )
+            self.completed[tid] = (rec.endpoint, rec.t_end)
+            self.dag.complete(tid, rec.endpoint, rec.t_end)
+
+    def _resolve_speculation(self, spec_id: str, rec) -> None:
+        """A backup copy finished (or died): the earlier finisher wins, the
+        loser's energy is billed as speculation waste, and the base task
+        completes at the winner's endpoint/time."""
+        base = spec_id[: -len("@spec")]
+        prim = self._spec_primary.pop(base)
+        if rec.failed or prim.t_end <= rec.t_end:
+            winner, loser = prim, rec
+        else:
+            winner, loser = rec, prim
+            self._spec_wins += 1
+        self._spec_wasted_j += loser.energy_j or 0.0
+        self.completed[base] = (winner.endpoint, winner.t_end)
+        self.dag.complete(base, winner.endpoint, winner.t_end)
+        # the backup id never entered the planning graph, so retirement
+        # can't shed its timeline entry — drop it explicitly
+        self.state.drop_timeline([spec_id])
+
     def drain(self) -> list[WindowResult]:
         """Flush until nothing is pending, *waiting*, or deferred; returns
         all window results.  For DAG workloads this runs wave after wave as
@@ -490,21 +679,43 @@ class OnlineEngine:
                 break
             # only time-shifted work remains: jump to its release
             self.clock = max(self.clock, self.deferred[0][0])
+        # cascade: a child whose parent failed permanently can never run —
+        # mark it failed too (goodput < 1) instead of deadlocking the drain
+        if self.failed_permanently and self.waiting:
+            changed = True
+            while changed:
+                changed = False
+                for tid, t in list(self.waiting.items()):
+                    if any(d in self.failed_permanently for d in t.deps):
+                        del self.waiting[tid]
+                        self.failed_permanently.add(tid)
+                        changed = True
         if self.waiting:
+            def _why(dep: str) -> str:
+                if dep in self.failed_permanently:
+                    n = self._attempts.get(dep, 0)
+                    return f"{dep} (failed permanently after {n} attempts)"
+                if dep not in self._submitted_ids:
+                    return f"{dep} (never submitted)"
+                return f"{dep} (still pending/in flight: possible cycle)"
+
             blocked = {
-                tid: [d for d in t.deps if d not in self.completed]
+                tid: [_why(d) for d in t.deps if d not in self.completed]
                 for tid, t in self.waiting.items()
             }
             raise RuntimeError(
                 f"drain deadlock: {len(self.waiting)} task(s) still waiting "
-                f"on unmet dependencies (cycle, or parents never submitted): "
+                f"on unmet dependencies: "
                 f"{dict(list(blocked.items())[:5])}"
             )
         return self.windows
 
     # ------------------------------------------------------------------
     def _learn(self, sim: SimResult) -> float:
-        """Feed completed-task records back into the profile store."""
+        """Feed completed-task records back into the profile store.  Killed
+        executions still get their (partial) energy billed and logged to
+        the DB, but never enter the profile store: a truncated runtime is
+        not a runtime observation."""
         if self.monitoring:
             _, attributed = attribute_window(sim, self.models, self.store, self.db)
             return attributed
@@ -513,7 +724,8 @@ class OnlineEngine:
             _, w, _ = self.backend.task_truth(rec.fn, rec.endpoint)
             e = rec.runtime * w
             rec.energy_j = e
-            self.store.record(rec.fn, rec.endpoint, rec.runtime, e)
+            if not rec.failed:
+                self.store.record(rec.fn, rec.endpoint, rec.runtime, e)
             self.db.add(rec)
             total += e
         return total
@@ -524,6 +736,8 @@ class OnlineEngine:
             self.state.metrics() if self.state is not None else (0.0, 0.0, 0.0)
         )
         last = self.windows[-1].schedule.objective if self.windows else float("nan")
+        n_sub = len(self._submitted_ids)
+        n_done = sum(1 for tid in self.completed if tid in self._submitted_ids)
         return EngineSummary(
             windows=self._n_windows,
             tasks=self._n_tasks,
@@ -534,4 +748,20 @@ class OnlineEngine:
             scheduling_s=self._sched_s,
             attributed_j=self._attr_j,
             deferred=len(self._deferred_ids),
+            submitted=n_sub,
+            completed=n_done,
+            goodput=(n_done / n_sub) if n_sub else 1.0,
+            failures=self._failures,
+            retries=self._retries,
+            permanent_failures=len(self.failed_permanently),
+            wasted_j=self._wasted_j,
+            cold_starts=self._cold_starts,
+            cold_j=self._cold_j,
+            spec_launched=self._spec_launched,
+            spec_wins=self._spec_wins,
+            spec_wasted_j=self._spec_wasted_j,
+            mean_recovery_s=(
+                sum(self._recovery_s) / len(self._recovery_s)
+                if self._recovery_s else None
+            ),
         )

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.carbon import CarbonIntensitySignal
 from repro.core.engine import OnlineEngine
 from repro.core.endpoint import EndpointSpec
+from repro.core.faults import FaultTrace
 from repro.core.predictor import TaskProfileStore
 from repro.core.scheduler import SchedulerState, SoAState
 from repro.core.testbed import TestbedSim
@@ -41,7 +42,7 @@ class PolicyRun:
     """One (trace, policy) replay's metrics.  Energies J, times s."""
     policy: str
     engine: str
-    energy_j: float              # cumulative scheduler-state E_tot
+    energy_j: float              # scheduler-state E_tot + measured cold_j
     makespan_s: float            # cumulative scheduler-state C_max
     transfer_j: float
     scheduling_s: float          # wall time spent inside placement
@@ -61,6 +62,17 @@ class PolicyRun:
     deadline_misses: int = 0         # finite-deadline tasks finishing late
     deadline_total: int = 0          # tasks carrying a finite deadline
     edp_vs_mhra: float | None = None # this row's EDP / the mhra row's EDP
+    # --- chaos runs only (defaults = fault-free) ---
+    faulty: bool = False             # run had a fault trace / speculation on
+    goodput: float = 1.0             # completed / submitted task ids
+    failures: int = 0                # executions killed by endpoint churn
+    retries: int = 0                 # re-placements of killed tasks
+    reexec_j: float = 0.0            # wasted partial + losing-copy energy
+    cold_starts: int = 0             # cold worker spin-ups
+    cold_j: float = 0.0              # startup energy of cold spin-ups
+    spec_launched: int = 0           # speculative backups launched
+    spec_wins: int = 0               # backups that beat their primary
+    mean_recovery_s: float | None = None  # first kill -> completion
 
     @property
     def edp(self) -> float:
@@ -85,6 +97,23 @@ class PolicyRun:
         if self.deadline_total == 0:
             return None
         return self.deadline_misses / self.deadline_total
+
+    @property
+    def goodput_per_mj(self) -> float:
+        """Completed-work fraction per megajoule — the chaos-eval headline
+        metric: a policy that wastes energy re-running killed tasks scores
+        lower even at equal goodput."""
+        if self.energy_j <= 0:
+            return 0.0
+        return self.goodput / (self.energy_j / 1e6)
+
+    @property
+    def reexec_overhead(self) -> float:
+        """Fraction of E_tot burned on killed partial executions and
+        losing speculation copies."""
+        if self.energy_j <= 0:
+            return 0.0
+        return self.reexec_j / self.energy_j
 
 
 @dataclasses.dataclass
@@ -116,6 +145,8 @@ class EvalResult:
             d["power_w"] = r.power_w
             d["cdp"] = r.cdp
             d["deadline_miss_rate"] = r.deadline_miss_rate
+            d["goodput_per_mj"] = r.goodput_per_mj
+            d["reexec_overhead"] = r.reexec_overhead
             rows.append(d)
         return {
             "workload": self.workload,
@@ -242,20 +273,33 @@ def verify_dag_order(windows) -> int:
     """Check the executed windows honored every DAG edge: no child's
     simulated start precedes any parent's simulated completion.  Returns
     the number of edges checked; raises ``AssertionError`` on violation.
-    Requires a sim backend (windows must carry records)."""
+    Requires a sim backend (windows must carry records).
+
+    Fault-tolerant runs: killed (``failed``) executions are not
+    completions and are skipped; a speculative ``<id>@spec`` backup
+    folds into its base id, and the base completes at the *winner's*
+    (earliest successful) end — exactly when the engine releases the
+    children."""
     starts: dict[str, float] = {}
     ends: dict[str, float] = {}
     deps: dict[str, tuple] = {}
     for w in windows:
         for t in w.tasks:
-            deps[t.id] = t.deps
+            if not t.id.endswith("@spec"):
+                deps[t.id] = t.deps
         if w.sim is None:
             raise ValueError("verify_dag_order needs executed windows")
         for rec in w.sim.records:
-            starts[rec.task_id] = rec.t_start
-            ends[rec.task_id] = rec.t_end
+            if rec.failed:
+                continue
+            tid = rec.task_id
+            base = tid[: -len("@spec")] if tid.endswith("@spec") else tid
+            starts[base] = min(starts.get(base, np.inf), rec.t_start)
+            ends[base] = min(ends.get(base, np.inf), rec.t_end)
     checked = 0
     for tid, parents in deps.items():
+        if tid not in starts:
+            continue     # never completed (permanently failed subtree)
         for p in parents:
             assert starts[tid] >= ends[p], (
                 f"DAG violation: {tid} started {starts[tid]:.3f} before "
@@ -302,6 +346,8 @@ def deadline_misses(trace: WorkloadTrace, windows) -> tuple[int, int]:
         if w.sim is None:
             continue
         for rec in w.sim.records:
+            if rec.failed:
+                continue     # a kill is not a completion; the retry decides
             d = deadlines.get(rec.task_id)
             if d is not None and rec.t_end > d:
                 missed += 1
@@ -327,6 +373,11 @@ def run_policy(
     defer_margin: float = 0.05,
     promotion: str = "epoch",
     carbon_forecast: CarbonIntensitySignal | None = None,
+    faults: FaultTrace | None = None,
+    fault_aware: bool = True,
+    spec_factor: float | None = None,
+    retry_cap: int = 6,
+    retry_backoff_s: float = 15.0,
 ):
     """Replay ``trace`` under one policy and collect metrics.
 
@@ -353,10 +404,16 @@ def run_policy(
     ``cp_speedup`` annotates how close the executed makespan came to the
     trace's critical-path lower bound, and ``deadline_misses``/``_total``
     count finite-deadline tasks that completed late.
+
+    ``faults`` injects the chaos script into *both* the simulator (kills,
+    straggler inflation, cold starts) and the engine (retries; and with
+    ``fault_aware=True``, dead-endpoint masking + warm-pool scoring).
+    ``fault_aware=False`` keeps the retries but blinds placement — the
+    chaos-eval baseline.  ``spec_factor`` arms speculative re-execution.
     """
     sim = TestbedSim(
         trace.endpoints, profiles=trace.profiles, signatures=trace.signatures,
-        seed=seed, runtime_noise=runtime_noise,
+        seed=seed, runtime_noise=runtime_noise, faults=faults,
     )
     store = warm_store(sim, trace, n_obs=warm_obs)
     greedy = ("mhra", "cluster_mhra", "carbon_mhra", "lookahead_mhra")
@@ -368,6 +425,8 @@ def run_policy(
         defer_horizon_s=defer_horizon_s,
         defer_max=defer_max, defer_margin=defer_margin,
         promotion=promotion,
+        faults=faults, fault_aware=fault_aware, spec_factor=spec_factor,
+        retry_cap=retry_cap, retry_backoff_s=retry_backoff_s,
     )
     windows = trace.replay_into(eng)
     s = eng.summary()
@@ -388,9 +447,15 @@ def run_policy(
         )
     missed, total = deadline_misses(trace, windows)
     cp_bound = critical_path_bound_s(trace)
+    # bill the sim's measured cold-start energy on top of the scheduler
+    # estimate: warm-pool dynamics burn real joules the placement-state
+    # model never sees, and the warm-pool objective term is only
+    # evaluable if the headline energy metric counts what it optimizes.
+    # Fleets without warm-pool dynamics have cold_j == 0.0 exactly, so
+    # every pre-existing comparison is bitwise unchanged.
     run = PolicyRun(
         policy=label, engine=engine_label,
-        energy_j=float(e_tot), makespan_s=float(c_max),
+        energy_j=float(e_tot) + s.cold_j, makespan_s=float(c_max),
         transfer_j=float(transfer_j), scheduling_s=s.scheduling_s,
         sim_makespan_s=float(sim.stream_clock), attributed_j=s.attributed_j,
         windows=s.windows, tasks=s.tasks,
@@ -399,6 +464,12 @@ def run_policy(
         carbon_g=carbon_g, deferred=s.deferred,
         cp_speedup=cp_bound / float(c_max) if c_max > 0 else None,
         deadline_misses=missed, deadline_total=total,
+        faulty=bool(faults) or spec_factor is not None,
+        goodput=s.goodput, failures=s.failures, retries=s.retries,
+        reexec_j=s.wasted_j + s.spec_wasted_j,
+        cold_starts=s.cold_starts, cold_j=s.cold_j,
+        spec_launched=s.spec_launched, spec_wins=s.spec_wins,
+        mean_recovery_s=s.mean_recovery_s,
     )
     if return_windows:
         return run, windows

@@ -117,7 +117,10 @@ def attribute_window(
             rec.energy_j = float(task_j[i])
             rec.node_energy_j = float(node_j[i])
             attributed += rec.energy_j
-            store.record(rec.fn, ep_name, rec.runtime, rec.energy_j)
+            if not rec.failed:
+                # killed executions are billed + logged but never enter the
+                # profile store: a truncated runtime is not an observation
+                store.record(rec.fn, ep_name, rec.runtime, rec.energy_j)
             if db is not None:
                 db.add(rec)
     return node, attributed

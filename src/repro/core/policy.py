@@ -64,6 +64,13 @@ class PolicyContext:
     including ones still parked in the ready-set.  DAG-aware policies
     (``lookahead_mhra``) snapshot per-task weights from it; myopic
     policies never touch it and pay nothing for it.
+
+    ``alive``/``warm`` carry the fault-aware engine's fleet snapshot at
+    the window-open time: a per-endpoint up/down mask (dead endpoints are
+    excluded from candidate scoring) and a
+    :class:`~repro.core.faults.WarmWeights` expected-cold-start penalty.
+    Both default to None — fault-oblivious runs and baseline policies
+    never see them, keeping every scoring path bitwise-unchanged.
     """
     endpoints: Sequence[EndpointSpec]
     store: TaskProfileStore
@@ -72,6 +79,8 @@ class PolicyContext:
     carbon: CarbonIntensitySignal | None = None
     now: float = 0.0
     dag: DAGView | None = None
+    alive: tuple | None = None
+    warm: "object | None" = None   # WarmWeights snapshot (or None)
 
 
 class PlacementPolicy(abc.ABC):
@@ -165,6 +174,7 @@ class MHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state,
+            alive=ctx.alive, warm=ctx.warm,
         )
 
 
@@ -199,6 +209,7 @@ class CarbonMHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state, carbon=carbon,
+            alive=ctx.alive, warm=ctx.warm,
         )
 
 
@@ -243,7 +254,7 @@ class LookaheadMHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state,
-            lookahead=lookahead,
+            lookahead=lookahead, alive=ctx.alive, warm=ctx.warm,
         )
 
 
@@ -264,6 +275,7 @@ class ClusterMHRAPolicy(PlacementPolicy):
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, self.max_cluster_size,
             engine=self.engine, state=state,
+            alive=ctx.alive, warm=ctx.warm,
         )
 
 

@@ -161,6 +161,20 @@ _EVAL_CP_COL = (("cp-su", "{cp_su:>7.2f}", ">7"),)
 _EVAL_VS_MHRA_COL = (("EDP/mhra", "{edp_vs_mhra:>9.3f}", ">9"),)
 _EVAL_MISS_COL = (("miss%", "{miss_pct:>7.1f}", ">7"),)
 
+# appended when any row ran under a fault trace (chaos evaluations):
+# goodput  — completed / submitted task ids (1.0 = nothing lost)
+# gp/MJ    — goodput per megajoule, the chaos headline metric
+# reexec%  — share of E_tot wasted on killed partials + losing copies
+# cold     — cold worker spin-ups billed by the sim
+# recov s  — mean first-kill -> completion time of recovered tasks
+_EVAL_FAULT_COLS = (
+    ("goodput", "{goodput:>8.3f}", ">8"),
+    ("gp/MJ", "{goodput_per_mj:>8.2f}", ">8"),
+    ("reexec%", "{reexec_pct:>8.2f}", ">8"),
+    ("cold", "{cold_starts:>6d}", ">6"),
+    ("recov s", "{recovery_s:>8.1f}", ">8"),
+)
+
 
 def _eval_cols(result) -> tuple:
     cols = _EVAL_COLS
@@ -172,6 +186,8 @@ def _eval_cols(result) -> tuple:
         cols = cols + _EVAL_VS_MHRA_COL
     if any(r.deadline_total > 0 for r in result.rows):
         cols = cols + _EVAL_MISS_COL
+    if any(r.faulty for r in result.rows):
+        cols = cols + _EVAL_FAULT_COLS
     return cols
 
 
@@ -191,6 +207,13 @@ def _eval_row_values(r) -> dict:
         "cp_su": r.cp_speedup if r.cp_speedup is not None else nan,
         "edp_vs_mhra": r.edp_vs_mhra if r.edp_vs_mhra is not None else nan,
         "miss_pct": miss * 100.0 if miss is not None else nan,
+        "goodput": r.goodput,
+        "goodput_per_mj": r.goodput_per_mj,
+        "reexec_pct": r.reexec_overhead * 100.0,
+        "cold_starts": r.cold_starts,
+        "recovery_s": (
+            r.mean_recovery_s if r.mean_recovery_s is not None else nan
+        ),
     }
 
 
@@ -223,6 +246,7 @@ def eval_html_report(results, path: str) -> str:
         with_cp = any(r.cp_speedup is not None for r in res.rows)
         with_vs = any(r.edp_vs_mhra is not None for r in res.rows)
         with_miss = any(r.deadline_total > 0 for r in res.rows)
+        with_faults = any(r.faulty for r in res.rows)
         nan = float("nan")
 
         def _vals(r):
@@ -240,6 +264,11 @@ def eval_html_report(results, path: str) -> str:
             if with_miss:
                 m = r.deadline_miss_rate
                 out.append(m * 100.0 if m is not None else nan)
+            if with_faults:
+                out += [r.goodput, r.goodput_per_mj,
+                        r.reexec_overhead * 100.0, float(r.cold_starts),
+                        r.mean_recovery_s
+                        if r.mean_recovery_s is not None else nan]
             return out
 
         rows = "".join(
@@ -254,6 +283,8 @@ def eval_html_report(results, path: str) -> str:
             + ("<th>cp-su</th>" if with_cp else "")
             + ("<th>EDP/mhra</th>" if with_vs else "")
             + ("<th>miss%</th>" if with_miss else "")
+            + ("<th>goodput</th><th>gp/MJ</th><th>reexec%</th>"
+               "<th>cold</th><th>recov s</th>" if with_faults else "")
         )
         blocks.append(
             f"<h2>{esc(res.workload)}</h2>"

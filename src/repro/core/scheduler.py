@@ -46,6 +46,7 @@ from repro.core.carbon import CarbonWeights
 from repro.core.clustering import agglomerative_cluster
 from repro.core.dag import LookaheadWeights
 from repro.core.endpoint import EndpointSpec
+from repro.core.faults import WarmWeights
 from repro.core.predictor import Prediction, TaskProfileStore
 from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel
 
@@ -748,6 +749,19 @@ def _normalizers_fast(tasks, endpoints, table: PredictionTable, transfer,
     return max(sf1, 1e-9), max(sf2, 1e-9), max(sf3, 1e-9)
 
 
+def _warm_terms(warm: WarmWeights, alpha: float, sf1: float, sf2: float):
+    """Per-endpoint warm-pool penalty added (last) to every candidate
+    score: expected cold-start energy and latency normalized like the base
+    objective terms.  Computed once per greedy call from the frozen
+    :class:`WarmWeights` snapshot, so the three engines add the *same*
+    doubles and the SoA run-memoization key is untouched (the penalty is
+    constant within a call)."""
+    return [
+        alpha * cj / sf1 + (1 - alpha) * cs / sf2
+        for cj, cs in zip(warm.cold_j, warm.cold_s)
+    ]
+
+
 def mhra(
     tasks: Sequence[TaskSpec],
     endpoints: Sequence[EndpointSpec],
@@ -760,6 +774,8 @@ def mhra(
     state: SchedulerState | None = None,
     carbon: CarbonWeights | None = None,
     lookahead: LookaheadWeights | None = None,
+    alive: Sequence[bool] | None = None,
+    warm: WarmWeights | None = None,
 ) -> Schedule:
     """Multi-Heuristic Resource Allocation. With clusters given, this is
     Cluster MHRA's greedy stage (one decision per cluster).
@@ -777,6 +793,13 @@ def mhra(
     engines with the same clone/delta bitwise guarantee; the *reported*
     ``Schedule.objective`` stays the unshaped base objective (E, C are
     real; the shaping term prices hypothetical future placements).
+    ``alive`` (per-endpoint booleans) masks dead endpoints out of
+    candidate scoring — alive candidates' float sequences are untouched,
+    so masking preserves clone/delta bitwise parity; an all-True mask is
+    normalized to None (the unmodified hot path).  ``warm`` (a
+    :class:`~repro.core.faults.WarmWeights` snapshot) adds a per-endpoint
+    expected cold-start penalty as the final term of every candidate
+    score — one extra SoA vector register.
     """
     if not heuristics:
         raise ValueError("mhra requires at least one ordering heuristic")
@@ -790,11 +813,28 @@ def mhra(
             f"lookahead weights cover {len(lookahead.hops_mean)} endpoints "
             f"but the fleet has {len(endpoints)}"
         )
+    if alive is not None:
+        alive = tuple(bool(a) for a in alive)
+        if len(alive) != len(endpoints):
+            raise ValueError(
+                f"alive mask covers {len(alive)} endpoints but the fleet "
+                f"has {len(endpoints)}"
+            )
+        if not any(alive):
+            raise ValueError("alive mask excludes every endpoint")
+        if all(alive):
+            alive = None   # no-op mask: keep the unmodified hot path
+    if warm is not None and len(warm.cold_j) != len(endpoints):
+        raise ValueError(
+            f"warm weights cover {len(warm.cold_j)} endpoints but the "
+            f"fleet has {len(endpoints)}"
+        )
     if engine == "clone":
         if state is not None:
             raise ValueError("engine='clone' does not support live state")
         return _mhra_clone(tasks, endpoints, store, transfer, alpha,
-                           heuristics, clusters, carbon, lookahead)
+                           heuristics, clusters, carbon, lookahead,
+                           alive, warm)
     if engine == "auto":
         if state is not None:
             # online mode: match the live state's layout so no window ever
@@ -817,7 +857,7 @@ def mhra(
     if engine == "soa":
         return _mhra_soa(units, unit_indices, endpoints, table, transfer,
                          alpha, heuristics, sf1, sf2, state, carbon, sf3,
-                         lookahead)
+                         lookahead, alive, warm)
     soa_live: SoAState | None = None
     if isinstance(state, SoAState):
         # delta engine over a SoA-backed live state: run on a heap view,
@@ -830,7 +870,7 @@ def mhra(
         ordered = _sort_units_fast(units, h, table, unit_indices)
         sched, end_state = _greedy_delta(
             ordered, endpoints, table, transfer, alpha, sf1, sf2, h, state,
-            carbon, sf3, lookahead,
+            carbon, sf3, lookahead, alive, warm,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -848,7 +888,7 @@ def mhra(
 
 def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
               heuristics, sf1, sf2, state, carbon=None, sf3=1.0,
-              lookahead=None):
+              lookahead=None, alive=None, warm=None):
     """SoA-engine heuristic search: run :func:`_greedy_soa` per ordering
     heuristic, commit the winner into ``state`` (heap- or SoA-backed)."""
     heap_state: SchedulerState | None = None
@@ -862,7 +902,7 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
         ordered_idx = [unit_indices[i] for i in order]
         sched, end_state = _greedy_soa(
             ordered, ordered_idx, endpoints, table, transfer, alpha,
-            sf1, sf2, h, state, carbon, sf3, lookahead,
+            sf1, sf2, h, state, carbon, sf3, lookahead, alive, warm,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -880,6 +920,7 @@ def _greedy_delta(
     heuristic, base_state: SchedulerState | None = None,
     carbon: CarbonWeights | None = None, sf3: float = 1.0,
     lookahead: LookaheadWeights | None = None,
+    alive: tuple | None = None, warm: WarmWeights | None = None,
 ) -> tuple[Schedule, SchedulerState]:
     """Delta-evaluation greedy: score each candidate endpoint from the
     *change* it makes (peek the slot heap, delta the idle-span / dynamic
@@ -932,6 +973,7 @@ def _greedy_delta(
     lw = lookahead
     if lw is not None:
         lk_tail, lk_out, lk_hm, lam = lw.tail_w, lw.out_j, lw.hops_mean, lw.lam
+    wt = _warm_terms(warm, alpha, sf1, sf2) if warm is not None else None
     idx = table.index
     rt_rows, en_rows = table.rt_rows, table.en_rows
     hops = transfer.hops
@@ -990,6 +1032,8 @@ def _greedy_delta(
         best_obj = inf
         best = None
         for ei in eps_r:
+            if alive is not None and not alive[ei]:
+                continue   # dead endpoint: masked out of candidate scoring
             # --- transfer delta -------------------------------------------
             if no_inputs:
                 tj = transfer_j
@@ -1137,10 +1181,17 @@ def _greedy_delta(
                         lk_tail_sum += lk_tail.get(_tid, 0.0) * _e
                 obj = obj + lam * (alpha * (u_oj * lk_hm[ei]) / sf1
                                    + beta * lk_tail_sum / sf2)
+            if wt is not None:
+                obj = obj + wt[ei]
             if obj < best_obj:
                 best_obj = obj
                 best = (ei, tj, new_keys, heap, entries, nf, nl, nd)
         # --- commit the winner --------------------------------------------
+        if best is None:
+            raise RuntimeError(
+                "no live endpoint available for placement (alive mask "
+                "excludes the whole fleet)"
+            )
         ei, tj, new_keys, heap, entries, nf, nl, nd = best
         transfer_j = tj
         if new_keys:
@@ -1191,6 +1242,7 @@ def _greedy_soa(
     alpha, sf1, sf2, heuristic, base_state: SoAState | None = None,
     carbon: CarbonWeights | None = None, sf3: float = 1.0,
     lookahead: LookaheadWeights | None = None,
+    alive: tuple | None = None, warm: WarmWeights | None = None,
 ) -> tuple[Schedule, SoAState]:
     """Structure-of-arrays greedy: score a unit against *every* endpoint in
     a fixed handful of vectorized passes instead of a Python loop over
@@ -1305,6 +1357,24 @@ def _greedy_soa(
         u_tw = u_oj = 0.0
     else:
         lk = None
+    # warm-pool term: one extra vector register, constant over the whole
+    # call (the WarmWeights snapshot is per-placement-call), added as the
+    # final term of every candidate score — same doubles as the delta
+    # engine's `obj + wt[ei]`.
+    if warm is not None:
+        wt_l = _warm_terms(warm, alpha, sf1, sf2)
+        wt_v = np.asarray(wt_l)
+    else:
+        wt_l = wt_v = None
+    # dead-endpoint mask: applied *after* every term add so masked entries
+    # stay +inf across memo hits (the commit/C_max refreshes below only
+    # touch live endpoints); the run memo key is untouched — the mask is
+    # constant for the whole call
+    if alive is not None:
+        alive_l = list(alive)
+        dead_idx = np.flatnonzero(~np.asarray(alive, dtype=bool))
+    else:
+        alive_l = dead_idx = None
     memo_hits = memo_misses = 0
     assignments: dict[str, str] = {}
     # preallocated per-unit buffers
@@ -1439,6 +1509,10 @@ def _greedy_soa(
                     np.multiply(hm_vec, lk_c2, out=tmp)
                     np.add(lk, tmp, out=lk)
                     np.add(obj, lk, out=obj)
+                if wt_v is not None:
+                    np.add(obj, wt_v, out=obj)
+                if dead_idx is not None:
+                    obj[dead_idx] = np.inf
                 # refresh the scalar mirrors the hit/commit path works on
                 # (arrays go stale between misses; nothing vectorized
                 # reads nl/e_base/obj/lk/g_base until the next full pass
@@ -1538,6 +1612,8 @@ def _greedy_soa(
                 # ops the vectorized refresh performed — identical floats.
                 c_cur = end_v
                 for j in eps_r:
+                    if alive_l is not None and not alive_l[j]:
+                        continue   # dead: leave its score at +inf
                     c2 = nl_l[j]
                     if c2 < c_cur:
                         c2 = c_cur
@@ -1549,6 +1625,8 @@ def _greedy_soa(
                                + g1 * (w_idle_on * c2 + g_base_l[j]))
                     if lk is not None:
                         o_v = o_v + lk_l[j]
+                    if wt_l is not None:
+                        o_v = o_v + wt_l[j]
                     obj_l[j] = o_v
             else:
                 c2 = nl2 if nl2 > c_cur else c_cur
@@ -1560,6 +1638,8 @@ def _greedy_soa(
                            + g1 * (w_idle_on * c2 + g_b))
                 if lk is not None:
                     o_v = o_v + lk_e
+                if wt_l is not None:
+                    o_v = o_v + wt_l[ei]
                 obj_l[ei] = o_v
             timeline[t0.id] = (start_v, end_v)
             assignments[t0.id] = names[ei]
@@ -1638,6 +1718,10 @@ def _greedy_soa(
             np.multiply(hm_vec, lam * a1 * u_oj, out=tmp)
             np.add(lk, tmp, out=lk)
             np.add(obj, lk, out=obj)
+        if wt_v is not None:
+            np.add(obj, wt_v, out=obj)
+        if dead_idx is not None:
+            obj[dead_idx] = np.inf
         ei = int(np.argmin(obj))
         heap, entries, new_keys = cand[ei]
         transfer_j = float(tjv[ei])
@@ -1707,7 +1791,7 @@ def _greedy_soa(
 
 
 def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
-                carbon=None, lookahead=None):
+                carbon=None, lookahead=None, alive=None, warm=None):
     per_ep = _predict_all(tasks, endpoints, store)
     if clusters is None:
         units = [[t] for t in tasks]
@@ -1727,7 +1811,7 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
         ordered = _sort_units(units, h, mean_preds)
         sched = _greedy_multi_ep(
             ordered, endpoints, per_ep, transfer, alpha, tasks, h, carbon,
-            lookahead,
+            lookahead, alive, warm,
         )
         if best is None or sched.objective < best.objective:
             best = sched
@@ -1735,9 +1819,11 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
 
 
 def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
-                     heuristic, carbon=None, lookahead=None):
+                     heuristic, carbon=None, lookahead=None, alive=None,
+                     warm=None):
     # SF normalizers from endpoint-specific predictions
     sf1, sf2, sf3 = _normalizers(tasks, endpoints, per_ep, transfer, carbon)
+    wt = _warm_terms(warm, alpha, sf1, sf2) if warm is not None else None
 
     state = SchedulerState(endpoints, transfer)
     assignments: dict[str, str] = {}
@@ -1748,6 +1834,8 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
                 u_oj += lookahead.out_j.get(t.id, 0.0)
         best_obj, best_ep = np.inf, None
         for ei, ep in enumerate(endpoints):
+            if alive is not None and not alive[ei]:
+                continue   # dead endpoint: masked out of candidate scoring
             trial = state.clone()
             # candidate timelines start empty, so with lookahead on the
             # trial records exactly this unit's (start, end) pairs
@@ -1766,8 +1854,15 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
                     alpha * (u_oj * lookahead.hops_mean[ei]) / sf1
                     + (1 - alpha) * lk_tail_sum / sf2
                 )
+            if wt is not None:
+                obj = obj + wt[ei]
             if obj < best_obj:
                 best_obj, best_ep = obj, ep
+        if best_ep is None:
+            raise RuntimeError(
+                "no live endpoint available for placement (alive mask "
+                "excludes the whole fleet)"
+            )
         state.assign(unit, best_ep, per_ep[best_ep.name], record_timeline=True)
         for t in unit:
             assignments[t.id] = best_ep.name
@@ -1813,6 +1908,8 @@ def cluster_mhra(
     state: SchedulerState | None = None,
     carbon: CarbonWeights | None = None,
     lookahead: LookaheadWeights | None = None,
+    alive: Sequence[bool] | None = None,
+    warm: WarmWeights | None = None,
 ) -> Schedule:
     """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
     tasks = list(tasks)
@@ -1838,12 +1935,12 @@ def cluster_mhra(
         )
         return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
                     clusters, engine="clone", carbon=carbon,
-                    lookahead=lookahead)
+                    lookahead=lookahead, alive=alive, warm=warm)
     table = PredictionTable(tasks, endpoints, store)
     clusters = compute_clusters(tasks, endpoints, table, max_cluster_size)
     return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
                 clusters, engine=engine, state=state, carbon=carbon,
-                lookahead=lookahead)
+                lookahead=lookahead, alive=alive, warm=warm)
 
 
 # ---------------------------------------------------------------------------

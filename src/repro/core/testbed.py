@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.counters import CounterSample, PowerSample, TaskRecord
 from repro.core.endpoint import EndpointSpec, table1_testbed
+from repro.core.faults import FaultTrace
 from repro.core.monitor import CallbackMonitor
 from repro.core.scheduler import Schedule, TaskSpec
 
@@ -110,6 +111,10 @@ class SimResult:
     makespan_s: float
     true_energy_j: float          # ground truth incl. idle while allocated
     true_dyn_energy_j: dict[str, float]
+    # fault/warm-pool telemetry (streaming path; zero on fault-free runs)
+    killed: int = 0               # tasks cut short by endpoint churn
+    cold_starts: int = 0          # cold worker spin-ups this window
+    cold_j: float = 0.0           # startup energy billed for them (J)
 
 
 class TestbedSim:
@@ -121,6 +126,7 @@ class TestbedSim:
         coefs: dict | None = None,
         seed: int = 0,
         runtime_noise: float = 0.05,
+        faults: FaultTrace | None = None,
     ):
         self.endpoints = endpoints or table1_testbed()
         self.by_name = {e.name: e for e in self.endpoints}
@@ -129,6 +135,11 @@ class TestbedSim:
         self.coefs = coefs or MACHINE_COEFS
         self.rng = np.random.default_rng(seed)
         self.noise = runtime_noise
+        # an empty trace is normalized to None so fault-free runs take the
+        # exact pre-fault code path (bitwise no-op gate); straggler draws
+        # are hashed per task id, never from self.rng, so enabling faults
+        # cannot perturb the per-task runtime-noise stream either
+        self.faults = faults if faults else None
         self._stream: dict | None = None
 
     def task_truth(self, fn: str, machine: str) -> tuple[float, float, np.ndarray]:
@@ -172,7 +183,12 @@ class TestbedSim:
 
     def execute(self, schedule: Schedule, tasks: list[TaskSpec]) -> SimResult:
         """Run the schedule: per-endpoint FIFO worker pools, queue delays,
-        1 Hz power+counter sampling, ground-truth energy bookkeeping."""
+        1 Hz power+counter sampling, ground-truth energy bookkeeping.
+
+        Batch mode is fault-free by design: churn/cold-start/straggler
+        faults only make sense against the streaming clock, so ``faults``
+        is consumed exclusively by :meth:`execute_window` (the batch
+        executor has no retry path to recover a killed task)."""
         by_ep: dict[str, list[TaskSpec]] = {}
         for t in tasks:
             by_ep.setdefault(schedule.assignments[t.id], []).append(t)
@@ -251,6 +267,7 @@ class TestbedSim:
             "slots": {},        # ep -> min-heap of slot-free times
             "slot_free": {},    # ep -> per-slot busy-until (pid mapping)
             "pid_of_slot": {},  # ep -> slot index -> pid
+            "slot_last": {},    # ep -> per-slot last task end (None = unused)
             "intervals": {},    # ep -> [(start, end, w, pid, rates)]
             "clock": 0.0,       # latest release time seen so far
         }
@@ -273,10 +290,23 @@ class TestbedSim:
         delay once, on first use of the stream.  Monitoring traces cover
         this window's span and include node power from still-running tasks
         of earlier windows, so attribution sees true node power.
+
+        Fault semantics (``faults=`` on the constructor; see
+        ``core/faults.py``): a task whose ``[start, end)`` span overlaps a
+        down interval of its endpoint is killed at the outage start — its
+        record comes back with ``failed=True`` and the partial span, so
+        the wasted energy is billed truthfully; stragglers get their true
+        runtime inflated by the trace's hash-drawn factor.  Warm-pool
+        dynamics (``EndpointSpec.cold_start_s/_j``/``keepalive_s``): a
+        task landing on a worker slot that was never used, idled past the
+        keep-alive, or lost its worker to an outage pays the cold-start
+        latency, and the startup energy is billed to the node (counted in
+        ``SimResult.cold_starts``/``cold_j``).
         """
         if self._stream is None:
             self.begin_stream()
         st = self._stream
+        flt = self.faults
         by_ep: dict[str, list[TaskSpec]] = {}
         for t in tasks:
             by_ep.setdefault(assignments[t.id], []).append(t)
@@ -286,6 +316,9 @@ class TestbedSim:
         true_dyn: dict[str, float] = {}
         makespan = st["clock"]
         total_true = 0.0
+        killed = 0
+        cold_starts = 0
+        cold_j_total = 0.0
 
         for ep_name, ep_tasks in by_ep.items():
             ep = self.by_name[ep_name]
@@ -296,29 +329,61 @@ class TestbedSim:
                 st["slots"][ep_name] = slots
                 st["slot_free"][ep_name] = list(slots)
                 st["pid_of_slot"][ep_name] = {i: 1000 + i for i in range(ep.cores)}
+                st["slot_last"][ep_name] = [None] * ep.cores
                 st["intervals"][ep_name] = []
             slots = st["slots"][ep_name]
             slot_free = st["slot_free"][ep_name]
             pid_of_slot = st["pid_of_slot"][ep_name]
+            slot_last = st["slot_last"][ep_name]
             # drop intervals that ended before this window opens
             st["intervals"][ep_name] = [
                 iv for iv in st["intervals"][ep_name] if iv[1] > now
             ]
             intervals = st["intervals"][ep_name]
+            cold_j_ep = 0.0
             new_intervals = []
             for t in ep_tasks:
                 rt, w, rates = self.task_truth(t.fn, ep_name)
+                # the noise draw consumes self.rng per task in submission
+                # order; fault paths below must never touch this stream
                 rt = rt * float(
                     np.clip(self.rng.normal(1.0, self.noise), 0.7, 1.3)
                 )
+                if flt is not None:
+                    sfac = flt.straggle_factor(t.id)
+                    if sfac != 1.0:
+                        rt = rt * sfac
                 popped = heapq.heappop(slots)
                 start = max(popped, now, t.not_before) + DISPATCH_OVERHEAD_S
-                end = start + rt
-                heapq.heappush(slots, end)
                 # match the freed slot on the *unclamped* pop value — clamping
                 # to `now` first could pick a still-busy slot and reuse its pid
                 slot_id = int(np.argmin([abs(sf - popped) for sf in slot_free]))
+                if ep.cold_start_s > 0.0 or ep.cold_start_j > 0.0:
+                    prev = slot_last[slot_id]
+                    cold = (
+                        prev is None
+                        or start - prev > ep.keepalive_s
+                        or (flt is not None and prev < start
+                            and flt.down_overlap(ep_name, prev, start)
+                            is not None)
+                    )
+                    if cold:
+                        start = start + ep.cold_start_s
+                        cold_starts += 1
+                        cold_j_ep += ep.cold_start_j
+                end = start + rt
+                failed = False
+                if flt is not None:
+                    ov = flt.down_overlap(ep_name, start, end)
+                    if ov is not None:
+                        # killed at the outage start (or at dispatch if the
+                        # endpoint was already down); partial span billed
+                        end = max(start, ov[0])
+                        failed = True
+                        killed += 1
+                heapq.heappush(slots, end)
                 slot_free[slot_id] = end
+                slot_last[slot_id] = end
                 pid = pid_of_slot[slot_id]
                 iv = (start, end, w, pid, rates)
                 intervals.append(iv)
@@ -326,6 +391,7 @@ class TestbedSim:
                 records.append(TaskRecord(
                     task_id=t.id, fn=t.fn, endpoint=ep_name,
                     worker_pid=pid, t_start=start, t_end=end, user=t.user,
+                    failed=failed,
                 ))
             release_t = max(end for _, end, *_ in new_intervals) + 2.0
             makespan = max(makespan, release_t)
@@ -341,6 +407,9 @@ class TestbedSim:
             node_true = dyn + (
                 ep.idle_power_w * (release_t - now) if ep.has_batch_scheduler else 0.0
             )
+            if cold_j_ep:
+                node_true += cold_j_ep
+                cold_j_total += cold_j_ep
             total_true += node_true
             traces[ep_name] = NodeTrace(
                 endpoint=ep_name, alloc_span=(now, release_t),
@@ -356,4 +425,5 @@ class TestbedSim:
         return SimResult(
             records=records, traces=traces, makespan_s=makespan,
             true_energy_j=total_true, true_dyn_energy_j=true_dyn,
+            killed=killed, cold_starts=cold_starts, cold_j=cold_j_total,
         )

@@ -8,6 +8,8 @@
   (dock → simulate → train → infer with data dependencies).
 - :mod:`repro.workloads.carbon_traces` — per-endpoint grid
   carbon-intensity signals (seeded synthetic + real-trace JSON I/O).
+- :mod:`repro.workloads.faults` — seeded endpoint-churn chaos scripts
+  and warm-pool fleet variants for the fault-tolerance evaluation.
 - :mod:`repro.workloads.wfcommons` — WfCommons/Pegasus JSON importer for
   published workflow DAGs (+ a committed Montage-shaped sample).
 - :mod:`repro.workloads.trace` — the :class:`WorkloadTrace` container +
@@ -26,6 +28,7 @@ from repro.workloads.carbon_traces import (
     table1_carbon_signal,
     write_carbon_signal,
 )
+from repro.workloads.faults import add_failover, churn_fault_trace, with_warm_pool
 from repro.workloads.moldesign import (
     MOLDESIGN_DAG_PROFILES,
     moldesign_dag_workload,
@@ -40,8 +43,10 @@ __all__ = [
     "FUNCTION_CLASSES",
     "MOLDESIGN_DAG_PROFILES",
     "WorkloadTrace",
+    "add_failover",
     "apply_deadline_slack",
     "bursty_arrivals",
+    "churn_fault_trace",
     "diurnal_arrivals",
     "load_carbon_signal",
     "load_wfcommons",
@@ -52,5 +57,6 @@ __all__ = [
     "poisson_arrivals",
     "synthetic_edp_workload",
     "table1_carbon_signal",
+    "with_warm_pool",
     "write_carbon_signal",
 ]

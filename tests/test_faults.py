@@ -1,0 +1,518 @@
+"""Fault-tolerance suite: FaultTrace semantics, chaos-script generators,
+warm-pool weights, engine parity under fleet mutation (clone/delta
+bitwise + delta/soa assignment parity with alive masks and warm weights,
+batch and mid-stream online), retry-to-completion goodput, permanent
+failures + drain deadlock diagnostics, cold starts, stragglers +
+speculative re-execution, and TaskDB truncated-tail recovery."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.counters import TaskRecord
+from repro.core.database import TaskDB
+from repro.core.endpoint import EndpointSpec, table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.evaluate import run_policy, warm_store
+from repro.core.faults import FaultTrace, WarmWeights
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import TaskSpec, mhra
+from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS, TestbedSim
+from repro.core.transfer import TransferModel
+from repro.workloads import (
+    add_failover,
+    churn_fault_trace,
+    synthetic_edp_workload,
+    with_warm_pool,
+)
+
+PARITY_RTOL = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# FaultTrace semantics
+# ---------------------------------------------------------------------------
+
+def _trace(**kw):
+    kw.setdefault("down", {"theta": ((10.0, 20.0), (30.0, 40.0))})
+    return FaultTrace(**kw)
+
+
+def test_is_up_half_open_semantics():
+    ft = _trace()
+    assert ft.is_up("theta", 9.999)
+    assert not ft.is_up("theta", 10.0)       # dead at d0
+    assert not ft.is_up("theta", 19.999)
+    assert ft.is_up("theta", 20.0)           # up again at exactly d1
+    assert ft.is_up("theta", 25.0)
+    assert not ft.is_up("theta", 35.0)
+    # endpoints absent from the mapping are always up
+    assert ft.is_up("desktop", 15.0)
+
+
+def test_down_overlap_finds_first_overlap():
+    ft = _trace()
+    assert ft.down_overlap("theta", 0.0, 10.0) is None   # half-open miss
+    assert ft.down_overlap("theta", 0.0, 10.01) == (10.0, 20.0)
+    assert ft.down_overlap("theta", 15.0, 16.0) == (10.0, 20.0)
+    assert ft.down_overlap("theta", 20.0, 30.0) is None
+    assert ft.down_overlap("theta", 25.0, 100.0) == (30.0, 40.0)
+    assert ft.down_overlap("desktop", 0.0, 1e9) is None
+
+
+def test_next_up_chains_contiguous_intervals():
+    ft = FaultTrace(down={"ic": ((5.0, 10.0), (10.0, 15.0), (20.0, 25.0))})
+    assert ft.next_up("ic", 0.0) == 0.0      # already up
+    assert ft.next_up("ic", 5.0) == 15.0     # rides through the contiguous pair
+    assert ft.next_up("ic", 22.0) == 25.0
+    assert ft.next_up("desktop", 7.0) == 7.0
+
+
+def test_join_leave_vocabulary():
+    # joining at 50 = down over [0, 50); leaving at 100 = down forever after
+    ft = FaultTrace(down={"late": ((0.0, 50.0),),
+                          "gone": ((100.0, float("inf")),)})
+    assert not ft.is_up("late", 0.0) and ft.is_up("late", 50.0)
+    assert ft.is_up("gone", 99.0) and not ft.is_up("gone", 1e12)
+    assert ft.next_up("gone", 100.0) == float("inf")
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="d0 < d1"):
+        FaultTrace(down={"x": ((5.0, 5.0),)})
+    with pytest.raises(ValueError, match="overlap"):
+        FaultTrace(down={"x": ((0.0, 10.0), (5.0, 15.0))})
+    with pytest.raises(ValueError, match="straggler_p"):
+        FaultTrace(straggler_p=1.5)
+    with pytest.raises(ValueError, match="straggler_factor"):
+        FaultTrace(straggler_p=0.5, straggler_factor=0.5)
+
+
+def test_empty_trace_is_falsy_and_inert():
+    ft = FaultTrace.empty()
+    assert not ft
+    assert ft.is_up("anything", 0.0)
+    assert ft.straggle_factor("t0") == 1.0
+    assert _trace()  # a trace with outages is truthy
+    assert FaultTrace(straggler_p=0.1)  # stragglers alone are truthy
+
+
+def test_straggle_factor_is_a_pure_hash():
+    ft = FaultTrace(straggler_p=0.5, straggler_factor=3.0, seed=7)
+    draws = {tid: ft.straggle_factor(tid) for tid in (f"t{i}" for i in range(64))}
+    # deterministic across instances with the same seed
+    ft2 = FaultTrace(straggler_p=0.5, straggler_factor=3.0, seed=7)
+    assert all(ft2.straggle_factor(t) == f for t, f in draws.items())
+    # roughly half straggle at p=0.5, and values are exactly {1, factor}
+    assert set(draws.values()) == {1.0, 3.0}
+    n = sum(1 for f in draws.values() if f == 3.0)
+    assert 16 <= n <= 48
+    # p=1 straggles everything; p=0 nothing
+    assert FaultTrace(straggler_p=1.0).straggle_factor("t0") == 3.0
+    assert FaultTrace(straggler_p=0.0).straggle_factor("t0") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# chaos generators
+# ---------------------------------------------------------------------------
+
+def test_churn_trace_is_seeded_and_bounded():
+    names = [e.name for e in table1_testbed()]
+    a = churn_fault_trace(names, 1000.0, churn=0.2, mttr_s=50.0, seed=3,
+                          protect=("desktop",))
+    b = churn_fault_trace(names, 1000.0, churn=0.2, mttr_s=50.0, seed=3,
+                          protect=("desktop",))
+    assert a.down == b.down
+    assert "desktop" not in a.down          # protected endpoints never fail
+    assert set(a.down) <= set(names)
+    for name, ivs in a.down.items():
+        first = ivs[0][0]
+        assert 0.05 * 1000.0 <= first < 0.45 * 1000.0   # mid-stream start
+        for d0, d1 in ivs:
+            assert 25.0 <= d1 - d0 <= 200.0             # [mttr/2, 4*mttr]
+    # a different seed scripts different outages
+    c = churn_fault_trace(names, 1000.0, churn=0.2, mttr_s=50.0, seed=4,
+                          protect=("desktop",))
+    assert c.down != a.down
+
+
+def test_churn_trace_validation_and_zero_churn():
+    with pytest.raises(ValueError, match="horizon"):
+        churn_fault_trace(["a"], 0.0)
+    with pytest.raises(ValueError, match="churn"):
+        churn_fault_trace(["a"], 10.0, churn=1.0)
+    with pytest.raises(ValueError, match="mttr"):
+        churn_fault_trace(["a"], 10.0, mttr_s=0.0)
+    assert not churn_fault_trace(["a", "b"], 100.0, churn=0.0).down
+
+
+def test_with_warm_pool_and_add_failover():
+    eps = with_warm_pool(table1_testbed(), cold_start_s=1.0,
+                         cold_start_j=25.0, keepalive_s=30.0,
+                         only=("desktop",))
+    by = {e.name: e for e in eps}
+    assert by["desktop"].cold_start_j == 25.0
+    assert by["theta"].cold_start_j == 0.0          # untouched outside `only`
+    eps2, prof = add_failover(eps, BASE_PROFILES, rt_factor=1.1)
+    by2 = {e.name: e for e in eps2}
+    twin, src = by2["login"], by2["desktop"]
+    assert twin.always_on and twin.idle_power_w > src.idle_power_w
+    for fn in prof:
+        rt, w = prof[fn]["desktop"]
+        assert prof[fn]["login"] == (rt * 1.1, w)   # strictly dominated
+    assert "login" not in BASE_PROFILES[SEBS_FUNCTIONS[0]]  # input untouched
+    with pytest.raises(ValueError, match="dominate"):
+        add_failover(eps, BASE_PROFILES, rt_factor=0.9)
+    with pytest.raises(ValueError, match="unknown"):
+        add_failover(eps, BASE_PROFILES, clone_of="nope")
+
+
+# ---------------------------------------------------------------------------
+# warm-pool weights
+# ---------------------------------------------------------------------------
+
+def test_warm_weights_none_without_cold_costs():
+    from repro.core.scheduler import SchedulerState
+    eps = table1_testbed()
+    st = SchedulerState(eps, TransferModel(eps))
+    assert WarmWeights.from_state(eps, st, 0.0) is None
+
+
+def test_warm_weights_full_penalty_on_fresh_state():
+    from repro.core.scheduler import SchedulerState
+    eps = with_warm_pool(table1_testbed(), cold_start_s=2.0, cold_start_j=50.0)
+    st = SchedulerState(eps, TransferModel(eps))
+    w = WarmWeights.from_state(eps, st, 0.0)
+    # never-used endpoints: every slot cold, full penalty everywhere
+    assert w.cold_j == tuple(50.0 for _ in eps)
+    assert w.cold_s == tuple(2.0 for _ in eps)
+    with pytest.raises(ValueError, match="mismatch"):
+        WarmWeights(cold_j=(1.0,), cold_s=(1.0, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# engine parity under fleet mutation
+# ---------------------------------------------------------------------------
+
+def _batch_setup(n_per=12):
+    eps = table1_testbed()
+    store = TaskProfileStore(eps)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            rt, w = BASE_PROFILES[fn][ep.name]
+            for _ in range(3):
+                store.record(fn, ep.name, rt, rt * w)
+    tasks = [
+        TaskSpec(id=f"t{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)])
+        for i in range(n_per * len(SEBS_FUNCTIONS))
+    ]
+    return tasks, eps, store, TransferModel(eps)
+
+
+@pytest.mark.parametrize("alive", [
+    (True, False, True, True),
+    (False, True, True, False),
+])
+def test_batch_parity_under_alive_mask(alive):
+    tasks, eps, store, tm = _batch_setup()
+    runs = {
+        eng: mhra(tasks, eps, store, tm, alpha=0.5, engine=eng, alive=alive)
+        for eng in ("clone", "delta", "soa")
+    }
+    # dead endpoints never receive work
+    dead = {eps[i].name for i, a in enumerate(alive) if not a}
+    for s in runs.values():
+        assert not dead & set(s.assignments.values())
+    # clone/delta bitwise; soa assignment-identical with tight objectives
+    assert runs["clone"].assignments == runs["delta"].assignments
+    assert runs["clone"].objective == runs["delta"].objective
+    assert runs["clone"].energy_j == runs["delta"].energy_j
+    assert runs["delta"].assignments == runs["soa"].assignments
+    assert runs["soa"].objective == pytest.approx(
+        runs["delta"].objective, rel=PARITY_RTOL)
+
+
+def test_batch_parity_under_warm_weights():
+    tasks, eps, store, tm = _batch_setup()
+    warm = WarmWeights(cold_j=(0.0, 80.0, 40.0, 120.0),
+                       cold_s=(0.0, 3.0, 1.5, 5.0))
+    runs = {
+        eng: mhra(tasks, eps, store, tm, alpha=0.5, engine=eng, warm=warm)
+        for eng in ("clone", "delta", "soa")
+    }
+    assert runs["clone"].assignments == runs["delta"].assignments
+    assert runs["clone"].objective == runs["delta"].objective
+    assert runs["delta"].assignments == runs["soa"].assignments
+    assert runs["soa"].objective == pytest.approx(
+        runs["delta"].objective, rel=PARITY_RTOL)
+
+
+def test_alive_mask_edge_cases():
+    tasks, eps, store, tm = _batch_setup(n_per=2)
+    with pytest.raises(ValueError, match="alive mask"):
+        mhra(tasks, eps, store, tm, alive=(True,))
+    with pytest.raises(ValueError, match="every endpoint"):
+        mhra(tasks, eps, store, tm, alive=(False,) * len(eps))
+    # an all-True mask is normalized away: bitwise-identical to no mask
+    a = mhra(tasks, eps, store, tm, engine="delta")
+    b = mhra(tasks, eps, store, tm, engine="delta", alive=(True,) * len(eps))
+    assert a.assignments == b.assignments and a.objective == b.objective
+
+
+def _chaos_run(engine, fault_aware=True, faults=None, n_tasks=40, **kw):
+    syn = synthetic_edp_workload(n_tasks=n_tasks, seed=0)
+    return run_policy(syn, "mhra", engine=engine, seed=0, faults=faults,
+                      fault_aware=fault_aware, **kw)
+
+
+def test_online_delta_soa_parity_under_midstream_churn():
+    # desktop fails mid-stream and recovers: the alive mask + warm weights
+    # must not break delta/soa assignment parity across the fail/recover
+    ft = FaultTrace(down={"desktop": ((2.0, 30.0),)})
+    a = _chaos_run("delta", faults=ft)
+    b = _chaos_run("soa", faults=ft)
+    assert a.assignments == b.assignments
+    assert a.failures == b.failures and a.retries == b.retries
+
+
+def test_faults_none_and_empty_trace_are_bitwise_noops():
+    base = _chaos_run("delta")
+    none = _chaos_run("delta", faults=None)
+    empty = _chaos_run("delta", faults=FaultTrace.empty())
+    for r in (none, empty):
+        assert r.assignments == base.assignments
+        assert r.energy_j == base.energy_j
+        assert r.makespan_s == base.makespan_s
+        assert r.goodput == 1.0 and r.failures == 0 and r.cold_starts == 0
+
+
+def test_retry_to_completion_goodput():
+    # an outage that catches in-flight work: every kill is retried to
+    # completion, partial energy is billed as re-execution overhead
+    ft = FaultTrace(down={"desktop": ((2.0, 40.0),)})
+    r = _chaos_run("delta", faults=ft)
+    assert r.failures > 0 and r.retries == r.failures
+    assert r.goodput == 1.0
+    assert r.reexec_j > 0.0          # partial energy of in-flight kills
+    assert r.mean_recovery_s is not None and r.mean_recovery_s > 0.0
+
+
+def test_fault_oblivious_keeps_retry_path():
+    ft = FaultTrace(down={"desktop": ((2.0, 40.0),)})
+    r = _chaos_run("delta", faults=ft, fault_aware=False)
+    assert r.failures > 0 and r.goodput == 1.0
+
+
+def test_prune_parity_under_churn():
+    # DAGView retirement pruning must not change behavior when failed
+    # tasks re-enter the stream after pruning already retired their window
+    syn = synthetic_edp_workload(n_tasks=40, seed=0)
+    ft = FaultTrace(down={"desktop": ((2.0, 30.0),)})
+    outs = {}
+    for prune in (True, False):
+        sim = TestbedSim(syn.endpoints, profiles=syn.profiles,
+                         signatures=syn.signatures, seed=0,
+                         runtime_noise=0.0, faults=ft)
+        eng = OnlineEngine(syn.endpoints, sim, policy="mhra", engine="delta",
+                           store=warm_store(sim, syn), monitoring=False,
+                           window_s=5.0, faults=ft, prune=prune)
+        syn.replay_into(eng)
+        s = eng.summary()
+        outs[prune] = (s.completed, s.failures, s.retries,
+                       eng.state.metrics())
+    assert outs[True] == outs[False]
+
+
+# ---------------------------------------------------------------------------
+# permanent failures + drain diagnostics
+# ---------------------------------------------------------------------------
+
+def _engine(eps=None, faults=None, **kw):
+    eps = eps or table1_testbed()
+    sim = TestbedSim(eps, seed=0, runtime_noise=0.0, faults=faults)
+    syn = synthetic_edp_workload(n_tasks=1, seed=0)  # just for warm_store fns
+    syn = dataclasses.replace(syn, endpoints=eps)
+    return OnlineEngine(eps, sim, policy="mhra", engine="delta",
+                        store=warm_store(sim, syn), monitoring=False,
+                        window_s=5.0, faults=faults, **kw)
+
+
+def test_retry_cap_exhaustion_is_a_permanent_failure():
+    # desktop is the only endpoint and it leaves the fleet forever ->
+    # every endpoint down and none recovers: placement must refuse
+    eps = [e for e in table1_testbed() if e.name == "desktop"]
+    ft = FaultTrace(down={"desktop": ((1.0, float("inf")),)})
+    eng = _engine(eps=eps, faults=ft)
+    eng.submit(TaskSpec(id="a", fn="graph_bfs"), when=2.0)
+    with pytest.raises(RuntimeError, match="none recovers"):
+        eng.drain()
+
+
+def test_permanent_failure_cascades_instead_of_deadlocking():
+    # the whole fleet is down for the entire retry budget and the engine
+    # is fault-blind: the parent exhausts its attempts, lands in
+    # failed_permanently, and the child is cascaded instead of
+    # deadlocking drain()
+    eps = table1_testbed()
+    ft = FaultTrace(down={e.name: ((0.5, 1e7),) for e in eps})
+    eng = _engine(eps=eps, faults=ft, retry_cap=1, retry_backoff_s=0.5,
+                  fault_aware=False)
+    eng.submit(TaskSpec(id="p", fn="graph_bfs"), when=0.0)
+    eng.submit(TaskSpec(id="c", fn="graph_bfs", deps=("p",)), when=0.0)
+    eng.drain()                              # must terminate, not deadlock
+    assert eng.failed_permanently == {"p", "c"}
+    assert eng.summary().goodput == 0.0
+
+
+def test_drain_diagnoses_never_submitted_parent():
+    eng = _engine()
+    eng.submit(TaskSpec(id="orphan", fn="graph_bfs", deps=("ghost",)),
+               when=0.0)
+    with pytest.raises(RuntimeError, match=r"ghost \(never submitted\)"):
+        eng.drain()
+    # the summary still reports the orphan as submitted-but-incomplete
+    assert eng.summary().goodput < 1.0
+
+
+def test_cascade_marks_children_failed():
+    # force a permanent failure via an endpoint that is down for the whole
+    # bounded retry budget but comes back later (so placement succeeds)
+    eps = [e for e in table1_testbed() if e.name == "desktop"]
+    ft = FaultTrace(down={"desktop": ((1.0, 1e6),)})
+    sim = TestbedSim(eps, seed=0, runtime_noise=0.0, faults=ft)
+    syn = dataclasses.replace(synthetic_edp_workload(n_tasks=1, seed=0),
+                              endpoints=eps)
+    eng = OnlineEngine(eps, sim, policy="mhra", engine="delta",
+                       store=warm_store(sim, syn), monitoring=False,
+                       window_s=5.0, faults=ft, fault_aware=False,
+                       retry_cap=2, retry_backoff_s=1.0)
+    eng.submit(TaskSpec(id="p", fn="graph_bfs"), when=0.0)
+    eng.submit(TaskSpec(id="c", fn="graph_bfs", deps=("p",)), when=0.0)
+    eng.drain()
+    s = eng.summary()
+    assert "p" in eng.failed_permanently and "c" in eng.failed_permanently
+    assert s.permanent_failures == 2
+    assert s.goodput == 0.0
+
+
+# ---------------------------------------------------------------------------
+# cold starts and stragglers in the sim
+# ---------------------------------------------------------------------------
+
+def _one_core_desktop(**warm_kw):
+    """A single-slot always-on endpoint so warm/cold slot reuse is
+    deterministic (multi-slot heaps hand fresh — cold — slots to early
+    tasks)."""
+    desk = next(e for e in table1_testbed() if e.name == "desktop")
+    eps = [dataclasses.replace(desk, cores=1)]
+    return with_warm_pool(eps, **warm_kw) if warm_kw else eps
+
+
+def test_cold_start_latency_energy_and_keepalive():
+    eps = _one_core_desktop(cold_start_s=2.0, cold_start_j=50.0,
+                            keepalive_s=10.0)
+    sim = TestbedSim(eps, seed=0, runtime_noise=0.0)
+    warm_sim = TestbedSim(_one_core_desktop(), seed=0, runtime_noise=0.0)
+    # first dispatch: cold (never-used slot) -> latency + energy billed
+    res1 = sim.execute_window({"a": "desktop"},
+                              [TaskSpec(id="a", fn="graph_bfs")], now=0.0)
+    ref = warm_sim.execute_window({"a": "desktop"},
+                                  [TaskSpec(id="a", fn="graph_bfs")], now=0.0)
+    assert res1.cold_starts == 1 and res1.cold_j == 50.0
+    rec1, ref1 = res1.records[0], ref.records[0]
+    assert rec1.t_start == pytest.approx(ref1.t_start + 2.0)  # spin-up delay
+    assert rec1.runtime == pytest.approx(ref1.runtime)        # run unchanged
+    # immediate reuse of the same (only) slot: warm
+    res2 = sim.execute_window({"b": "desktop"},
+                              [TaskSpec(id="b", fn="graph_bfs")],
+                              now=rec1.t_end)
+    assert res2.cold_starts == 0 and res2.cold_j == 0.0
+    # idle past keep-alive: cold again
+    res3 = sim.execute_window({"c": "desktop"},
+                              [TaskSpec(id="c", fn="graph_bfs")],
+                              now=res2.records[0].t_end + 11.0)
+    assert res3.cold_starts == 1
+
+
+def test_default_fleet_has_no_cold_starts():
+    sim = TestbedSim(table1_testbed(), seed=0, runtime_noise=0.0)
+    res = sim.execute_window({"a": "desktop"},
+                             [TaskSpec(id="a", fn="graph_bfs")], now=0.0)
+    assert res.cold_starts == 0 and res.cold_j == 0.0
+
+
+def test_straggler_inflation_is_deterministic():
+    base = TestbedSim(table1_testbed(), seed=0, runtime_noise=0.0)
+    slow = TestbedSim(table1_testbed(), seed=0, runtime_noise=0.0,
+                      faults=FaultTrace(straggler_p=1.0, straggler_factor=4.0))
+    t = TaskSpec(id="s", fn="graph_bfs")
+    r0 = base.execute_window({"s": "desktop"}, [t], now=0.0).records[0]
+    r1 = slow.execute_window({"s": "desktop"}, [t], now=0.0).records[0]
+    assert r1.runtime == pytest.approx(4.0 * r0.runtime)
+
+
+def test_speculative_reexecution_completes_with_overhead():
+    # every task straggles 4x; spec_factor=2 arms a backup for each; the
+    # backup straggles identically (hash includes the @spec id) or wins —
+    # either way every task completes once and overhead is billed
+    ft = FaultTrace(straggler_p=1.0, straggler_factor=4.0)
+    r = _chaos_run("delta", faults=ft, spec_factor=2.0, n_tasks=20)
+    assert r.spec_launched > 0
+    assert r.goodput == 1.0
+    assert r.reexec_j > 0.0                  # loser replicas billed
+    assert r.spec_launched >= r.spec_wins
+
+
+def test_spec_factor_validation():
+    with pytest.raises(ValueError, match="spec_factor"):
+        OnlineEngine(table1_testbed(), policy="mhra", spec_factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# TaskDB truncated-tail recovery
+# ---------------------------------------------------------------------------
+
+def _rec(i):
+    return TaskRecord(task_id=f"t{i}", fn="f", endpoint="desktop",
+                      worker_pid=100 + i, t_start=float(i),
+                      t_end=float(i) + 1.0, energy_j=5.0)
+
+
+def test_truncated_trailing_line_is_skipped_with_warning(tmp_path):
+    p = tmp_path / "db.jsonl"
+    db = TaskDB(str(p))
+    db.extend([_rec(i) for i in range(3)])
+    db.save()
+    # simulate a crash mid-append: chop the last line in half
+    text = p.read_text()
+    p.write_text(text[: len(text) - 30])
+    with pytest.warns(RuntimeWarning, match="truncated trailing"):
+        db2 = TaskDB(str(p))
+    assert len(db2.records) == 2
+    assert db2.truncated == 1
+    assert [r.task_id for r in db2.records] == ["t0", "t1"]
+    # next save rewrites the file clean; a fresh load sees no damage
+    db2.save()
+    db3 = TaskDB(str(p))
+    assert db3.truncated == 0 and len(db3.records) == 2
+
+
+def test_midfile_corruption_still_raises(tmp_path):
+    p = tmp_path / "db.jsonl"
+    db = TaskDB(str(p))
+    db.extend([_rec(i) for i in range(3)])
+    db.save()
+    lines = p.read_text().splitlines()
+    lines[1] = lines[1][:10]                 # corrupt a non-trailing line
+    p.write_text("\n".join(lines) + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        TaskDB(str(p))
+
+
+def test_intact_file_reports_zero_truncated(tmp_path):
+    p = tmp_path / "db.jsonl"
+    db = TaskDB(str(p))
+    db.add(_rec(0))
+    db.save()
+    assert TaskDB(str(p)).truncated == 0
