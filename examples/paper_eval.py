@@ -33,12 +33,22 @@ best single site:
    strictly on goodput-per-megajoule; delta/soa stay
    assignment-identical under the alive mask + warm-pool weights.
 
+5. **Multi-tenant scenario** (``--multiuser``): a Zipf user population
+   (100k simulated principals) submitting bursty per-user campaigns,
+   with a per-user energy-budget ledger + shed admission control armed
+   on the fair row.  Gates: ``fair_mhra`` shows *strictly lower*
+   per-user EDP dispersion (CoV down, Jain index up) than plain MHRA at
+   a global EDP within ``MU_EDP_BAND``; every shed task is recorded
+   (goodput accounts for exactly the shed count); the deferring variant
+   drops nothing (goodput 1.0); delta/soa stay assignment-identical
+   with the fairness register + admission armed.
+
 Results are persisted to ``BENCH_eval.json`` and rendered to
 ``reports/eval.html`` via ``repro.core.report``.  Runnable bare from the
 repo root (no PYTHONPATH needed):
 
     python examples/paper_eval.py                # medium sizes
-    python examples/paper_eval.py --tiny --carbon --faults  # CI smoke
+    python examples/paper_eval.py --tiny --carbon --faults --multiuser
     python examples/paper_eval.py --full --carbon --faults  # paper sizes
 """
 from __future__ import annotations
@@ -59,10 +69,12 @@ from repro.core.evaluate import (
 )
 from repro.core.faults import FaultTrace
 from repro.core.report import eval_html_report, eval_text_report, write_bench_json
+from repro.core.fairness import FairShare
 from repro.workloads import (
     add_failover,
     churn_fault_trace,
     moldesign_dag_workload,
+    multiuser_edp_workload,
     synthetic_edp_workload,
     table1_carbon_signal,
     with_warm_pool,
@@ -101,6 +113,22 @@ FAULT_STRAGGLER_P = 0.08
 FAULT_STRAGGLER_X = 4.0
 SPEC_FACTOR = 3.0
 
+# multi-tenant scenario (--multiuser): one campaign shape across sizes —
+# only the task count scales, so tiny smoke and paper-size runs exercise
+# the same contention regime.  The budget is sized so a handful of
+# heavy Zipf-head tenants overdraw within a couple of bursts while the
+# long tail (a task or two each) never accrues debt.
+MU_SIZES = {"tiny": 256, "medium": 512, "full": 1792}
+MU_USERS = 100_000          # simulated principal universe (Zipf-sampled)
+MU_BURST = 32               # tasks per per-user burst
+MU_RATE_HZ = 50.0           # intra-burst submission rate
+MU_GAP_S = 45.0             # gap between a user's bursts
+MU_SPAN_S = 180.0           # campaign-start spread across users
+MU_BUDGET_J = 150.0         # per-user energy budget per ledger window
+MU_WINDOW_S = 30.0          # ledger replenish window
+MU_MU = 0.5                 # advantage-tax strength on over-budget users
+MU_EDP_BAND = 1.05          # fair row's global EDP <= band x plain MHRA
+
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -110,6 +138,8 @@ def main(argv=None) -> dict:
                     help="run the carbon-aware scenario (gCO2 + deferral gates)")
     ap.add_argument("--faults", action="store_true",
                     help="run the chaos scenario (churn/goodput/reexec gates)")
+    ap.add_argument("--multiuser", action="store_true",
+                    help="run the multi-tenant scenario (fairness gates)")
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_eval.json")
@@ -372,6 +402,87 @@ def main(argv=None) -> dict:
             "fault_reexec_j_oblivious": obliv.reexec_j,
             "fault_cold_starts_aware": aware.cold_starts,
             "fault_spec_launched": aware.spec_launched,
+        })
+
+    # --- 5. multi-tenant scenario (--multiuser) -----------------------
+    if args.multiuser:
+        mu_n = MU_SIZES[size]
+        mu = multiuser_edp_workload(
+            n_tasks=mu_n, n_users=MU_USERS, seed=args.seed,
+            burst_size=MU_BURST, burst_rate_hz=MU_RATE_HZ,
+            gap_s=MU_GAP_S, campaign_span_s=MU_SPAN_S,
+        )
+        share = FairShare(budget_j=MU_BUDGET_J, window_s=MU_WINDOW_S,
+                          mu=MU_MU)
+        plain = run_policy(mu, "mhra", alpha=args.alpha, seed=args.seed)
+        fair = run_policy(mu, "mhra", alpha=args.alpha, seed=args.seed,
+                          fairness=share, admission="shed",
+                          label="fair_mhra")
+        defer = run_policy(mu, "mhra", alpha=args.alpha, seed=args.seed,
+                           fairness=share, admission="defer",
+                           label="fair_mhra_defer")
+        for r in (fair, defer):
+            g, s_, u = gpsup(plain.energy_j, plain.makespan_s,
+                             r.energy_j, r.makespan_s)
+            r.greenup, r.speedup, r.powerup = g, s_, u
+        mu_res = EvalResult(
+            workload=mu.name, n_tasks=mu_n, alpha=args.alpha,
+            rows=[plain, fair, defer], baseline="mhra",
+        )
+        print()
+        print(eval_text_report(mu_res))
+        edp_band = fair.edp / plain.edp
+        print(f"\nmultiuser ({mu.meta['users_active']} active tenants of "
+              f"{MU_USERS}, top share {mu.meta['top_user_share']:.0%}): "
+              f"fair_mhra EDP CoV {fair.user_edp_cov:.3f} vs plain "
+              f"{plain.user_edp_cov:.3f}, Jain {fair.jain_index:.3f} vs "
+              f"{plain.jain_index:.3f}, global EDP {edp_band:.3f}x "
+              f"(band {MU_EDP_BAND:.2f}x), {fair.shed} shed")
+        assert fair.user_edp_cov < plain.user_edp_cov, (
+            f"fair_mhra per-user EDP CoV {fair.user_edp_cov:.4f} not "
+            f"strictly below plain MHRA's {plain.user_edp_cov:.4f}"
+        )
+        assert fair.jain_index > plain.jain_index, (
+            f"fair_mhra Jain index {fair.jain_index:.4f} not strictly "
+            f"above plain MHRA's {plain.jain_index:.4f}"
+        )
+        assert edp_band <= MU_EDP_BAND, (
+            f"fair_mhra global EDP {edp_band:.3f}x plain MHRA exceeds "
+            f"the {MU_EDP_BAND:.2f}x band"
+        )
+        # shed accounting: every rejected task is recorded, none vanish
+        assert fair.shed > 0, "fair_mhra shed nothing: admission never engaged"
+        assert abs(fair.goodput - (1.0 - fair.shed / mu_n)) < 1e-9, (
+            f"shed accounting leak: goodput {fair.goodput:.6f} vs "
+            f"{fair.shed} shed of {mu_n}"
+        )
+        # the deferring variant trades latency, never tasks
+        assert defer.shed == 0 and defer.goodput == 1.0, (
+            f"defer admission dropped work: shed={defer.shed} "
+            f"goodput={defer.goodput:.3f}"
+        )
+        # engine parity must survive the fairness register + admission
+        fair_soa = run_policy(mu, "mhra", engine="soa", alpha=args.alpha,
+                              seed=args.seed, fairness=share,
+                              admission="shed", label="fair_mhra")
+        assert fair.assignments == fair_soa.assignments, (
+            "delta and soa engines diverged under fairness weighting"
+        )
+        print(f"fairness engine parity: delta/soa agree on all "
+              f"{len(fair.assignments)} assignments")
+        results.append(mu_res)
+        extra.update({
+            "multiuser_fair_gate": True,
+            "multiuser_engine_parity": True,
+            "multiuser_users_active": mu.meta["users_active"],
+            "multiuser_top_user_share": mu.meta["top_user_share"],
+            "multiuser_jain_plain": plain.jain_index,
+            "multiuser_jain_fair": fair.jain_index,
+            "multiuser_cov_plain": plain.user_edp_cov,
+            "multiuser_cov_fair": fair.user_edp_cov,
+            "multiuser_edp_band": edp_band,
+            "multiuser_shed": fair.shed,
+            "multiuser_deferred": defer.admission_deferred,
         })
 
     # --- persist + render ---------------------------------------------

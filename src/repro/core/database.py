@@ -74,6 +74,12 @@ class TaskDB:
             lambda: defaultdict(int)
         )
         self._span_by_ep: dict[str, tuple[float, float]] = {}
+        # per-user rollups for the fairness ledger / eval columns:
+        # energy sum, busy-seconds sum, task count, (first start, last end)
+        self._user_energy: dict[str, float] = defaultdict(float)
+        self._user_busy_s: dict[str, float] = defaultdict(float)
+        self._user_cnt: dict[str, int] = defaultdict(int)
+        self._user_span: dict[str, tuple[float, float]] = {}
 
     def _index(self, r: TaskRecord) -> None:
         self._energy_by_ep[r.endpoint] += r.energy_j or 0.0
@@ -88,6 +94,16 @@ class TaskDB:
         else:
             self._span_by_ep[r.endpoint] = (
                 min(span[0], r.t_start), max(span[1], r.t_end)
+            )
+        self._user_energy[r.user] += r.energy_j or 0.0
+        self._user_busy_s[r.user] += r.t_end - r.t_start
+        self._user_cnt[r.user] += 1
+        uspan = self._user_span.get(r.user)
+        if uspan is None:
+            self._user_span[r.user] = (r.t_start, r.t_end)
+        else:
+            self._user_span[r.user] = (
+                min(uspan[0], r.t_start), max(uspan[1], r.t_end)
             )
 
     def add(self, rec: TaskRecord) -> None:
@@ -142,6 +158,42 @@ class TaskDB:
     def span_by_endpoint(self) -> dict[str, tuple[float, float]]:
         """Per-endpoint (first task start, last task end) seconds."""
         return dict(self._span_by_ep)
+
+    def users(self) -> list[str]:
+        """Every user that ever contributed a record, sorted.  Incremental
+        (compaction-safe): users whose raw rows were evicted under
+        ``max_records`` still appear."""
+        return sorted(self._user_cnt)
+
+    def span_by_user(self) -> dict[str, tuple[float, float]]:
+        """Per-user (first task start, last task end) seconds."""
+        return dict(self._user_span)
+
+    def edp_by_user(self) -> dict[str, float]:
+        """Per-user EDP proxy: total attributed energy (J) times the
+        user's wall span (last end - first start, s).  Incremental and
+        compaction-safe like every other aggregate."""
+        return {
+            u: self._user_energy[u] * (s[1] - s[0])
+            for u, s in self._user_span.items()
+        }
+
+    def user_stats(self) -> dict[str, dict[str, float]]:
+        """Per-user rollup: ``energy_j`` (sum), ``busy_s`` (sum of record
+        runtimes), ``tasks`` (count), ``span_s`` (wall span), ``edp``
+        (energy * span) — the fairness eval columns' raw inputs."""
+        out: dict[str, dict[str, float]] = {}
+        for u in self.users():
+            t0, t1 = self._user_span[u]
+            e = self._user_energy[u]
+            out[u] = {
+                "energy_j": e,
+                "busy_s": self._user_busy_s[u],
+                "tasks": float(self._user_cnt[u]),
+                "span_s": t1 - t0,
+                "edp": e * (t1 - t0),
+            }
+        return out
 
     def makespan(self) -> float:
         """Last task end minus first task start over all records (s)."""

@@ -32,6 +32,7 @@ from repro.core.dag import DAGView
 from repro.core.database import TaskDB
 from repro.core.endpoint import EndpointSpec
 from repro.core.executor import attribute_window
+from repro.core.fairness import FairShare, FairnessLedger, FairnessWeights
 from repro.core.faults import FaultTrace, WarmWeights
 from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
 from repro.core.power_model import LinearPowerModel
@@ -89,6 +90,9 @@ class EngineSummary:
     spec_wins: int = 0       # backups that beat their straggling primary
     spec_wasted_j: float = 0.0   # energy of the losing copy of each pair
     mean_recovery_s: float | None = None  # first-failure -> completion
+    # --- multi-tenant fairness (zero without fairness/admission) ---
+    shed: int = 0            # over-budget tasks rejected by admission control
+    admission_deferred: int = 0  # tasks delayed to a budget replenish
 
 
 class OnlineEngine:
@@ -166,6 +170,10 @@ class OnlineEngine:
         retry_cap: int = 6,
         retry_backoff_s: float = 15.0,
         spec_factor: float | None = None,
+        fairness: FairShare | FairnessLedger | None = None,
+        admission: str | None = None,
+        admission_debt: float = 1.0,
+        admission_max_defer: int = 8,
     ):
         """``engine`` selects the scheduling backend for registry-name
         mhra/cluster_mhra/carbon_mhra policies ("delta" or "soa") and the
@@ -227,7 +235,23 @@ class OnlineEngine:
         first finisher wins and the loser's energy is billed as
         speculation waste.  With ``faults=None`` (or an empty trace) and
         ``spec_factor=None`` every placement and simulation path is
-        bitwise-identical to a fault-free engine."""
+        bitwise-identical to a fault-free engine.
+
+        ``fairness`` (a :class:`~repro.core.fairness.FairShare` policy or
+        a pre-built ledger) arms multi-tenant accounting: every executed
+        record's energy (and carbon, when the share carries ``budget_g``
+        and a carbon signal is attached) is charged to ``task.user``'s
+        budget, and each window's :class:`PolicyContext` carries a
+        :class:`~repro.core.fairness.FairnessWeights` debt snapshot that
+        MHRA-family policies fold into placement as an advantage tax.
+        ``admission`` escalates from *steering* to *gating*: at flush
+        time a task whose user's debt is at least ``admission_debt``
+        windows is ``"shed"`` (recorded in ``self.shed`` — never silently
+        dropped; its DAG descendants shed with it at drain) or
+        ``"defer"``-red to the next budget replenish, at most
+        ``admission_max_defer`` times before it is admitted anyway (no
+        starvation).  ``fairness=None`` (the default) keeps every
+        placement bitwise-identical to a single-tenant engine."""
         self.endpoints = list(endpoints)
         self.backend = backend
         if promotion not in ("epoch", "exact"):
@@ -314,6 +338,29 @@ class OnlineEngine:
         self.retry_cap = retry_cap
         self.retry_backoff_s = retry_backoff_s
         self.spec_factor = spec_factor
+        if admission not in (None, "shed", "defer"):
+            raise ValueError(
+                f"admission must be None, 'shed', or 'defer', got {admission!r}"
+            )
+        if admission is not None and fairness is None:
+            raise ValueError("admission control needs a fairness budget")
+        if admission_debt <= 0.0:
+            raise ValueError(
+                f"admission_debt must be positive, got {admission_debt}"
+            )
+        if admission_max_defer < 0:
+            raise ValueError(
+                f"admission_max_defer must be >= 0, got {admission_max_defer}"
+            )
+        self.fairness = (
+            fairness.ledger() if isinstance(fairness, FairShare) else fairness
+        )
+        self.admission = admission
+        self.admission_debt = admission_debt
+        self.admission_max_defer = admission_max_defer
+        self.shed: list[TaskSpec] = []
+        self.shed_ids: set[str] = set()
+        self._adm_defer: dict[str, int] = {}   # id -> admission deferrals
         self.failed_permanently: set[str] = set()
         self._submitted_ids: set[str] = set()
         self._attempts: dict[str, int] = {}          # id -> failed attempts
@@ -489,6 +536,12 @@ class OnlineEngine:
             tasks = self._split_deferrable(tasks, submitted_at)
             if not tasks:
                 return None     # whole window shifted to a cleaner grid
+        if self.fairness is not None:
+            self.fairness.advance(submitted_at)
+            if self.admission is not None:
+                tasks = self._admit(tasks, submitted_at)
+                if not tasks:
+                    return None     # whole window shed/deferred over budget
 
         if self.state is None:
             # engine="auto": first window — resolve the crossover on the
@@ -521,9 +574,14 @@ class OnlineEngine:
             warm = WarmWeights.from_state(
                 self.endpoints, self.state, submitted_at, self.faults
             )
+        fair_w = (
+            FairnessWeights.from_ledger(self.fairness, tasks)
+            if self.fairness is not None else None
+        )
         ctx = PolicyContext(self.endpoints, self.store, self.transfer,
                             self.alpha, carbon=self.carbon, now=submitted_at,
-                            dag=self.dag, alive=alive, warm=warm)
+                            dag=self.dag, alive=alive, warm=warm,
+                            fairness=fair_w)
         # placement previews must not start tasks before this window opened
         self.state.advance_to(submitted_at)
         t0 = time.perf_counter()
@@ -549,6 +607,15 @@ class OnlineEngine:
             # planner-only mode: completion times from the schedule timeline
             for t in tasks:
                 _, end = schedule.timeline[t.id]
+                if self.fairness is not None:
+                    # no execution records to bill: charge predicted energy
+                    p = self.store.predict(t.fn, assignments[t.id])
+                    g = 0.0
+                    if self.fairness.tracks_carbon and self.carbon is not None:
+                        g = p.energy_j * self.carbon.rate_g_per_j(
+                            assignments[t.id], end
+                        )
+                    self.fairness.charge(t.user, p.energy_j, g)
                 self.completed[t.id] = (assignments[t.id], end)
                 self.dag.complete(t.id, assignments[t.id], end)
         # timeline GC: completions may have retired finished subgraphs from
@@ -573,6 +640,34 @@ class OnlineEngine:
             del self.windows[:len(self.windows) - self.retain_windows]
         self._promote_ready()
         return res
+
+    # ------------------------------------------------------------------
+    # multi-tenant admission control (budget gate at the window boundary)
+    def _admit(self, tasks: list[TaskSpec], now: float) -> list[TaskSpec]:
+        """Gate over-budget submissions: a task whose user's debt is at
+        least ``admission_debt`` windows is shed (recorded) or deferred
+        to the next budget replenish — at most ``admission_max_defer``
+        times, after which it is admitted anyway so nothing starves."""
+        led = self.fairness
+        keep: list[TaskSpec] = []
+        for t in tasks:
+            if led.debt(t.user) < self.admission_debt:
+                keep.append(t)
+                continue
+            if self.admission == "defer":
+                n = self._adm_defer.get(t.id, 0)
+                if n < self.admission_max_defer:
+                    self._adm_defer[t.id] = n + 1
+                    release = led.next_replenish(now)
+                    heapq.heappush(
+                        self.deferred, (release, next(self._defer_seq), t)
+                    )
+                    continue
+                keep.append(t)   # defer budget spent: admit, never starve
+                continue
+            self.shed.append(t)
+            self.shed_ids.add(t.id)
+        return keep
 
     # ------------------------------------------------------------------
     # fault handling: retries, permanent failures, speculation
@@ -604,7 +699,17 @@ class OnlineEngine:
         """Route one window's execution records: completions feed the DAG,
         kills re-enter the pending queue with exponential backoff (until
         ``retry_cap``), stragglers race a speculative backup copy."""
+        led = self.fairness
         for rec in sim.records:
+            if led is not None and rec.energy_j:
+                # every execution bills its principal — failed attempts and
+                # losing speculative copies burned real joules too
+                g = 0.0
+                if led.tracks_carbon and self.carbon is not None:
+                    g = rec.energy_j * self.carbon.rate_g_per_j(
+                        rec.endpoint, rec.t_end
+                    )
+                led.charge(rec.user, rec.energy_j, g)
             tid = rec.task_id
             if tid.endswith("@spec"):
                 self._resolve_speculation(tid, rec)
@@ -679,9 +784,10 @@ class OnlineEngine:
                 break
             # only time-shifted work remains: jump to its release
             self.clock = max(self.clock, self.deferred[0][0])
-        # cascade: a child whose parent failed permanently can never run —
-        # mark it failed too (goodput < 1) instead of deadlocking the drain
-        if self.failed_permanently and self.waiting:
+        # cascade: a child whose parent failed permanently (or was shed by
+        # admission control) can never run — mark it likewise (goodput < 1)
+        # instead of deadlocking the drain
+        if (self.failed_permanently or self.shed_ids) and self.waiting:
             changed = True
             while changed:
                 changed = False
@@ -690,11 +796,18 @@ class OnlineEngine:
                         del self.waiting[tid]
                         self.failed_permanently.add(tid)
                         changed = True
+                    elif any(d in self.shed_ids for d in t.deps):
+                        del self.waiting[tid]
+                        self.shed.append(t)
+                        self.shed_ids.add(tid)
+                        changed = True
         if self.waiting:
             def _why(dep: str) -> str:
                 if dep in self.failed_permanently:
                     n = self._attempts.get(dep, 0)
                     return f"{dep} (failed permanently after {n} attempts)"
+                if dep in self.shed_ids:
+                    return f"{dep} (shed by admission control)"
                 if dep not in self._submitted_ids:
                     return f"{dep} (never submitted)"
                 return f"{dep} (still pending/in flight: possible cycle)"
@@ -764,4 +877,6 @@ class OnlineEngine:
                 sum(self._recovery_s) / len(self._recovery_s)
                 if self._recovery_s else None
             ),
+            shed=len(self.shed_ids),
+            admission_deferred=len(self._adm_defer),
         )

@@ -73,6 +73,12 @@ class PolicyRun:
     spec_launched: int = 0           # speculative backups launched
     spec_wins: int = 0               # backups that beat their primary
     mean_recovery_s: float | None = None  # first kill -> completion
+    # --- multi-tenant runs only (defaults = single-tenant) ---
+    users: int = 0                   # distinct users with completed tasks
+    jain_index: float | None = None  # Jain fairness over per-user EDP
+    user_edp_cov: float | None = None   # CoV (dispersion) of per-user EDP
+    shed: int = 0                    # tasks rejected by admission control
+    admission_deferred: int = 0      # tasks delayed to a budget replenish
 
     @property
     def edp(self) -> float:
@@ -354,6 +360,70 @@ def deadline_misses(trace: WorkloadTrace, windows) -> tuple[int, int]:
     return missed, len(deadlines)
 
 
+def jain_index(values: Sequence[float]) -> float | None:
+    """Jain's fairness index ``(sum x)^2 / (n * sum x^2)`` over positive
+    per-user loads: 1.0 = perfectly even, 1/n = one user carries all.
+    For *cost*-like values (per-user EDP) read it the same way — higher
+    means the burden is spread more evenly.  None on empty input."""
+    x = np.asarray(list(values), dtype=float)
+    if x.size == 0:
+        return None
+    sq = float((x * x).sum())
+    if sq == 0.0:
+        return 1.0
+    return float(x.sum()) ** 2 / (x.size * sq)
+
+
+def dispersion_cov(values: Sequence[float]) -> float | None:
+    """Coefficient of variation (population std / mean) — the per-user
+    EDP dispersion column.  None on empty input or zero mean."""
+    x = np.asarray(list(values), dtype=float)
+    if x.size == 0:
+        return None
+    m = float(x.mean())
+    if m == 0.0:
+        return None
+    return float(x.std()) / m
+
+
+def per_user_metrics(trace: WorkloadTrace, windows) -> dict[str, dict[str, float]]:
+    """Per-user rollup from the *executed* records: ``tasks``,
+    ``energy_j`` (sum), ``turnaround_s`` (mean completion - arrival), and
+    ``edp`` = mean-energy-per-task * mean-turnaround — a per-user
+    energy-delay product that is load-invariant, so a 400-task tenant and
+    a 2-task tenant are comparable.  Kills and speculative backup copies
+    are not completions and are skipped; shed tasks never produce records
+    at all (their cost shows up in goodput, not here)."""
+    arrival = {t.id: float(a) for t, a in zip(trace.tasks, trace.arrivals)}
+    user_of = {t.id: t.user for t in trace.tasks}
+    e_sum: dict[str, float] = {}
+    t_sum: dict[str, float] = {}
+    cnt: dict[str, int] = {}
+    for w in windows:
+        if w.sim is None:
+            continue
+        for rec in w.sim.records:
+            tid = rec.task_id
+            if rec.failed or tid.endswith("@spec") or tid not in arrival:
+                continue
+            u = user_of[tid]
+            e_sum[u] = e_sum.get(u, 0.0) + (rec.energy_j or 0.0)
+            t_sum[u] = t_sum.get(u, 0.0) + (rec.t_end - arrival[tid])
+            cnt[u] = cnt.get(u, 0) + 1
+    out: dict[str, dict[str, float]] = {}
+    for u in sorted(cnt):
+        n = cnt[u]
+        mean_e = e_sum[u] / n
+        mean_t = t_sum[u] / n
+        out[u] = {
+            "tasks": float(n),
+            "energy_j": e_sum[u],
+            "turnaround_s": mean_t,
+            "edp": mean_e * mean_t,
+        }
+    return out
+
+
 def run_policy(
     trace: WorkloadTrace,
     policy: str,
@@ -378,6 +448,11 @@ def run_policy(
     spec_factor: float | None = None,
     retry_cap: int = 6,
     retry_backoff_s: float = 15.0,
+    fairness=None,
+    admission: str | None = None,
+    admission_debt: float = 1.0,
+    admission_max_defer: int = 8,
+    label: str | None = None,
 ):
     """Replay ``trace`` under one policy and collect metrics.
 
@@ -410,6 +485,16 @@ def run_policy(
     ``fault_aware=True``, dead-endpoint masking + warm-pool scoring).
     ``fault_aware=False`` keeps the retries but blinds placement — the
     chaos-eval baseline.  ``spec_factor`` arms speculative re-execution.
+
+    ``fairness`` (a :class:`~repro.core.fairness.FairShare`) arms the
+    engine's per-user budget ledger and the advantage-tax placement
+    term; ``admission``/``admission_debt``/``admission_max_defer``
+    additionally gate over-budget submissions (see
+    :class:`OnlineEngine`).  Every run annotates per-user fairness
+    columns (``users``, ``jain_index``, ``user_edp_cov``) when the trace
+    is multi-tenant.  ``label`` renames the row — the fair-policy rows
+    are plain policies with a fairness budget armed, so the relabel is
+    what distinguishes ``fair_mhra`` from ``mhra`` in the table.
     """
     sim = TestbedSim(
         trace.endpoints, profiles=trace.profiles, signatures=trace.signatures,
@@ -427,6 +512,9 @@ def run_policy(
         promotion=promotion,
         faults=faults, fault_aware=fault_aware, spec_factor=spec_factor,
         retry_cap=retry_cap, retry_backoff_s=retry_backoff_s,
+        fairness=fairness, admission=admission,
+        admission_debt=admission_debt,
+        admission_max_defer=admission_max_defer,
     )
     windows = trace.replay_into(eng)
     s = eng.summary()
@@ -437,7 +525,8 @@ def run_policy(
     placements: dict[str, int] = {}
     for ep in assignments.values():
         placements[ep] = placements.get(ep, 0) + 1
-    label = f"site:{site}" if policy == "single_site" else policy
+    if label is None:
+        label = f"site:{site}" if policy == "single_site" else policy
     # fixed-assignment policies use no greedy engine; don't mislabel them
     engine_label = engine if policy in greedy else "n/a"
     carbon_g = None
@@ -447,6 +536,8 @@ def run_policy(
         )
     missed, total = deadline_misses(trace, windows)
     cp_bound = critical_path_bound_s(trace)
+    um = per_user_metrics(trace, windows)
+    user_edps = [m["edp"] for m in um.values() if m["edp"] > 0.0]
     # bill the sim's measured cold-start energy on top of the scheduler
     # estimate: warm-pool dynamics burn real joules the placement-state
     # model never sees, and the warm-pool objective term is only
@@ -470,6 +561,10 @@ def run_policy(
         cold_starts=s.cold_starts, cold_j=s.cold_j,
         spec_launched=s.spec_launched, spec_wins=s.spec_wins,
         mean_recovery_s=s.mean_recovery_s,
+        users=len(um),
+        jain_index=jain_index(user_edps) if len(um) > 1 else None,
+        user_edp_cov=dispersion_cov(user_edps) if len(um) > 1 else None,
+        shed=s.shed, admission_deferred=s.admission_deferred,
     )
     if return_windows:
         return run, windows

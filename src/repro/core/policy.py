@@ -71,6 +71,12 @@ class PolicyContext:
     :class:`~repro.core.faults.WarmWeights` expected-cold-start penalty.
     Both default to None — fault-oblivious runs and baseline policies
     never see them, keeping every scoring path bitwise-unchanged.
+
+    ``fairness`` is the multi-tenant engine's per-window debt snapshot
+    (:class:`~repro.core.fairness.FairnessWeights`): user -> windows of
+    budget overdrawn, which MHRA-family policies fold into candidate
+    scoring as an advantage tax.  None (always, when the engine has no
+    fairness budget) keeps every scoring path bitwise-unchanged.
     """
     endpoints: Sequence[EndpointSpec]
     store: TaskProfileStore
@@ -81,6 +87,7 @@ class PolicyContext:
     dag: DAGView | None = None
     alive: tuple | None = None
     warm: "object | None" = None   # WarmWeights snapshot (or None)
+    fairness: "object | None" = None   # FairnessWeights snapshot (or None)
 
 
 class PlacementPolicy(abc.ABC):
@@ -174,7 +181,7 @@ class MHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state,
-            alive=ctx.alive, warm=ctx.warm,
+            alive=ctx.alive, warm=ctx.warm, fairness=ctx.fairness,
         )
 
 
@@ -209,7 +216,7 @@ class CarbonMHRAPolicy(PlacementPolicy):
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state, carbon=carbon,
-            alive=ctx.alive, warm=ctx.warm,
+            alive=ctx.alive, warm=ctx.warm, fairness=ctx.fairness,
         )
 
 
@@ -255,6 +262,7 @@ class LookaheadMHRAPolicy(PlacementPolicy):
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, engine=self.engine, state=state,
             lookahead=lookahead, alive=ctx.alive, warm=ctx.warm,
+            fairness=ctx.fairness,
         )
 
 
@@ -275,7 +283,7 @@ class ClusterMHRAPolicy(PlacementPolicy):
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,
             self.heuristics, self.max_cluster_size,
             engine=self.engine, state=state,
-            alive=ctx.alive, warm=ctx.warm,
+            alive=ctx.alive, warm=ctx.warm, fairness=ctx.fairness,
         )
 
 

@@ -161,6 +161,22 @@ _EVAL_CP_COL = (("cp-su", "{cp_su:>7.2f}", ">7"),)
 _EVAL_VS_MHRA_COL = (("EDP/mhra", "{edp_vs_mhra:>9.3f}", ">9"),)
 _EVAL_MISS_COL = (("miss%", "{miss_pct:>7.1f}", ">7"),)
 
+# appended when rows carry multi-tenant fairness annotations (the
+# --multiuser evaluation):
+# users    — distinct task owners whose tasks completed in this run
+# jain     — Jain's fairness index over per-user EDP (1.0 = even)
+# EDP-cov  — coefficient of variation of per-user EDP (lower = fairer)
+# shed     — submissions rejected by admission control (recorded, not
+#            silently dropped)
+# adm-d    — submissions deferred at least once by admission control
+_EVAL_FAIR_COLS = (
+    ("users", "{users:>7d}", ">7"),
+    ("jain", "{jain:>7.3f}", ">7"),
+    ("EDP-cov", "{user_edp_cov:>8.3f}", ">8"),
+    ("shed", "{shed:>6d}", ">6"),
+    ("adm-d", "{admission_deferred:>6d}", ">6"),
+)
+
 # appended when any row ran under a fault trace (chaos evaluations):
 # goodput  — completed / submitted task ids (1.0 = nothing lost)
 # gp/MJ    — goodput per megajoule, the chaos headline metric
@@ -186,9 +202,16 @@ def _eval_cols(result) -> tuple:
         cols = cols + _EVAL_VS_MHRA_COL
     if any(r.deadline_total > 0 for r in result.rows):
         cols = cols + _EVAL_MISS_COL
+    if any(_row_has_fairness(r) for r in result.rows):
+        cols = cols + _EVAL_FAIR_COLS
     if any(r.faulty for r in result.rows):
         cols = cols + _EVAL_FAULT_COLS
     return cols
+
+
+def _row_has_fairness(r) -> bool:
+    return (r.jain_index is not None or r.user_edp_cov is not None
+            or r.shed > 0 or r.admission_deferred > 0)
 
 
 def _eval_row_values(r) -> dict:
@@ -207,6 +230,13 @@ def _eval_row_values(r) -> dict:
         "cp_su": r.cp_speedup if r.cp_speedup is not None else nan,
         "edp_vs_mhra": r.edp_vs_mhra if r.edp_vs_mhra is not None else nan,
         "miss_pct": miss * 100.0 if miss is not None else nan,
+        "users": r.users,
+        "jain": r.jain_index if r.jain_index is not None else nan,
+        "user_edp_cov": (
+            r.user_edp_cov if r.user_edp_cov is not None else nan
+        ),
+        "shed": r.shed,
+        "admission_deferred": r.admission_deferred,
         "goodput": r.goodput,
         "goodput_per_mj": r.goodput_per_mj,
         "reexec_pct": r.reexec_overhead * 100.0,
@@ -246,6 +276,7 @@ def eval_html_report(results, path: str) -> str:
         with_cp = any(r.cp_speedup is not None for r in res.rows)
         with_vs = any(r.edp_vs_mhra is not None for r in res.rows)
         with_miss = any(r.deadline_total > 0 for r in res.rows)
+        with_fair = any(_row_has_fairness(r) for r in res.rows)
         with_faults = any(r.faulty for r in res.rows)
         nan = float("nan")
 
@@ -264,6 +295,12 @@ def eval_html_report(results, path: str) -> str:
             if with_miss:
                 m = r.deadline_miss_rate
                 out.append(m * 100.0 if m is not None else nan)
+            if with_fair:
+                out += [float(r.users),
+                        r.jain_index if r.jain_index is not None else nan,
+                        r.user_edp_cov
+                        if r.user_edp_cov is not None else nan,
+                        float(r.shed), float(r.admission_deferred)]
             if with_faults:
                 out += [r.goodput, r.goodput_per_mj,
                         r.reexec_overhead * 100.0, float(r.cold_starts),
@@ -283,6 +320,8 @@ def eval_html_report(results, path: str) -> str:
             + ("<th>cp-su</th>" if with_cp else "")
             + ("<th>EDP/mhra</th>" if with_vs else "")
             + ("<th>miss%</th>" if with_miss else "")
+            + ("<th>users</th><th>jain</th><th>EDP-cov</th>"
+               "<th>shed</th><th>adm-d</th>" if with_fair else "")
             + ("<th>goodput</th><th>gp/MJ</th><th>reexec%</th>"
                "<th>cold</th><th>recov s</th>" if with_faults else "")
         )

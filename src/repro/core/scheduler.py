@@ -46,6 +46,7 @@ from repro.core.carbon import CarbonWeights
 from repro.core.clustering import agglomerative_cluster
 from repro.core.dag import LookaheadWeights
 from repro.core.endpoint import EndpointSpec
+from repro.core.fairness import FairnessWeights
 from repro.core.faults import WarmWeights
 from repro.core.predictor import Prediction, TaskProfileStore
 from repro.core.transfer import E_INC_J_PER_BYTE, TransferModel
@@ -776,6 +777,7 @@ def mhra(
     lookahead: LookaheadWeights | None = None,
     alive: Sequence[bool] | None = None,
     warm: WarmWeights | None = None,
+    fairness: FairnessWeights | None = None,
 ) -> Schedule:
     """Multi-Heuristic Resource Allocation. With clusters given, this is
     Cluster MHRA's greedy stage (one decision per cluster).
@@ -799,7 +801,16 @@ def mhra(
     normalized to None (the unmodified hot path).  ``warm`` (a
     :class:`~repro.core.faults.WarmWeights` snapshot) adds a per-endpoint
     expected cold-start penalty as the final term of every candidate
-    score — one extra SoA vector register.
+    score — one extra SoA vector register.  ``fairness`` (a
+    :class:`~repro.core.fairness.FairnessWeights` snapshot) adds the
+    weighted-fair **advantage tax**: each task of an in-debt user is
+    charged ``mu * debt`` times the advantage the candidate offers over
+    the fleet-mean prediction (``relu(mean - predicted)``, energy and
+    runtime terms SF-normalized like the base objective), steering
+    over-budget users off premium endpoints.  All three engines add the
+    same doubles (clone/delta bitwise, SoA one extra vector register
+    whose per-task debt joins the run-memoization key); debt-free tasks
+    — and ``fairness=None`` — leave every float sequence untouched.
     """
     if not heuristics:
         raise ValueError("mhra requires at least one ordering heuristic")
@@ -829,12 +840,14 @@ def mhra(
             f"warm weights cover {len(warm.cold_j)} endpoints but the "
             f"fleet has {len(endpoints)}"
         )
+    if fairness is not None and (not fairness.debt or fairness.mu == 0.0):
+        fairness = None   # no-op snapshot: keep the unmodified hot path
     if engine == "clone":
         if state is not None:
             raise ValueError("engine='clone' does not support live state")
         return _mhra_clone(tasks, endpoints, store, transfer, alpha,
                            heuristics, clusters, carbon, lookahead,
-                           alive, warm)
+                           alive, warm, fairness)
     if engine == "auto":
         if state is not None:
             # online mode: match the live state's layout so no window ever
@@ -857,7 +870,7 @@ def mhra(
     if engine == "soa":
         return _mhra_soa(units, unit_indices, endpoints, table, transfer,
                          alpha, heuristics, sf1, sf2, state, carbon, sf3,
-                         lookahead, alive, warm)
+                         lookahead, alive, warm, fairness)
     soa_live: SoAState | None = None
     if isinstance(state, SoAState):
         # delta engine over a SoA-backed live state: run on a heap view,
@@ -870,7 +883,7 @@ def mhra(
         ordered = _sort_units_fast(units, h, table, unit_indices)
         sched, end_state = _greedy_delta(
             ordered, endpoints, table, transfer, alpha, sf1, sf2, h, state,
-            carbon, sf3, lookahead, alive, warm,
+            carbon, sf3, lookahead, alive, warm, fairness,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -888,7 +901,7 @@ def mhra(
 
 def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
               heuristics, sf1, sf2, state, carbon=None, sf3=1.0,
-              lookahead=None, alive=None, warm=None):
+              lookahead=None, alive=None, warm=None, fairness=None):
     """SoA-engine heuristic search: run :func:`_greedy_soa` per ordering
     heuristic, commit the winner into ``state`` (heap- or SoA-backed)."""
     heap_state: SchedulerState | None = None
@@ -903,6 +916,7 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
         sched, end_state = _greedy_soa(
             ordered, ordered_idx, endpoints, table, transfer, alpha,
             sf1, sf2, h, state, carbon, sf3, lookahead, alive, warm,
+            fairness,
         )
         if best is None or sched.objective < best.objective:
             best, best_state = sched, end_state
@@ -921,6 +935,7 @@ def _greedy_delta(
     carbon: CarbonWeights | None = None, sf3: float = 1.0,
     lookahead: LookaheadWeights | None = None,
     alive: tuple | None = None, warm: WarmWeights | None = None,
+    fairness: FairnessWeights | None = None,
 ) -> tuple[Schedule, SchedulerState]:
     """Delta-evaluation greedy: score each candidate endpoint from the
     *change* it makes (peek the slot heap, delta the idle-span / dynamic
@@ -974,6 +989,15 @@ def _greedy_delta(
     if lw is not None:
         lk_tail, lk_out, lk_hm, lam = lw.tail_w, lw.out_j, lw.hops_mean, lw.lam
     wt = _warm_terms(warm, alpha, sf1, sf2) if warm is not None else None
+    fw = fairness
+    if fw is not None:
+        fdebt = fw.debt
+        f_mu = fw.mu
+        # fleet-mean predictions: the same doubles the clone engine's
+        # per-task np.mean over an endpoint list produces (see
+        # PredictionTable.rt_mean)
+        frt_mean = table.rt_mean.tolist()
+        fen_mean = table.en_mean.tolist()
     idx = table.index
     rt_rows, en_rows = table.rt_rows, table.en_rows
     hops = transfer.hops
@@ -1029,6 +1053,11 @@ def _greedy_delta(
                 u_oj = 0.0
                 for t in unit:
                     u_oj += lk_out.get(t.id, 0.0)
+        if fw is not None:
+            if single:
+                u_fd = fdebt.get(t0.user, 0.0)
+            else:
+                u_fidx = [(idx[t.id], fdebt.get(t.user, 0.0)) for t in unit]
         best_obj = inf
         best = None
         for ei in eps_r:
@@ -1181,6 +1210,31 @@ def _greedy_delta(
                         lk_tail_sum += lk_tail.get(_tid, 0.0) * _e
                 obj = obj + lam * (alpha * (u_oj * lk_hm[ei]) / sf1
                                    + beta * lk_tail_sum / sf2)
+            if fw is not None:
+                # advantage tax: each in-debt task pays mu*debt times the
+                # advantage this endpoint offers over the fleet-mean
+                # prediction.  Same float expression as the clone engine's
+                # loop (and re-grouped elementwise by the SoA register).
+                f_j = 0.0
+                f_s = 0.0
+                if single:
+                    if u_fd != 0.0:
+                        adv_j = fen_mean[ti] - en_rows[ei][ti]
+                        if adv_j > 0.0:
+                            f_j += u_fd * adv_j
+                        adv_s = frt_mean[ti] - rt_rows[ei][ti]
+                        if adv_s > 0.0:
+                            f_s += u_fd * adv_s
+                else:
+                    for tix, d in u_fidx:
+                        if d != 0.0:
+                            adv_j = fen_mean[tix] - row_en[tix]
+                            if adv_j > 0.0:
+                                f_j += d * adv_j
+                            adv_s = frt_mean[tix] - row_rt[tix]
+                            if adv_s > 0.0:
+                                f_s += d * adv_s
+                obj = obj + f_mu * (alpha * f_j / sf1 + beta * f_s / sf2)
             if wt is not None:
                 obj = obj + wt[ei]
             if obj < best_obj:
@@ -1243,6 +1297,7 @@ def _greedy_soa(
     carbon: CarbonWeights | None = None, sf3: float = 1.0,
     lookahead: LookaheadWeights | None = None,
     alive: tuple | None = None, warm: WarmWeights | None = None,
+    fairness: FairnessWeights | None = None,
 ) -> tuple[Schedule, SoAState]:
     """Structure-of-arrays greedy: score a unit against *every* endpoint in
     a fixed handful of vectorized passes instead of a Python loop over
@@ -1366,6 +1421,26 @@ def _greedy_soa(
         wt_v = np.asarray(wt_l)
     else:
         wt_l = wt_v = None
+    # fairness term: one extra vector register per run (the advantage tax
+    # depends only on the run's predictions and the task's user-debt, so
+    # it is constant within a run and the per-task debt joins the memo
+    # key).  The elementwise op sequence mirrors the delta engine's
+    # scalar accumulation — multiplication commutes bitwise, so the
+    # register holds the *same doubles*, not a ~1ulp regroup.
+    if fairness is not None:
+        fdebt = fairness.debt
+        f_mu = fairness.mu
+        f_beta = 1.0 - alpha
+        frt_mean = table.rt_mean
+        fen_mean = table.en_mean
+        fw_v = np.zeros(n_ep)
+        fjv = np.empty(n_ep)
+        fsv = np.empty(n_ep)
+        fbuf = np.empty(n_ep)
+        fw_l = fw_v.tolist()
+        u_fd = 0.0
+    else:
+        fdebt = fw_l = None
     # dead-endpoint mask: applied *after* every term add so masked entries
     # stay +inf across memo hits (the commit/C_max refreshes below only
     # touch live endpoints); the run memo key is untouched — the mask is
@@ -1452,6 +1527,10 @@ def _greedy_soa(
                 u_tw = lk_tail.get(t0.id, 0.0)
                 u_oj = lk_out.get(t0.id, 0.0)
                 key = (t0.fn, t0.inputs, nb0, u_tw, u_oj)
+            if fdebt is not None:
+                # tasks taxed differently must not share a run
+                u_fd = fdebt.get(t0.user, 0.0)
+                key = key + (u_fd,)
             if need_full or key != run_key:
                 memo_misses += 1
                 run_key = key
@@ -1509,6 +1588,28 @@ def _greedy_soa(
                     np.multiply(hm_vec, lk_c2, out=tmp)
                     np.add(lk, tmp, out=lk)
                     np.add(obj, lk, out=obj)
+                if fdebt is not None:
+                    if u_fd != 0.0:
+                        # elementwise the delta scalar loop: debt-scaled
+                        # relu(mean - predicted), alpha/beta-weighted,
+                        # SF-normalized, times mu
+                        np.subtract(fen_mean[ti], run_en, out=fbuf)
+                        np.multiply(fbuf, u_fd, out=fjv)
+                        fjv[fbuf <= 0.0] = 0.0
+                        np.subtract(frt_mean[ti], run_rt, out=fbuf)
+                        np.multiply(fbuf, u_fd, out=fsv)
+                        fsv[fbuf <= 0.0] = 0.0
+                        np.multiply(fjv, alpha, out=fjv)
+                        np.divide(fjv, sf1, out=fjv)
+                        np.multiply(fsv, f_beta, out=fsv)
+                        np.divide(fsv, sf2, out=fsv)
+                        np.add(fjv, fsv, out=fw_v)
+                        np.multiply(fw_v, f_mu, out=fw_v)
+                    else:
+                        # debt-free user: the delta engine still adds the
+                        # (zero) term, so mirror the add exactly
+                        fw_v.fill(0.0)
+                    np.add(obj, fw_v, out=obj)
                 if wt_v is not None:
                     np.add(obj, wt_v, out=obj)
                 if dead_idx is not None:
@@ -1526,6 +1627,8 @@ def _greedy_soa(
                     g_base_l = g_base.tolist()
                 if lk is not None:
                     lk_l = lk.tolist()
+                if fdebt is not None:
+                    fw_l = fw_v.tolist()
                 need_full = False
             else:
                 memo_hits += 1
@@ -1625,6 +1728,10 @@ def _greedy_soa(
                                + g1 * (w_idle_on * c2 + g_base_l[j]))
                     if lk is not None:
                         o_v = o_v + lk_l[j]
+                    if fw_l is not None:
+                        # run-constant: predictions and user-debt don't
+                        # move on commit
+                        o_v = o_v + fw_l[j]
                     if wt_l is not None:
                         o_v = o_v + wt_l[j]
                     obj_l[j] = o_v
@@ -1638,6 +1745,8 @@ def _greedy_soa(
                            + g1 * (w_idle_on * c2 + g_b))
                 if lk is not None:
                     o_v = o_v + lk_e
+                if fw_l is not None:
+                    o_v = o_v + fw_l[ei]
                 if wt_l is not None:
                     o_v = o_v + wt_l[ei]
                 obj_l[ei] = o_v
@@ -1665,6 +1774,7 @@ def _greedy_soa(
             l_e = last[ei]
             d_e = dyn[ei]
             tl_e = 0.0
+            fj_e = fs_e = 0.0
             entries = []
             for t, tix in zip(unit, uidx):
                 s_v = heappop(heap)
@@ -1681,6 +1791,16 @@ def _greedy_soa(
                 d_e = d_e + enT[tix, ei]
                 if lk is not None:
                     tl_e += lk_tail.get(t.id, 0.0) * e_v
+                if fdebt is not None:
+                    # same scalar accumulation as the delta general path
+                    d = fdebt.get(t.user, 0.0)
+                    if d != 0.0:
+                        adv_j = fen_mean[tix] - enT[tix, ei]
+                        if adv_j > 0.0:
+                            fj_e += d * adv_j
+                        adv_s = frt_mean[tix] - rtT[tix, ei]
+                        if adv_s > 0.0:
+                            fs_e += d * adv_s
                 entries.append((t.id, s_v, e_v))
             tjv[ei] = tj_e
             nf[ei] = f_e
@@ -1688,6 +1808,9 @@ def _greedy_soa(
             nd[ei] = d_e
             if lk is not None:
                 lk_tailv[ei] = tl_e
+            if fdebt is not None:
+                fjv[ei] = fj_e
+                fsv[ei] = fs_e
             cand.append((heap, entries, new_keys))
         np.maximum(nl, c_cur, out=c)
         np.subtract(nl, nf, out=tmp)
@@ -1718,6 +1841,14 @@ def _greedy_soa(
             np.multiply(hm_vec, lam * a1 * u_oj, out=tmp)
             np.add(lk, tmp, out=lk)
             np.add(obj, lk, out=obj)
+        if fdebt is not None:
+            np.multiply(fjv, alpha, out=fjv)
+            np.divide(fjv, sf1, out=fjv)
+            np.multiply(fsv, f_beta, out=fsv)
+            np.divide(fsv, sf2, out=fsv)
+            np.add(fjv, fsv, out=fbuf)
+            np.multiply(fbuf, f_mu, out=fbuf)
+            np.add(obj, fbuf, out=obj)
         if wt_v is not None:
             np.add(obj, wt_v, out=obj)
         if dead_idx is not None:
@@ -1791,7 +1922,8 @@ def _greedy_soa(
 
 
 def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
-                carbon=None, lookahead=None, alive=None, warm=None):
+                carbon=None, lookahead=None, alive=None, warm=None,
+                fairness=None):
     per_ep = _predict_all(tasks, endpoints, store)
     if clusters is None:
         units = [[t] for t in tasks]
@@ -1811,7 +1943,7 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
         ordered = _sort_units(units, h, mean_preds)
         sched = _greedy_multi_ep(
             ordered, endpoints, per_ep, transfer, alpha, tasks, h, carbon,
-            lookahead, alive, warm,
+            lookahead, alive, warm, fairness,
         )
         if best is None or sched.objective < best.objective:
             best = sched
@@ -1820,10 +1952,21 @@ def _mhra_clone(tasks, endpoints, store, transfer, alpha, heuristics, clusters,
 
 def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
                      heuristic, carbon=None, lookahead=None, alive=None,
-                     warm=None):
+                     warm=None, fairness=None):
     # SF normalizers from endpoint-specific predictions
     sf1, sf2, sf3 = _normalizers(tasks, endpoints, per_ep, transfer, carbon)
     wt = _warm_terms(warm, alpha, sf1, sf2) if warm is not None else None
+    if fairness is not None:
+        fdebt = fairness.debt
+        # fleet-mean predictions per task; the delta/SoA engines read the
+        # same doubles from PredictionTable.{rt,en}_mean
+        fmean = {
+            t.id: (
+                float(np.mean([per_ep[e.name][t.id].energy_j for e in endpoints])),
+                float(np.mean([per_ep[e.name][t.id].runtime_s for e in endpoints])),
+            )
+            for t in tasks
+        }
 
     state = SchedulerState(endpoints, transfer)
     assignments: dict[str, str] = {}
@@ -1853,6 +1996,25 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
                 obj = obj + lookahead.lam * (
                     alpha * (u_oj * lookahead.hops_mean[ei]) / sf1
                     + (1 - alpha) * lk_tail_sum / sf2
+                )
+            if fairness is not None:
+                # advantage tax (see _greedy_delta: bitwise-identical
+                # accumulation, same term position)
+                f_j = 0.0
+                f_s = 0.0
+                for t in unit:
+                    d = fdebt.get(t.user, 0.0)
+                    if d != 0.0:
+                        p = per_ep[ep.name][t.id]
+                        m_j, m_s = fmean[t.id]
+                        adv_j = m_j - p.energy_j
+                        if adv_j > 0.0:
+                            f_j += d * adv_j
+                        adv_s = m_s - p.runtime_s
+                        if adv_s > 0.0:
+                            f_s += d * adv_s
+                obj = obj + fairness.mu * (
+                    alpha * f_j / sf1 + (1 - alpha) * f_s / sf2
                 )
             if wt is not None:
                 obj = obj + wt[ei]
@@ -1910,6 +2072,7 @@ def cluster_mhra(
     lookahead: LookaheadWeights | None = None,
     alive: Sequence[bool] | None = None,
     warm: WarmWeights | None = None,
+    fairness: FairnessWeights | None = None,
 ) -> Schedule:
     """Algorithm 1: agglomerative clustering + per-cluster greedy MHRA."""
     tasks = list(tasks)
@@ -1935,12 +2098,14 @@ def cluster_mhra(
         )
         return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
                     clusters, engine="clone", carbon=carbon,
-                    lookahead=lookahead, alive=alive, warm=warm)
+                    lookahead=lookahead, alive=alive, warm=warm,
+                    fairness=fairness)
     table = PredictionTable(tasks, endpoints, store)
     clusters = compute_clusters(tasks, endpoints, table, max_cluster_size)
     return mhra(tasks, endpoints, store, transfer, alpha, heuristics,
                 clusters, engine=engine, state=state, carbon=carbon,
-                lookahead=lookahead, alive=alive, warm=warm)
+                lookahead=lookahead, alive=alive, warm=warm,
+                fairness=fairness)
 
 
 # ---------------------------------------------------------------------------

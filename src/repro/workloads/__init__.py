@@ -4,6 +4,8 @@
   processes (seeded, sorted arrival-time arrays).
 - :mod:`repro.workloads.synthetic` — the paper's synthetic EDP workload
   (mixed compute/memory/IO function classes over the Table-I testbed).
+- :mod:`repro.workloads.multiuser` — the multi-tenant variant: Zipf user
+  populations with bursty per-user submission campaigns.
 - :mod:`repro.workloads.moldesign` — the molecular-design DAG workload
   (dock → simulate → train → infer with data dependencies).
 - :mod:`repro.workloads.carbon_traces` — per-endpoint grid
@@ -34,6 +36,7 @@ from repro.workloads.moldesign import (
     moldesign_dag_workload,
     moldesign_endpoints,
 )
+from repro.workloads.multiuser import multiuser_edp_workload, zipf_user_ranks
 from repro.workloads.synthetic import FUNCTION_CLASSES, synthetic_edp_workload
 from repro.workloads.trace import WorkloadTrace, apply_deadline_slack
 from repro.workloads.wfcommons import load_wfcommons, load_wfcommons_sample
@@ -54,9 +57,11 @@ __all__ = [
     "make_arrivals",
     "moldesign_dag_workload",
     "moldesign_endpoints",
+    "multiuser_edp_workload",
     "poisson_arrivals",
     "synthetic_edp_workload",
     "table1_carbon_signal",
     "with_warm_pool",
     "write_carbon_signal",
+    "zipf_user_ranks",
 ]

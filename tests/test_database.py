@@ -60,6 +60,54 @@ def test_reindex_after_mutation():
     assert db.energy_by_endpoint() == {"desktop": 10.0}
 
 
+def test_users_enumeration_sorted():
+    db = TaskDB()
+    for i, u in enumerate(["zoe", "abe", "zoe", "mia"]):
+        db.add(_rec(i, user=u))
+    assert db.users() == ["abe", "mia", "zoe"]
+    assert TaskDB().users() == []
+
+
+def test_per_user_span_and_edp_hand_computed():
+    db = TaskDB()
+    # alice: spans [0, 2] and [5, 7] -> span 7 s, energy 2 + 4 = 6 J
+    db.add(_rec(0, user="alice", energy=2.0))
+    db.add(_rec(5, user="alice", energy=4.0))
+    # bob: one record [3, 5] -> span 2 s, energy 1.5 J
+    db.add(_rec(3, user="bob"))
+    assert db.span_by_user() == {"alice": (0.0, 7.0), "bob": (3.0, 5.0)}
+    edp = db.edp_by_user()
+    assert edp["alice"] == 6.0 * 7.0
+    assert edp["bob"] == 1.5 * 2.0
+
+
+def test_user_stats_fields():
+    db = TaskDB()
+    db.add(_rec(0, user="alice", energy=2.0))
+    db.add(_rec(5, user="alice", energy=4.0))
+    s = db.user_stats()["alice"]
+    assert s == {"energy_j": 6.0, "busy_s": 4.0, "tasks": 2.0,
+                 "span_s": 7.0, "edp": 42.0}
+
+
+def test_user_aggregates_survive_compaction():
+    """Per-user aggregates are cumulative: evicting raw rows under
+    max_records must not change them."""
+    full, capped = TaskDB(), TaskDB(max_records=4)
+    for i in range(20):
+        r = _rec(i, user=f"user{i % 3}", energy=float(i + 1))
+        full.add(r)
+        capped.add(_rec(i, user=f"user{i % 3}", energy=float(i + 1)))
+    assert capped.evicted == 16 and len(capped.records) == 4
+    assert capped.users() == full.users() == ["user0", "user1", "user2"]
+    assert capped.span_by_user() == full.span_by_user()
+    assert capped.edp_by_user() == full.edp_by_user()
+    assert capped.user_stats() == full.user_stats()
+    # reindex is documented as unbounded-only: it forgets evicted rows
+    capped.reindex()
+    assert capped.user_stats() != full.user_stats()
+
+
 def test_jsonl_roundtrip(tmp_path):
     db = TaskDB(tmp_path / "db.jsonl")
     db.extend([_rec(i) for i in range(4)])

@@ -1,0 +1,266 @@
+"""Fairness-layer tests: FairShare validation, the deficit-counter
+ledger's settle/bank/debt semantics, FairnessWeights snapshots, the
+engine's shed/defer admission control, the multiuser workload generator,
+and the fairness=None bitwise-identity guarantee."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.endpoint import table1_testbed
+from repro.core.engine import OnlineEngine
+from repro.core.fairness import FairnessLedger, FairnessWeights, FairShare
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import SEBS_FUNCTIONS, TestbedSim
+from repro.workloads import multiuser_edp_workload, zipf_user_ranks
+
+# ---------------------------------------------------------------------------
+# FairShare / FairnessLedger
+# ---------------------------------------------------------------------------
+
+
+def test_fairshare_validation():
+    with pytest.raises(ValueError, match="budget_j"):
+        FairShare(budget_j=0.0)
+    with pytest.raises(ValueError, match="window_s"):
+        FairShare(budget_j=1.0, window_s=-1.0)
+    with pytest.raises(ValueError, match="mu"):
+        FairShare(budget_j=1.0, mu=-0.5)
+    with pytest.raises(ValueError, match="budget_g"):
+        FairShare(budget_j=1.0, budget_g=0.0)
+    with pytest.raises(ValueError, match="debt_cap"):
+        FairShare(budget_j=1.0, debt_cap=0.0)
+    with pytest.raises(ValueError, match="bank_windows"):
+        FairShare(budget_j=1.0, bank_windows=-1.0)
+    with pytest.raises(ValueError, match="weights"):
+        FairShare(budget_j=1.0, weights={"u": 0.0})
+
+
+def test_ledger_new_users_start_with_full_bank():
+    led = FairShare(budget_j=100.0, window_s=10.0, bank_windows=2.0).ledger()
+    assert led.credit_j("fresh") == 200.0
+    assert led.debt("fresh") == 0.0
+    assert led.users() == ["fresh"]
+
+
+def test_ledger_charge_and_replenish():
+    led = FairShare(budget_j=100.0, window_s=10.0).ledger()
+    led.charge("u", 250.0)          # bank 100 -> -150: 1.5 windows behind
+    assert led.credit_j("u") == -150.0
+    assert led.debt("u") == pytest.approx(1.5)
+    led.advance(10.0)               # one replenish: +100
+    assert led.credit_j("u") == -50.0
+    assert led.debt("u") == pytest.approx(0.5)
+    led.advance(25.0)               # epoch 2: back in credit, bank-capped
+    assert led.credit_j("u") == 50.0
+    assert led.debt("u") == 0.0
+    led.advance(90.0)               # idle epochs cap at the bank
+    assert led.credit_j("u") == 100.0
+
+
+def test_ledger_advance_is_monotone():
+    led = FairShare(budget_j=10.0, window_s=10.0).ledger()
+    assert led.advance(55.0) == 5
+    assert led.advance(20.0) == 5   # stale clock never rolls back
+    assert led.next_replenish(55.0) == 60.0
+    assert led.next_replenish(60.0) == 70.0
+
+
+def test_ledger_debt_is_capped():
+    led = FairShare(budget_j=10.0, window_s=10.0, debt_cap=3.0).ledger()
+    led.charge("u", 1e6)
+    assert led.debt("u") == 3.0
+
+
+def test_ledger_share_weights_scale_budget():
+    led = FairShare(budget_j=100.0, window_s=10.0,
+                    weights={"big": 2.0}).ledger()
+    led.charge("big", 250.0)
+    led.charge("small", 250.0)
+    # big banks 200 and earns 200/window; small banks/earns 100
+    assert led.credit_j("big") == -50.0
+    assert led.debt("big") == pytest.approx(50.0 / 200.0)
+    assert led.debt("small") == pytest.approx(150.0 / 100.0)
+
+
+def test_ledger_carbon_component_adds_to_debt():
+    led = FairShare(budget_j=100.0, window_s=10.0, budget_g=10.0).ledger()
+    assert led.tracks_carbon
+    led.charge("u", 150.0, carbon_g=15.0)
+    # half a window behind on energy + half a window behind on carbon
+    assert led.debt("u") == pytest.approx(0.5 + 0.5)
+
+
+def test_fairness_weights_from_ledger():
+    led = FairShare(budget_j=100.0, window_s=10.0, mu=0.7).ledger()
+    led.charge("hog", 350.0)
+    tasks = [TaskSpec(id="a", fn="graph_bfs", user="hog"),
+             TaskSpec(id="b", fn="graph_bfs", user="saint")]
+    w = FairnessWeights.from_ledger(led, tasks)
+    assert w is not None and w.mu == 0.7
+    assert set(w.debt) == {"hog"}          # debt-free users never appear
+    assert w.debt["hog"] == pytest.approx(2.5)
+    # all submitting users debt-free -> None (hot path untouched)
+    assert FairnessWeights.from_ledger(
+        led, [TaskSpec(id="c", fn="graph_bfs", user="saint")]) is None
+    # mu == 0 -> None even with debt on the books
+    assert FairnessWeights.from_ledger(led, tasks, mu=0.0) is None
+
+
+def test_fairness_weights_validation():
+    with pytest.raises(ValueError, match="mu"):
+        FairnessWeights(debt={"u": 1.0}, mu=-1.0)
+    with pytest.raises(ValueError, match="positive"):
+        FairnessWeights(debt={"u": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# OnlineEngine admission control
+# ---------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    eps = table1_testbed()
+    sim = TestbedSim(eps, seed=0)
+    kw = {"window_s": 30.0, "max_batch": 10**6, "monitoring": False,
+          "alpha": 0.2, "policy": "mhra"} | kw
+    return OnlineEngine(eps, sim, **kw)
+
+
+def _burst(w, user, n):
+    return [TaskSpec(id=f"{user}w{w}t{i}", fn=SEBS_FUNCTIONS[i % 7],
+                     user=user) for i in range(n)]
+
+
+def test_engine_admission_validation():
+    with pytest.raises(ValueError, match="admission"):
+        _engine(fairness=FairShare(budget_j=1.0), admission="bogus")
+    with pytest.raises(ValueError, match="fairness"):
+        _engine(admission="shed")        # admission needs a ledger
+    with pytest.raises(ValueError, match="admission_debt"):
+        _engine(fairness=FairShare(budget_j=1.0), admission="shed",
+                admission_debt=0.0)
+
+
+def test_shed_admission_rejects_over_budget_work():
+    """An over-budget user's later bursts are shed, recorded, and counted
+    in the summary; a debt-free user sails through untouched."""
+    eng = _engine(fairness=FairShare(budget_j=50.0, window_s=30.0, mu=0.0),
+                  admission="shed")
+    for w in range(4):
+        eng.submit_many(_burst(w, "hog", 40) + _burst(w, "saint", 2))
+        eng.tick((w + 1) * 30.0)
+    eng.drain()
+    s = eng.summary()
+    assert s.shed > 0
+    assert len(eng.shed) == s.shed == len(eng.shed_ids)
+    assert all(t.user == "hog" for t in eng.shed)       # saint never shed
+    assert s.goodput == pytest.approx(1.0 - s.shed / (4 * 42))
+    # shed tasks are queryable, not silently dropped
+    assert {t.id for t in eng.shed} == eng.shed_ids
+
+
+def test_defer_admission_delays_but_never_drops():
+    shed_free = FairShare(budget_j=50.0, window_s=30.0, mu=0.0)
+    eng = _engine(fairness=shed_free, admission="defer",
+                  admission_max_defer=4)
+    for w in range(4):
+        eng.submit_many(_burst(w, "hog", 40) + _burst(w, "saint", 2))
+        eng.tick((w + 1) * 30.0)
+    eng.drain()
+    s = eng.summary()
+    assert s.shed == 0
+    assert s.admission_deferred > 0
+    assert s.goodput == 1.0                 # latency traded, tasks kept
+    assert s.tasks == 4 * 42
+
+
+def test_admission_defer_cap_prevents_starvation():
+    """A permanently over-budget user is admitted after
+    admission_max_defer deferrals rather than parked forever."""
+    eng = _engine(fairness=FairShare(budget_j=1.0, window_s=30.0, mu=0.0),
+                  admission="defer", admission_max_defer=2)
+    for w in range(6):
+        eng.submit_many(_burst(w, "hog", 30))
+        eng.tick((w + 1) * 30.0)
+    eng.drain()
+    s = eng.summary()
+    assert s.goodput == 1.0
+    assert s.tasks == 6 * 30
+
+
+def test_ledger_charges_follow_execution():
+    eng = _engine(fairness=FairShare(budget_j=1e-3, window_s=1e6, mu=0.0))
+    eng.submit_many(_burst(0, "hog", 10))
+    eng.tick(30.0)
+    eng.drain()
+    led = eng.fairness
+    assert isinstance(led, FairnessLedger)
+    assert led.credit_j("hog") < 0.0        # real joules were billed
+    assert led.debt("hog") > 0.0
+
+
+def test_fairness_none_is_bitwise_identity():
+    """fairness=None leaves every engine summary and placement exactly as
+    the seed engine produced them (scheduling_s is wall-clock and the
+    only legitimately varying field)."""
+    def run(**kw):
+        eng = _engine(**kw)
+        asg = {}
+        for w in range(3):
+            eng.submit_many(_burst(w, "u", 50))
+            res = eng.flush()
+            asg.update(res.assignments)
+        eng.drain()
+        d = dataclasses.asdict(eng.summary())
+        d.pop("scheduling_s")
+        return asg, d
+    base = run()
+    plain = run(fairness=None)
+    assert base == plain
+
+
+# ---------------------------------------------------------------------------
+# multiuser workload generator
+# ---------------------------------------------------------------------------
+
+
+def test_zipf_user_ranks_range_and_determinism():
+    r1 = zipf_user_ranks(500, 1000, 1.3, np.random.default_rng(7))
+    r2 = zipf_user_ranks(500, 1000, 1.3, np.random.default_rng(7))
+    assert np.array_equal(r1, r2)
+    assert r1.min() >= 1 and r1.max() <= 1000
+    # Zipf head: rank 1 dominates
+    assert (r1 == 1).sum() > (r1 == 2).sum() > 0
+    with pytest.raises(ValueError, match="zipf_s"):
+        zipf_user_ranks(10, 100, 1.0, np.random.default_rng(0))
+
+
+def test_multiuser_workload_shape_and_determinism():
+    t1 = multiuser_edp_workload(n_tasks=200, n_users=10_000, seed=5)
+    t2 = multiuser_edp_workload(n_tasks=200, n_users=10_000, seed=5)
+    assert [t.id for t in t1.tasks] == [t.id for t in t2.tasks]
+    assert [t.user for t in t1.tasks] == [t.user for t in t2.tasks]
+    assert np.array_equal(t1.arrivals, t2.arrivals)
+    assert len(t1.tasks) == 200
+    assert np.all(np.diff(t1.arrivals) >= 0.0)      # sorted submission order
+    users = {t.user for t in t1.tasks}
+    assert t1.meta["users_active"] == len(users)
+    assert 0.0 < t1.meta["top_user_share"] <= 1.0
+    assert t1.meta["users_universe"] == 10_000
+    # a 1M universe costs nothing: only active users materialize
+    big = multiuser_edp_workload(n_tasks=64, n_users=1_000_000, seed=5)
+    assert big.meta["users_active"] <= 64
+
+
+def test_multiuser_workload_validation():
+    with pytest.raises(ValueError, match="n_tasks"):
+        multiuser_edp_workload(n_tasks=0)
+    with pytest.raises(ValueError, match="n_users"):
+        multiuser_edp_workload(n_tasks=10, n_users=1)
+    with pytest.raises(ValueError, match="class_mix"):
+        multiuser_edp_workload(n_tasks=10, class_mix=(1.0, -0.1, 0.1))
+    with pytest.raises(ValueError, match="campaign_span_s"):
+        multiuser_edp_workload(n_tasks=10, campaign_span_s=-1.0)
+    with pytest.raises(ValueError, match="home"):
+        multiuser_edp_workload(n_tasks=10, home="nonsense")

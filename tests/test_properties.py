@@ -1,0 +1,206 @@
+"""Property-based engine-parity suite (hypothesis-driven when the
+optional [test] extra is installed; each property skips cleanly
+otherwise via tests/_hypothesis_compat).
+
+The three greedy engines are parity-locked by contract: clone <-> delta
+mirror the same float sequence bitwise, delta <-> soa agree on every
+assignment with objectives inside rtol=1e-12.  The example-based suites
+(test_scheduler / test_soa_engine) pin that contract on the paper's
+fleets; these properties fuzz it over random fleets, random profile
+tables, random batches, and every optional scoring register — fairness
+debts, carbon rates, warm-pool penalties, and the alive mask — toggled
+independently, because historically it is the *interaction* of registers
+that breaks mirrored float sequences, not any register alone.
+
+Fleet-size caps are load-bearing: the clone engine computes fleet means
+with ``np.mean`` over a Python list while delta/soa read SoA-table rows,
+and numpy's pairwise summation only matches sequential summation
+bitwise below 8 addends — so clone-comparing properties draw fleets of
+2-7 endpoints.  delta <-> soa parity carries no such caveat and is
+fuzzed on fleets up to 12.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.carbon import CarbonWeights
+from repro.core.endpoint import scaled_testbed
+from repro.core.fairness import FairnessWeights
+from repro.core.faults import WarmWeights
+from repro.core.predictor import TaskProfileStore
+from repro.core.scheduler import TaskSpec, cluster_mhra, mhra
+from repro.core.testbed import SEBS_FUNCTIONS
+from repro.core.transfer import TransferModel
+
+PARITY_RTOL = 1e-12
+USERS = ("alice", "bob", "carol", "dan", "eve")
+
+
+def _fleet(rng, n_eps, n_tasks, io_share):
+    """Random fleet slice + random profile table + random batch.
+
+    Endpoints come from ``scaled_testbed`` (3 replicas = 12 endpoints)
+    so transfer paths and per-endpoint power models are realistic;
+    profiles are freshly drawn per property example, so the greedy
+    cost surface is different every run.
+    """
+    eps = scaled_testbed(3)[:n_eps]
+    store = TaskProfileStore(eps)
+    for fn in SEBS_FUNCTIONS:
+        for ep in eps:
+            rt = float(rng.uniform(0.5, 30.0))
+            e = rt * float(rng.uniform(5.0, 200.0))
+            for _ in range(2):
+                store.record(fn, ep.name, rt, e)
+    inputs = ((eps[0].name, 1, 150e6, True),)
+    tasks = [
+        TaskSpec(
+            id=f"t{i}",
+            fn=SEBS_FUNCTIONS[int(rng.integers(len(SEBS_FUNCTIONS)))],
+            inputs=inputs if rng.random() < io_share else (),
+            user=USERS[int(rng.integers(len(USERS)))],
+        )
+        for i in range(n_tasks)
+    ]
+    return tasks, eps, store, TransferModel(eps)
+
+
+def _registers(rng, n_eps, with_fair, with_carbon, with_warm, with_alive):
+    """Independent random scoring registers for one property example."""
+    fairness = carbon = warm = alive = None
+    if with_fair:
+        n_debt = int(rng.integers(1, len(USERS) + 1))
+        debtors = rng.choice(len(USERS), size=n_debt, replace=False)
+        fairness = FairnessWeights(
+            debt={USERS[i]: float(rng.uniform(0.1, 8.0)) for i in debtors},
+            mu=float(rng.uniform(0.05, 2.0)),
+        )
+    if with_carbon:
+        carbon = CarbonWeights(
+            rates=tuple(float(rng.uniform(0.0, 1e-3)) for _ in range(n_eps)),
+            gamma=float(rng.uniform(0.1, 2.0)),
+        )
+    if with_warm:
+        warm = WarmWeights(
+            cold_j=tuple(float(rng.uniform(0.0, 50.0)) for _ in range(n_eps)),
+            cold_s=tuple(float(rng.uniform(0.0, 5.0)) for _ in range(n_eps)),
+        )
+    if with_alive:
+        mask = rng.random(n_eps) < 0.7
+        mask[int(rng.integers(n_eps))] = True   # never kill the whole fleet
+        alive = tuple(bool(b) for b in mask)
+    return fairness, carbon, warm, alive
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_eps=st.integers(2, 7),
+    n_tasks=st.integers(1, 48),
+    alpha=st.sampled_from([0.0, 0.2, 0.5, 0.8, 1.0]),
+    with_fair=st.booleans(),
+    with_carbon=st.booleans(),
+    with_warm=st.booleans(),
+    with_alive=st.booleans(),
+)
+def test_clone_delta_bitwise_parity(seed, n_eps, n_tasks, alpha, with_fair,
+                                    with_carbon, with_warm, with_alive):
+    """clone and delta walk the same float sequence: same assignments,
+    bitwise-equal objective/energy/makespan, any register combination."""
+    rng = np.random.default_rng(seed)
+    tasks, eps, store, tm = _fleet(rng, n_eps, n_tasks, io_share=0.3)
+    regs = _registers(rng, n_eps, with_fair, with_carbon, with_warm,
+                      with_alive)
+    fairness, carbon, warm, alive = regs
+    a = mhra(tasks, eps, store, tm, alpha=alpha, engine="clone",
+             carbon=carbon, alive=alive, warm=warm, fairness=fairness)
+    b = mhra(tasks, eps, store, tm, alpha=alpha, engine="delta",
+             carbon=carbon, alive=alive, warm=warm, fairness=fairness)
+    assert a.assignments == b.assignments
+    assert a.objective == b.objective          # bitwise, not approx
+    assert a.energy_j == b.energy_j
+    assert a.makespan_s == b.makespan_s
+    assert a.heuristic == b.heuristic
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_eps=st.integers(2, 12),
+    n_tasks=st.integers(1, 64),
+    alpha=st.sampled_from([0.0, 0.2, 0.5, 0.8, 1.0]),
+    with_fair=st.booleans(),
+    with_carbon=st.booleans(),
+    with_warm=st.booleans(),
+    with_alive=st.booleans(),
+)
+def test_delta_soa_assignment_parity(seed, n_eps, n_tasks, alpha, with_fair,
+                                     with_carbon, with_warm, with_alive):
+    """soa reproduces delta's assignments exactly (objectives to
+    rtol=1e-12) on fleets past the clone engine's pairwise-summation
+    cap, any register combination."""
+    rng = np.random.default_rng(seed)
+    tasks, eps, store, tm = _fleet(rng, n_eps, n_tasks, io_share=0.3)
+    regs = _registers(rng, n_eps, with_fair, with_carbon, with_warm,
+                      with_alive)
+    fairness, carbon, warm, alive = regs
+    a = mhra(tasks, eps, store, tm, alpha=alpha, engine="delta",
+             carbon=carbon, alive=alive, warm=warm, fairness=fairness)
+    b = mhra(tasks, eps, store, tm, alpha=alpha, engine="soa",
+             carbon=carbon, alive=alive, warm=warm, fairness=fairness)
+    assert a.assignments == b.assignments
+    assert a.objective == pytest.approx(b.objective, rel=PARITY_RTOL)
+    assert a.energy_j == pytest.approx(b.energy_j, rel=PARITY_RTOL)
+    assert a.makespan_s == pytest.approx(b.makespan_s, rel=PARITY_RTOL)
+    assert a.heuristic == b.heuristic
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_eps=st.integers(2, 7),
+    n_tasks=st.integers(1, 48),
+    with_fair=st.booleans(),
+    with_alive=st.booleans(),
+)
+def test_cluster_mhra_three_engine_parity(seed, n_eps, n_tasks, with_fair,
+                                          with_alive):
+    """Algorithm 1's per-cluster greedy inherits the same parity lock:
+    all three engines agree through the clustering layer too."""
+    rng = np.random.default_rng(seed)
+    tasks, eps, store, tm = _fleet(rng, n_eps, n_tasks, io_share=0.3)
+    fairness, _, _, alive = _registers(rng, n_eps, with_fair, False, False,
+                                       with_alive)
+    runs = {
+        engine: cluster_mhra(tasks, eps, store, tm, alpha=0.5,
+                             max_cluster_size=16, engine=engine,
+                             alive=alive, fairness=fairness)
+        for engine in ("clone", "delta", "soa")
+    }
+    assert runs["clone"].assignments == runs["delta"].assignments
+    assert runs["delta"].assignments == runs["soa"].assignments
+    assert runs["clone"].objective == runs["delta"].objective
+    assert runs["delta"].objective == pytest.approx(
+        runs["soa"].objective, rel=PARITY_RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_eps=st.integers(2, 10),
+    n_tasks=st.integers(1, 48),
+)
+def test_zero_debt_fairness_is_identity(seed, n_eps, n_tasks):
+    """A fairness register whose debts never match a submitting user is
+    bitwise-invisible: same assignments and objective as no register at
+    all, on both mirrored engines."""
+    rng = np.random.default_rng(seed)
+    tasks, eps, store, tm = _fleet(rng, n_eps, n_tasks, io_share=0.3)
+    ghost = FairnessWeights(debt={"nobody-submits-this": 3.0}, mu=1.5)
+    for engine in ("delta", "soa"):
+        bare = mhra(tasks, eps, store, tm, alpha=0.5, engine=engine)
+        taxed = mhra(tasks, eps, store, tm, alpha=0.5, engine=engine,
+                     fairness=ghost)
+        assert bare.assignments == taxed.assignments
+        assert bare.objective == taxed.objective
+        assert bare.energy_j == taxed.energy_j

@@ -149,6 +149,67 @@ def test_eval_html_report_escapes_and_well_formed(tmp_path):
     assert "site:a&amp;b" in html
 
 
+def test_eval_report_fairness_columns_conditional(tmp_path):
+    """users / jain / EDP-cov / shed / adm-d columns appear exactly when
+    some row carries fairness annotations, and render the golden values."""
+    plain = _eval_result()
+    txt = eval_text_report(plain)
+    for col in ("jain", "EDP-cov", "shed", "adm-d"):
+        assert col not in txt, col
+
+    annotated = _eval_result()
+    base, fair = annotated.rows
+    base.users = 12
+    fair.users = 12
+    fair.jain_index = 0.875
+    fair.user_edp_cov = 0.321
+    fair.shed = 7
+    fair.admission_deferred = 3
+    txt = eval_text_report(annotated)
+    for col in ("users", "jain", "EDP-cov", "shed", "adm-d"):
+        assert col in txt, col
+    mhra_line = next(l for l in txt.splitlines() if l.startswith("mhra"))
+    assert "0.875" in mhra_line
+    assert "0.321" in mhra_line
+    assert "     7" in mhra_line and "     3" in mhra_line
+    # the un-annotated baseline renders nan, not garbage, in jain/cov
+    base_line = next(l for l in txt.splitlines() if l.startswith("site"))
+    assert "nan" in base_line
+
+    html = eval_html_report(annotated, tmp_path / "eval.html")
+    assert_well_formed(html)
+    for col in ("users", "jain", "EDP-cov", "shed", "adm-d"):
+        assert f"<th>{col}</th>" in html, col
+
+
+def test_text_report_user_section_and_hostile_user_text():
+    """The per-user section renders for any user= arg; text output is not
+    HTML so hostile names pass through verbatim (escaping is the HTML
+    renderer's job, pinned below)."""
+    db = TaskDB()
+    db.add(TaskRecord("t0", "fn_x", "ep_a", 1, 0.0, 4.0,
+                      energy_j=10.0, node_energy_j=20.0,
+                      user="<img src=x>"))
+    txt = text_report(db, user="<img src=x>")
+    assert "user <img src=x>:" in txt
+
+
+def test_eval_html_report_fairness_escapes_hostile_policy_label(tmp_path):
+    """Fairness rows are labelled by user-controlled policy strings
+    (label= passthrough); the HTML renderer must escape them even with
+    the fairness columns active."""
+    res = _eval_result()
+    res.rows[1].policy = "fair<script>alert(1)</script>"
+    res.rows[1].jain_index = 0.9
+    res.rows[1].user_edp_cov = 0.1
+    res.rows[1].shed = 2
+    html = eval_html_report(res, tmp_path / "eval.html")
+    assert_well_formed(html)
+    assert "<script>" not in html
+    assert "fair&lt;script&gt;" in html
+    assert "<th>jain</th>" in html
+
+
 def test_eval_report_dag_deadline_columns_conditional(tmp_path):
     """cp-su / EDP-vs-mhra / miss% columns appear exactly when rows carry
     the annotations."""
