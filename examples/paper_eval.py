@@ -43,12 +43,22 @@ best single site:
    drops nothing (goodput 1.0); delta/soa stay assignment-identical
    with the fairness register + admission armed.
 
+6. **Geo-distributed scenario** (``--geo``): the synthetic mix streamed
+   at a three-region federation (per-region carbon grids, measured-style
+   WAN links, caller locality), replayed under the A/B/C protocol —
+   fixed region (A) vs caller region (B) vs the carbon/WAN-aware agent
+   (C) on the *same* trace.  Gates: the agent emits *strictly less* gCO2
+   than both baselines at an EDP no worse than either, with makespan
+   inside ``GEO_MAKESPAN_BAND``; a single all-endpoint region is a
+   bitwise no-op vs ``regions=None``; delta/soa stay
+   assignment-identical with the region layer armed.
+
 Results are persisted to ``BENCH_eval.json`` and rendered to
 ``reports/eval.html`` via ``repro.core.report``.  Runnable bare from the
 repo root (no PYTHONPATH needed):
 
     python examples/paper_eval.py                # medium sizes
-    python examples/paper_eval.py --tiny --carbon --faults --multiuser
+    python examples/paper_eval.py --tiny --carbon --faults --multiuser --geo
     python examples/paper_eval.py --full --carbon --faults  # paper sizes
 """
 from __future__ import annotations
@@ -68,11 +78,13 @@ from repro.core.evaluate import (
     EvalResult, evaluate_trace, gpsup, run_policy, verify_dag_order,
 )
 from repro.core.faults import FaultTrace
+from repro.core.region import RegionRouter, RegionSpec
 from repro.core.report import eval_html_report, eval_text_report, write_bench_json
 from repro.core.fairness import FairShare
 from repro.workloads import (
     add_failover,
     churn_fault_trace,
+    geo_edp_workload,
     moldesign_dag_workload,
     multiuser_edp_workload,
     synthetic_edp_workload,
@@ -129,6 +141,14 @@ MU_WINDOW_S = 30.0          # ledger replenish window
 MU_MU = 0.5                 # advantage-tax strength on over-budget users
 MU_EDP_BAND = 1.05          # fair row's global EDP <= band x plain MHRA
 
+# geo scenario (--geo): the A/B/C protocol replays one trace under three
+# router modes; the agent must win on carbon without losing the race.
+# The geo workload streams at moderate load by default, so makespan is
+# arrival-dominated and near-identical across modes — the band only has
+# to absorb tail-task placement jitter.
+GEO_SIZES = {"tiny": 56, "medium": 448, "full": 1792}
+GEO_MAKESPAN_BAND = 1.05    # agent makespan <= band x best baseline's
+
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -140,6 +160,8 @@ def main(argv=None) -> dict:
                     help="run the chaos scenario (churn/goodput/reexec gates)")
     ap.add_argument("--multiuser", action="store_true",
                     help="run the multi-tenant scenario (fairness gates)")
+    ap.add_argument("--geo", action="store_true",
+                    help="run the geo-distributed scenario (A/B/C gates)")
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_eval.json")
@@ -483,6 +505,103 @@ def main(argv=None) -> dict:
             "multiuser_edp_band": edp_band,
             "multiuser_shed": fair.shed,
             "multiuser_deferred": defer.admission_deferred,
+        })
+
+    # --- 6. geo-distributed scenario (--geo) --------------------------
+    if args.geo:
+        geo = geo_edp_workload(n_tasks=GEO_SIZES[size], seed=args.seed)
+        specs = geo.meta["region_specs"]
+        gsig = geo.meta["carbon_signal"]
+
+        def geo_run(mode, engine="delta"):
+            # fresh router per run: modes share zero routing state, only
+            # the trace objects (the A/B/C contract)
+            router = RegionRouter(specs, mode=mode, home=specs[0].name)
+            return run_policy(geo, "mhra", engine=engine, alpha=args.alpha,
+                              seed=args.seed, carbon=gsig, regions=router,
+                              label=f"geo_{mode}")
+
+        fixed = geo_run("fixed")      # A: everything to the home region
+        caller = geo_run("caller")    # B: everything to the caller's region
+        agnt = geo_run("agent")       # C: carbon + WAN + congestion score
+        for r in (caller, agnt):
+            g, s_, u = gpsup(fixed.energy_j, fixed.makespan_s,
+                             r.energy_j, r.makespan_s)
+            r.greenup, r.speedup, r.powerup = g, s_, u
+        geo_res = EvalResult(
+            workload=geo.name, n_tasks=len(geo), alpha=args.alpha,
+            rows=[fixed, caller, agnt], baseline="geo_fixed",
+        )
+        print()
+        print(eval_text_report(geo_res))
+        g_vs_fixed = agnt.carbon_g / fixed.carbon_g
+        g_vs_caller = agnt.carbon_g / caller.carbon_g
+        edp_vs_fixed = agnt.edp / fixed.edp
+        edp_vs_caller = agnt.edp / caller.edp
+        mk_best = min(fixed.makespan_s, caller.makespan_s)
+        mk_band = agnt.makespan_s / mk_best
+        print(f"\ngeo A/B/C ({len(specs)} regions): agent gCO2 "
+              f"{agnt.carbon_g:.3f} vs fixed {fixed.carbon_g:.3f} "
+              f"({g_vs_fixed:.3f}x) / caller {caller.carbon_g:.3f} "
+              f"({g_vs_caller:.3f}x); EDP {edp_vs_fixed:.3f}x fixed, "
+              f"{edp_vs_caller:.3f}x caller; makespan {mk_band:.3f}x best "
+              f"baseline (band {GEO_MAKESPAN_BAND:.2f}x); WAN "
+              f"{agnt.wan_j / 1e3:.3f} kJ, egress "
+              f"{agnt.egress_bytes / 1e9:.3f} GB")
+        assert agnt.carbon_g < fixed.carbon_g, (
+            f"agent gCO2 {agnt.carbon_g:.3f} not strictly below "
+            f"fixed-region baseline {fixed.carbon_g:.3f}"
+        )
+        assert agnt.carbon_g < caller.carbon_g, (
+            f"agent gCO2 {agnt.carbon_g:.3f} not strictly below "
+            f"caller-region baseline {caller.carbon_g:.3f}"
+        )
+        assert agnt.edp <= fixed.edp and agnt.edp <= caller.edp, (
+            f"agent EDP {agnt.edp:.3e} worse than a baseline "
+            f"(fixed {fixed.edp:.3e}, caller {caller.edp:.3e})"
+        )
+        assert mk_band <= GEO_MAKESPAN_BAND, (
+            f"agent makespan {agnt.makespan_s:.1f}s exceeds "
+            f"{GEO_MAKESPAN_BAND:.2f}x best baseline {mk_best:.1f}s"
+        )
+        # gate: a single all-endpoint region is a bitwise no-op — the
+        # router's mask collapses to None and every engine path is
+        # untouched (no WAN, no egress, identical placements + energy)
+        solo = [RegionSpec("global",
+                           tuple(e.name for e in geo.endpoints))]
+        base = run_policy(geo, "mhra", engine="delta", alpha=args.alpha,
+                          seed=args.seed, carbon=gsig)
+        noop = run_policy(geo, "mhra", engine="delta", alpha=args.alpha,
+                          seed=args.seed, carbon=gsig, regions=solo)
+        assert noop.assignments == base.assignments, (
+            "single-region layer changed placements"
+        )
+        assert noop.energy_j == base.energy_j, (
+            f"single-region layer changed energy: {noop.energy_j!r} vs "
+            f"{base.energy_j!r}"
+        )
+        assert noop.wan_j == 0.0 and noop.egress_bytes == 0.0
+        print("geo no-op gate: single-region fleet bitwise-identical to "
+              "regions=None (zero WAN joules)")
+        # engine parity must survive the region mask + WAN delays
+        agnt_soa = geo_run("agent", engine="soa")
+        assert agnt.assignments == agnt_soa.assignments, (
+            "delta and soa engines diverged under the region layer"
+        )
+        print(f"geo engine parity: delta/soa agree on all "
+              f"{len(agnt.assignments)} assignments")
+        results.append(geo_res)
+        extra.update({
+            "geo_regions": len(specs),
+            "geo_gco2_vs_fixed": g_vs_fixed,
+            "geo_gco2_vs_caller": g_vs_caller,
+            "geo_edp_vs_fixed": edp_vs_fixed,
+            "geo_edp_vs_caller": edp_vs_caller,
+            "geo_makespan_band": mk_band,
+            "geo_engine_parity": True,
+            "geo_single_region_noop": True,
+            "geo_wan_kj_agent": agnt.wan_j / 1e3,
+            "geo_egress_gb_agent": agnt.egress_bytes / 1e9,
         })
 
     # --- persist + render ---------------------------------------------

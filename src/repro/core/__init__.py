@@ -9,6 +9,7 @@ dispatch -> monitor -> attribute -> learn) as composable pieces.
 """
 from repro.core.engine import EngineSummary, OnlineEngine, WindowResult
 from repro.core.executor import BatchResult, GreenFaaSExecutor
+from repro.core.region import RegionRouter, RegionSpec
 from repro.core.policy import (
     PlacementPolicy,
     PolicyContext,
@@ -35,6 +36,8 @@ __all__ = [
     "OnlineEngine",
     "PlacementPolicy",
     "PolicyContext",
+    "RegionRouter",
+    "RegionSpec",
     "Schedule",
     "SchedulerState",
     "TaskSpec",

@@ -151,6 +151,13 @@ class CarbonIntensitySignal:
     schedulers and the evaluation harness never handle regions directly.
     """
 
+    #: Relative forecast-noise width this signal was built with (see
+    #: :meth:`with_forecast_noise`).  0 for ground-truth signals.
+    #: Decision layers use it to discount the signal — e.g. the online
+    #: engine widens its deferral margin by ``defer_sigma_k * sigma`` so
+    #: noisy forecasts defer less aggressively.
+    forecast_sigma: float = 0.0
+
     def __init__(self, traces: Mapping[str, CarbonTrace],
                  regions: Mapping[str, str] | None = None):
         if not traces:
@@ -293,7 +300,10 @@ class CarbonIntensitySignal:
         signal — the gap between signal-at-decision and signal-at-billing
         is exactly the forecast error.  ``sigma=0`` returns ``self``
         unchanged; traces are perturbed in sorted-name order, so the same
-        ``(sigma, seed)`` always yields the same forecast."""
+        ``(sigma, seed)`` always yields the same forecast.  The returned
+        signal records ``sigma`` in :attr:`forecast_sigma` so consumers
+        can hedge against their own uncertainty (the engine's deferral
+        margin widens with it)."""
         if sigma < 0:
             raise ValueError(f"sigma must be non-negative, got {sigma}")
         if sigma == 0.0:
@@ -308,7 +318,9 @@ class CarbonIntensitySignal:
             traces[name] = CarbonTrace(
                 t.times.copy(), np.maximum(noisy, 1.0), t.period_s
             )
-        return CarbonIntensitySignal(traces, regions=self.regions)
+        out = CarbonIntensitySignal(traces, regions=self.regions)
+        out.forecast_sigma = sigma
+        return out
 
     # -- persistence ---------------------------------------------------------
     def to_payload(self) -> dict:

@@ -37,11 +37,14 @@ from repro.core.faults import FaultTrace, WarmWeights
 from repro.core.policy import PlacementPolicy, PolicyContext, get_policy
 from repro.core.power_model import LinearPowerModel
 from repro.core.predictor import TaskProfileStore
+from repro.core.region import (
+    RegionRouter, RegionSpec, task_payload_bytes, task_shared_inputs,
+)
 from repro.core.scheduler import (
     Schedule, SchedulerState, SoAState, TaskSpec, auto_engine,
 )
 from repro.core.testbed import SimResult, TestbedSim
-from repro.core.transfer import TransferModel
+from repro.core.transfer import TransferModel, TransferRequest
 
 
 @dataclasses.dataclass
@@ -93,6 +96,10 @@ class EngineSummary:
     # --- multi-tenant fairness (zero without fairness/admission) ---
     shed: int = 0            # over-budget tasks rejected by admission control
     admission_deferred: int = 0  # tasks delayed to a budget replenish
+    # --- geo-distributed routing (zero without a region layer) ---
+    regions: int = 0         # regions in the router (0 = no region layer)
+    wan_j: float = 0.0       # WAN transfer energy billed to cross-region routes
+    egress_bytes: float = 0.0    # bytes that crossed a region boundary
 
 
 class OnlineEngine:
@@ -174,6 +181,8 @@ class OnlineEngine:
         admission: str | None = None,
         admission_debt: float = 1.0,
         admission_max_defer: int = 8,
+        regions: Sequence[RegionSpec] | RegionRouter | None = None,
+        defer_sigma_k: float = 1.0,
     ):
         """``engine`` selects the scheduling backend for registry-name
         mhra/cluster_mhra/carbon_mhra policies ("delta" or "soa") and the
@@ -251,7 +260,34 @@ class OnlineEngine:
         ``"defer"``-red to the next budget replenish, at most
         ``admission_max_defer`` times before it is admitted anyway (no
         starvation).  ``fairness=None`` (the default) keeps every
-        placement bitwise-identical to a single-tenant engine."""
+        placement bitwise-identical to a single-tenant engine.
+
+        ``regions`` (a list of :class:`~repro.core.region.RegionSpec` or
+        a pre-built :class:`~repro.core.region.RegionRouter`) arms the
+        **geo-distributed region layer**: at each window, every task is
+        first routed to a destination region (fixed / caller / agent
+        mode — see the router docs), cross-region routes bill WAN
+        transfer joules and raise the task's ``not_before`` by the WAN
+        delay, and each region's group is then placed by the ordinary
+        endpoint-level policy with the fleet narrowed to that region's
+        endpoints via the alive mask.  Shared datasets cross the WAN
+        once per destination region (cached, like the endpoint transfer
+        model).  Every engine endpoint must belong to exactly one
+        region.  ``regions=None`` — and a single region covering the
+        whole fleet — keep every placement bitwise-identical to a
+        region-free engine: the membership mask collapses to ``None``
+        and no WAN event can fire, so clone/delta/soa parity is
+        untouched.  A router built without its own carbon signal adopts
+        the engine's ``carbon`` (the *decision* view; WAN grams are
+        billed against the true signal by the evaluation harness).
+
+        ``defer_sigma_k`` hedges temporal shifting against forecast
+        error: the deferral margin becomes ``defer_margin +
+        defer_sigma_k * carbon.forecast_sigma`` (capped at 1), so a
+        noisy forecast must promise a proportionally deeper trough
+        before the engine parks work for it.  Ground-truth signals
+        (``forecast_sigma == 0``) leave the margin — and every
+        deferral decision — exactly as before."""
         self.endpoints = list(endpoints)
         self.backend = backend
         if promotion not in ("epoch", "exact"):
@@ -317,9 +353,51 @@ class OnlineEngine:
         self.carbon = carbon
         if defer_horizon_s > 0.0 and carbon is None:
             raise ValueError("defer_horizon_s needs a carbon signal")
+        if defer_sigma_k < 0.0:
+            raise ValueError(
+                f"defer_sigma_k must be non-negative, got {defer_sigma_k}"
+            )
         self.defer_horizon_s = defer_horizon_s
         self.defer_max = defer_max
         self.defer_margin = defer_margin
+        self.defer_sigma_k = defer_sigma_k
+        if regions is None:
+            self.router: RegionRouter | None = None
+        else:
+            router = (regions if isinstance(regions, RegionRouter)
+                      else RegionRouter(regions))
+            ep_names = {e.name for e in self.endpoints}
+            assigned = set(router._region_of_ep)
+            missing = sorted(ep_names - assigned)
+            unknown = sorted(assigned - ep_names)
+            if missing:
+                raise ValueError(
+                    f"endpoints in no region: {missing}; every engine "
+                    f"endpoint must belong to exactly one region"
+                )
+            if unknown:
+                raise ValueError(
+                    f"regions list endpoints the engine does not have: "
+                    f"{unknown}"
+                )
+            if router.carbon is None:
+                router.carbon = carbon
+            self.router = router
+        by_name = {e.name: e for e in self.endpoints}
+        self._region_capacity = (
+            {
+                r.name: float(r.capacity or
+                              sum(by_name[m].cores for m in r.endpoints))
+                for r in self.router.regions.values()
+            }
+            if self.router is not None else {}
+        )
+        self.wan_j = 0.0
+        self.egress_bytes = 0.0
+        #: (t, src_region, dst_region, bytes, joules) per cross-region route
+        self.wan_events: list[tuple[float, str, str, float, float]] = []
+        self.region_tasks: dict[str, int] = {}
+        self._wan_cached: set[tuple[str, float, str]] = set()
         self.deferred: list[tuple[float, int, TaskSpec]] = []  # release heap
         self._deferred_ids: set[str] = set()         # defer-once guard
         self._defer_seq = itertools.count()
@@ -492,7 +570,10 @@ class OnlineEngine:
         """Park deadline-slack tasks for a cleaner-grid window; returns the
         tasks to place *now*.  No-op unless the exact fleet-mean intensity
         minimum within the horizon undercuts the current intensity by
-        ``defer_margin`` and the bounded queue has room."""
+        ``defer_margin`` and the bounded queue has room.  The margin
+        widens with the signal's ``forecast_sigma`` (scaled by
+        ``defer_sigma_k``): a noisy forecast's trough must look
+        proportionally deeper before work is parked on its word."""
         if self.defer_max - len(self.deferred) <= 0:
             return tasks     # queue full: skip the signal scans entirely
         names = [e.name for e in self.endpoints]
@@ -500,7 +581,11 @@ class OnlineEngine:
         t_best, best = self.carbon.argmin_fleet_mean(
             names, now, now + self.defer_horizon_s
         )
-        if t_best <= now or best > (1.0 - self.defer_margin) * cur:
+        margin = self.defer_margin
+        sigma = getattr(self.carbon, "forecast_sigma", 0.0)
+        if sigma > 0.0 and self.defer_sigma_k > 0.0:
+            margin = min(margin + self.defer_sigma_k * sigma, 1.0)
+        if t_best <= now or best > (1.0 - margin) * cur:
             return tasks
         keep: list[TaskSpec] = []
         room = self.defer_max - len(self.deferred)
@@ -520,6 +605,146 @@ class OnlineEngine:
             self._deferred_ids.add(t.id)
             room -= 1
         return keep
+
+    # ------------------------------------------------------------------
+    # geo-distributed region layer (router above the endpoint fleet)
+    def _region_backlog(self, now: float) -> dict[str, float]:
+        """Per-region congestion input: mean committed backlog seconds —
+        how far each member endpoint's timeline extends past ``now``."""
+        if isinstance(self.state, SoAState):
+            last = {e.name: float(self.state.last[i])
+                    for i, e in enumerate(self.endpoints)}
+        else:
+            last = self.state.last_end
+        out = {}
+        for r in self.router.names:
+            members = self.router.regions[r].endpoints
+            out[r] = sum(
+                max(0.0, last.get(m, 0.0) - now) for m in members
+            ) / len(members)
+        return out
+
+    def _region_energy_est(self, fn: str, region: str) -> float:
+        """Region-mean predicted dynamic energy for ``fn`` (J) — the
+        agent router's compute-cost term."""
+        members = self.router.regions[region].endpoints
+        preds = [self.store.predict(fn, m) for m in members]
+        return sum(p.energy_j for p in preds) / len(preds)
+
+    def _region_transfer_est(self, task: TaskSpec, region: str) -> float:
+        """Endpoint-level transfer joules if ``task``'s inputs stage into
+        ``region`` (hop-based, against a representative member endpoint,
+        shared-dataset cache respected).  Without this term the router
+        would see only the thin WAN energy and happily strand an IO
+        task's dataset a dozen router hops from its compute."""
+        if not task.inputs:
+            return 0.0
+        rep = self.router.regions[region].endpoints[0]
+        total = 0.0
+        for (src, n, b, shared) in task.inputs:
+            total += self.transfer.energy_j(
+                TransferRequest(src, rep, n, b, shared)
+            )
+        return total
+
+    def _route_window(self, tasks: list[TaskSpec], now: float
+                      ) -> list[tuple[str, list[TaskSpec]]]:
+        """Route one window's tasks to destination regions, billing WAN
+        energy/egress and raising cross-region tasks' ``not_before`` by
+        the WAN delay.  Returns ``(region, tasks)`` groups in router
+        order, submission order preserved within each group.  Shared
+        datasets bill the WAN once per destination region (cached);
+        private inputs and the invocation payload bill every time."""
+        router = self.router
+        agent = router.mode == "agent"
+        backlog = self._region_backlog(now) if agent else None
+        routed_n = dict.fromkeys(router.names, 0)
+        e_cache: dict[str, dict[str, float]] = {}
+        groups: dict[str, list[TaskSpec]] = {r: [] for r in router.names}
+        for t in tasks:
+            payload = task_payload_bytes(t)
+            shared = task_shared_inputs(t)
+            energy = congestion = None
+            if agent:
+                compute = e_cache.get(t.fn)
+                if compute is None:
+                    compute = e_cache[t.fn] = {
+                        r: self._region_energy_est(t.fn, r)
+                        for r in router.names
+                    }
+                energy = (
+                    compute if not t.inputs else {
+                        r: compute[r] + self._region_transfer_est(t, r)
+                        for r in router.names
+                    }
+                )
+                congestion = {
+                    r: backlog[r] / router.rt_scale
+                    + routed_n[r] / self._region_capacity[r]
+                    for r in router.names
+                }
+            nbytes = payload + sum(b for _, b in shared)
+            src, dst = router.route(t.user, nbytes, now,
+                                    energy=energy, congestion=congestion)
+            routed_n[dst] += 1
+            if src != dst:
+                bill = payload
+                for key, b in shared:
+                    ck = (key, b, dst)
+                    if ck not in self._wan_cached:
+                        self._wan_cached.add(ck)
+                        bill += b
+                j = router.regions[src].wan_joules(dst, bill)
+                delay = router.regions[src].wan_delay_s(dst, bill)
+                self.wan_j += j
+                self.egress_bytes += bill
+                self.wan_events.append((now, src, dst, bill, j))
+                if delay > 0.0:
+                    t = dataclasses.replace(
+                        t, not_before=max(t.not_before, now + delay)
+                    )
+            self.region_tasks[dst] = self.region_tasks.get(dst, 0) + 1
+            groups[dst].append(t)
+        return [(r, groups[r]) for r in router.names if groups[r]]
+
+    def _place_regions(
+        self, tasks: list[TaskSpec], ctx: PolicyContext, now: float,
+        alive: tuple[bool, ...] | None,
+    ) -> tuple[list[TaskSpec], Schedule]:
+        """Region-partitioned placement: route every task, then run the
+        endpoint-level policy once per non-empty region with the fleet
+        narrowed to that region's members through the alive mask.  One
+        region covering the whole fleet degenerates to the exact
+        unpartitioned call — the membership mask collapses to ``None``
+        and the single group preserves task order — so placements stay
+        bitwise-identical to a region-free engine.  Returns the (possibly
+        WAN-delayed) tasks in placement order and the merged schedule
+        (cumulative objective/energy/makespan from the final group's
+        state metrics, assignments/timeline for this window's tasks)."""
+        groups = self._route_window(tasks, now)
+        routed: list[TaskSpec] = []
+        merged_asg: dict[str, str] = {}
+        merged_tl: dict[str, tuple[float, float]] = {}
+        schedule = None
+        for region, gtasks in groups:
+            gmask = self.router.endpoint_mask(region, self.endpoints)
+            if gmask is not None and alive is not None:
+                both = tuple(m and a for m, a in zip(gmask, alive))
+                # whole region dark: fall back to the fault mask alone
+                gmask = both if any(both) else alive
+            elif gmask is None:
+                gmask = alive
+            gctx = (ctx if gmask is ctx.alive
+                    else dataclasses.replace(ctx, alive=gmask))
+            schedule = self.policy.place(gtasks, gctx, state=self.state)
+            for t in gtasks:
+                merged_asg[t.id] = schedule.assignments[t.id]
+                merged_tl[t.id] = schedule.timeline[t.id]
+            routed.extend(gtasks)
+        schedule = dataclasses.replace(
+            schedule, assignments=merged_asg, timeline=merged_tl
+        )
+        return routed, schedule
 
     # ------------------------------------------------------------------
     def flush(self) -> WindowResult | None:
@@ -585,7 +810,12 @@ class OnlineEngine:
         # placement previews must not start tasks before this window opened
         self.state.advance_to(submitted_at)
         t0 = time.perf_counter()
-        schedule = self.policy.place(tasks, ctx, state=self.state)
+        if self.router is None:
+            schedule = self.policy.place(tasks, ctx, state=self.state)
+        else:
+            tasks, schedule = self._place_regions(
+                tasks, ctx, submitted_at, alive
+            )
         sched_s = time.perf_counter() - t0
         assignments = {t.id: schedule.assignments[t.id] for t in tasks}
 
@@ -879,4 +1109,7 @@ class OnlineEngine:
             ),
             shed=len(self.shed_ids),
             admission_deferred=len(self._adm_defer),
+            regions=len(self.router.names) if self.router is not None else 0,
+            wan_j=self.wan_j,
+            egress_bytes=self.egress_bytes,
         )

@@ -177,6 +177,17 @@ _EVAL_FAIR_COLS = (
     ("adm-d", "{admission_deferred:>6d}", ">6"),
 )
 
+# appended when any row ran under a multi-region router (the --geo
+# evaluation):
+# rgn       — regions in the router (0 rows never show these columns)
+# WAN kJ    — WAN transfer energy billed to cross-region routes
+# egress GB — bytes that crossed a region boundary
+_EVAL_GEO_COLS = (
+    ("rgn", "{regions:>5d}", ">5"),
+    ("WAN kJ", "{wan_kj:>9.3f}", ">9"),
+    ("egress GB", "{egress_gb:>11.3f}", ">11"),
+)
+
 # appended when any row ran under a fault trace (chaos evaluations):
 # goodput  — completed / submitted task ids (1.0 = nothing lost)
 # gp/MJ    — goodput per megajoule, the chaos headline metric
@@ -204,6 +215,8 @@ def _eval_cols(result) -> tuple:
         cols = cols + _EVAL_MISS_COL
     if any(_row_has_fairness(r) for r in result.rows):
         cols = cols + _EVAL_FAIR_COLS
+    if any(r.regions > 0 for r in result.rows):
+        cols = cols + _EVAL_GEO_COLS
     if any(r.faulty for r in result.rows):
         cols = cols + _EVAL_FAULT_COLS
     return cols
@@ -237,6 +250,9 @@ def _eval_row_values(r) -> dict:
         ),
         "shed": r.shed,
         "admission_deferred": r.admission_deferred,
+        "regions": r.regions,
+        "wan_kj": r.wan_j / 1e3,
+        "egress_gb": r.egress_bytes / 1e9,
         "goodput": r.goodput,
         "goodput_per_mj": r.goodput_per_mj,
         "reexec_pct": r.reexec_overhead * 100.0,
@@ -277,6 +293,7 @@ def eval_html_report(results, path: str) -> str:
         with_vs = any(r.edp_vs_mhra is not None for r in res.rows)
         with_miss = any(r.deadline_total > 0 for r in res.rows)
         with_fair = any(_row_has_fairness(r) for r in res.rows)
+        with_geo = any(r.regions > 0 for r in res.rows)
         with_faults = any(r.faulty for r in res.rows)
         nan = float("nan")
 
@@ -301,6 +318,9 @@ def eval_html_report(results, path: str) -> str:
                         r.user_edp_cov
                         if r.user_edp_cov is not None else nan,
                         float(r.shed), float(r.admission_deferred)]
+            if with_geo:
+                out += [float(r.regions), r.wan_j / 1e3,
+                        r.egress_bytes / 1e9]
             if with_faults:
                 out += [r.goodput, r.goodput_per_mj,
                         r.reexec_overhead * 100.0, float(r.cold_starts),
@@ -322,6 +342,8 @@ def eval_html_report(results, path: str) -> str:
             + ("<th>miss%</th>" if with_miss else "")
             + ("<th>users</th><th>jain</th><th>EDP-cov</th>"
                "<th>shed</th><th>adm-d</th>" if with_fair else "")
+            + ("<th>rgn</th><th>WAN (kJ)</th><th>egress (GB)</th>"
+               if with_geo else "")
             + ("<th>goodput</th><th>gp/MJ</th><th>reexec%</th>"
                "<th>cold</th><th>recov s</th>" if with_faults else "")
         )

@@ -6,6 +6,9 @@
   (mixed compute/memory/IO function classes over the Table-I testbed).
 - :mod:`repro.workloads.multiuser` — the multi-tenant variant: Zipf user
   populations with bursty per-user submission campaigns.
+- :mod:`repro.workloads.geo` — the geo-distributed variant: per-region
+  fleets, WAN links, regional carbon grids, and caller locality (the
+  A/B/C routing evaluation's input).
 - :mod:`repro.workloads.moldesign` — the molecular-design DAG workload
   (dock → simulate → train → infer with data dependencies).
 - :mod:`repro.workloads.carbon_traces` — per-endpoint grid
@@ -31,6 +34,13 @@ from repro.workloads.carbon_traces import (
     write_carbon_signal,
 )
 from repro.workloads.faults import add_failover, churn_fault_trace, with_warm_pool
+from repro.workloads.geo import (
+    GEO_REGIONS,
+    geo_carbon_signal,
+    geo_edp_workload,
+    geo_region_specs,
+    geo_testbed,
+)
 from repro.workloads.moldesign import (
     MOLDESIGN_DAG_PROFILES,
     moldesign_dag_workload,
@@ -44,6 +54,7 @@ from repro.workloads.wfcommons import load_wfcommons, load_wfcommons_sample
 __all__ = [
     "ARRIVAL_PROCESSES",
     "FUNCTION_CLASSES",
+    "GEO_REGIONS",
     "MOLDESIGN_DAG_PROFILES",
     "WorkloadTrace",
     "add_failover",
@@ -51,6 +62,10 @@ __all__ = [
     "bursty_arrivals",
     "churn_fault_trace",
     "diurnal_arrivals",
+    "geo_carbon_signal",
+    "geo_edp_workload",
+    "geo_region_specs",
+    "geo_testbed",
     "load_carbon_signal",
     "load_wfcommons",
     "load_wfcommons_sample",

@@ -468,6 +468,48 @@ def test_forecast_noise_seeded_and_validated():
         sig.with_forecast_noise(-0.1)
 
 
+def test_deferral_margin_widens_with_forecast_sigma():
+    # shallow cliff: 400 -> 300 (25% drop) clears the default 5% margin
+    # but not a sigma-widened one
+    sig = _cliff_signal(high=400.0, low=300.0)
+    eng = _engine(sig, defer_horizon_s=100.0)
+    eng.submit(TaskSpec(id="t0", fn="graph_bfs"), when=0.0)
+    assert eng.flush() is None and len(eng.deferred) == 1
+    eng.drain()
+
+    noisy = _cliff_signal(high=400.0, low=300.0)
+    noisy.forecast_sigma = 0.5      # margin 0.05 + 1.0 * 0.5 = 0.55
+    eng2 = _engine(noisy, defer_horizon_s=100.0)
+    eng2.submit(TaskSpec(id="t0", fn="graph_bfs"), when=0.0)
+    w = eng2.flush()
+    assert w is not None and len(w.tasks) == 1 and not eng2.deferred
+
+    # defer_sigma_k=0 switches the hedge off: sigma is ignored and the
+    # original margin expression decides — bitwise-inert knob
+    eng3 = _engine(noisy, defer_horizon_s=100.0, defer_sigma_k=0.0)
+    eng3.submit(TaskSpec(id="t0", fn="graph_bfs"), when=0.0)
+    assert eng3.flush() is None and len(eng3.deferred) == 1
+    eng3.drain()
+
+    with pytest.raises(ValueError, match="defer_sigma_k"):
+        _engine(sig, defer_horizon_s=100.0, defer_sigma_k=-1.0)
+
+
+def test_noisy_forecasts_defer_less_aggressively():
+    """End to end: the same cliff that parks work under a trusted
+    forecast parks none once the forecast's sigma widens the margin
+    past the cliff's depth."""
+    trace = synthetic_edp_workload(n_tasks=24, seed=0)
+    sig = _cliff_signal()
+    clean = run_policy(trace, "carbon_mhra", carbon=sig,
+                       defer_horizon_s=100.0)
+    assert clean.deferred > 0
+    noisy = run_policy(trace, "carbon_mhra", carbon=sig,
+                       carbon_forecast=sig.with_forecast_noise(1.0, seed=7),
+                       defer_horizon_s=100.0)
+    assert noisy.deferred < clean.deferred
+
+
 def test_deferral_gains_shrink_with_forecast_noise():
     """The deferral queue trusts the *forecast*; billing integrates the
     true signal.  With a perfect forecast deferral cuts gCO2; with a wild

@@ -1,0 +1,299 @@
+"""Region layer: spec/link hand-checks, router scoring + tie-breaks,
+the endpoint-mask collapse, single-region bitwise inertness on all three
+engines, multi-region delta/soa parity, and caller-locality WAN billing
+(exact joules, per-destination shared cache, not_before delays)."""
+import dataclasses
+
+import pytest
+
+from repro.core import scheduler as sched
+from repro.core.carbon import CarbonIntensitySignal, CarbonTrace
+from repro.core.engine import OnlineEngine
+from repro.core.evaluate import run_policy, warm_store
+from repro.core.region import (
+    DEFAULT_WAN_BW_BPS,
+    DEFAULT_WAN_J_PER_BYTE,
+    DEFAULT_WAN_LATENCY_S,
+    INVOKE_BYTES,
+    RegionRouter,
+    RegionSpec,
+    task_payload_bytes,
+    task_shared_inputs,
+)
+from repro.core.scheduler import TaskSpec
+from repro.core.testbed import TestbedSim
+from repro.core.transfer import TransferModel
+from repro.workloads import geo_edp_workload, synthetic_edp_workload
+
+
+# ---------------------------------------------------------------------------
+# RegionSpec: validation + the WAN link model
+# ---------------------------------------------------------------------------
+
+def test_region_spec_validation():
+    with pytest.raises(ValueError, match="no endpoints"):
+        RegionSpec("r", ())
+    with pytest.raises(ValueError, match="duplicate endpoints"):
+        RegionSpec("r", ("a", "a"))
+    with pytest.raises(ValueError, match="capacity"):
+        RegionSpec("r", ("a",), capacity=-1)
+    with pytest.raises(ValueError, match="wan_bw_bps"):
+        RegionSpec("r", ("a",), wan_bw_bps={"s": 0.0})
+    with pytest.raises(ValueError, match="wan_latency_s"):
+        RegionSpec("r", ("a",), wan_latency_s={"s": -0.1})
+
+
+def test_wan_link_model_hand_computed():
+    r = RegionSpec("r", ("a",), wan_bw_bps={"s": 1e6},
+                   wan_latency_s={"s": 0.5}, wan_j_per_byte={"s": 2e-7})
+    # same-region transfers are free by construction
+    assert r.wan_delay_s("r", 1e9) == 0.0
+    assert r.wan_joules("r", 1e9) == 0.0
+    # explicit link: latency + serialization, bytes x J/B
+    assert r.wan_delay_s("s", 2e6) == pytest.approx(0.5 + 2.0)
+    assert r.wan_joules("s", 2e6) == pytest.approx(0.4)
+    # unlisted pair: module defaults
+    assert r.wan_delay_s("t", 1.25e9) == pytest.approx(
+        DEFAULT_WAN_LATENCY_S + 1.25e9 / DEFAULT_WAN_BW_BPS)
+    assert r.wan_joules("t", 1e6) == pytest.approx(
+        1e6 * DEFAULT_WAN_J_PER_BYTE)
+
+
+def test_task_payload_helpers():
+    t = TaskSpec(id="t", fn="f", inputs=(
+        ("home", 1, 1e6, False),
+        ("home", 4, 5e6, True),
+    ))
+    # invocation payload + private bytes; shared datasets billed apart
+    assert task_payload_bytes(t) == pytest.approx(INVOKE_BYTES + 1e6)
+    assert task_shared_inputs(t) == [("home", 5e6)]
+    bare = TaskSpec(id="b", fn="f")
+    assert task_payload_bytes(bare) == pytest.approx(INVOKE_BYTES)
+    assert task_shared_inputs(bare) == []
+
+
+# ---------------------------------------------------------------------------
+# RegionRouter: construction, modes, scoring
+# ---------------------------------------------------------------------------
+
+def _two_regions():
+    ra = RegionSpec("ra", ("a1", "a2"), callers=("alice",))
+    rb = RegionSpec("rb", ("b1",), callers=("bob",))
+    return ra, rb
+
+
+def test_router_validation():
+    ra, rb = _two_regions()
+    with pytest.raises(ValueError, match="at least one region"):
+        RegionRouter([])
+    with pytest.raises(ValueError, match="duplicate region"):
+        RegionRouter([ra, dataclasses.replace(ra, endpoints=("x",))])
+    with pytest.raises(ValueError, match="in both"):
+        RegionRouter([ra, RegionSpec("rc", ("a1",))])
+    with pytest.raises(ValueError, match="homed in both"):
+        RegionRouter([ra, RegionSpec("rc", ("c1",), callers=("alice",))])
+    with pytest.raises(ValueError, match="unknown router mode"):
+        RegionRouter([ra, rb], mode="nearest")
+    with pytest.raises(ValueError, match="home region"):
+        RegionRouter([ra, rb], home="nowhere")
+    with pytest.raises(ValueError, match="beta_queue"):
+        RegionRouter([ra, rb], beta_queue=-1.0)
+    with pytest.raises(ValueError, match="rt_scale"):
+        RegionRouter([ra, rb], rt_scale=0.0)
+
+
+def test_fixed_and_caller_modes_route_by_locality():
+    ra, rb = _two_regions()
+    fixed = RegionRouter([ra, rb], mode="fixed", home="rb")
+    assert fixed.route("alice", 1e6, 0.0) == ("ra", "rb")
+    assert fixed.route("bob", 1e6, 0.0) == ("rb", "rb")
+    # unlisted callers are homed in the router's home region
+    assert fixed.route("nobody", 1e6, 0.0) == ("rb", "rb")
+    caller = RegionRouter([ra, rb], mode="caller")
+    assert caller.route("alice", 1e6, 0.0) == ("ra", "ra")
+    assert caller.route("bob", 1e6, 0.0) == ("rb", "rb")
+    assert caller.region_of("b1") == "rb"
+    with pytest.raises(KeyError):
+        caller.region_of("nope")
+
+
+def test_agent_score_hand_computed():
+    ra = RegionSpec("ra", ("a1",), wan_j_per_byte={"rb": 2e-7},
+                    callers=("alice",))
+    rb = RegionSpec("rb", ("b1",))
+    # flat 360 g/kWh = 1e-4 g/J in ra, 3.6e-4 g/J in rb
+    sig = CarbonIntensitySignal({
+        "ra": CarbonTrace([0.0, 10.0], [360.0, 360.0]),
+        "rb": CarbonTrace([0.0, 10.0], [1080.0, 1080.0]),
+    })
+    r = RegionRouter([ra, rb], mode="agent", carbon=sig, beta_queue=2.0)
+    # local: no WAN term; remote: bytes x J/B rides the compute estimate
+    assert r.score("ra", "ra", 1e6, 50.0, 0.0) == pytest.approx(50.0 * 1e-4)
+    assert r.score("ra", "rb", 1e6, 50.0, 0.0) == pytest.approx(
+        (50.0 + 0.2) * 3e-4)
+    # congestion inflates multiplicatively through beta_queue
+    assert r.score("ra", "ra", 1e6, 50.0, 0.0, congestion=0.5) == (
+        pytest.approx(50.0 * 1e-4 * 2.0))
+    # dirty-but-idle rb loses to clean ra on these numbers
+    src, dst = r.route("alice", 1e6, 0.0,
+                       energy={"ra": 50.0, "rb": 50.0})
+    assert (src, dst) == ("ra", "ra")
+    # ...until local congestion makes the WAN hop worth it
+    src, dst = r.route("alice", 1e6, 0.0,
+                       energy={"ra": 50.0, "rb": 50.0},
+                       congestion={"ra": 2.0, "rb": 0.0})
+    assert (src, dst) == ("ra", "rb")
+
+
+def test_agent_tie_break_first_region_wins():
+    ra, rb = _two_regions()
+    # no carbon signal, equal energy, no congestion: all scores equal,
+    # the strict-< scan keeps the first region in construction order
+    r = RegionRouter([ra, rb], mode="agent")
+    assert r.route("bob", 0.0, 0.0, energy={"ra": 1.0, "rb": 1.0}) == (
+        "rb", "ra")
+    rev = RegionRouter([rb, ra], mode="agent")
+    assert rev.route("bob", 0.0, 0.0, energy={"ra": 1.0, "rb": 1.0}) == (
+        "rb", "rb")
+
+
+def test_endpoint_mask_collapses_when_fleet_covered():
+    ra, rb = _two_regions()
+    r = RegionRouter([ra, rb])
+    eps = ["a1", "a2", "b1"]
+    assert r.endpoint_mask("ra", eps) == (True, True, False)
+    assert r.endpoint_mask("rb", eps) == (False, False, True)
+    # one region covering the whole fleet: mask collapses to None — the
+    # engines' "no mask" fast path, bitwise inertness by construction
+    solo = RegionRouter([RegionSpec("all", ("a1", "a2", "b1"))])
+    assert solo.endpoint_mask("all", eps) is None
+
+
+# ---------------------------------------------------------------------------
+# Single-region bitwise inertness on all three engines
+# ---------------------------------------------------------------------------
+
+def test_single_region_noop_delta_and_soa():
+    trace = synthetic_edp_workload(n_tasks=32, seed=0)
+    solo = [RegionSpec("global", tuple(e.name for e in trace.endpoints))]
+    for engine in ("delta", "soa"):
+        base = run_policy(trace, "mhra", engine=engine, seed=0)
+        noop = run_policy(trace, "mhra", engine=engine, seed=0,
+                          regions=solo)
+        assert noop.assignments == base.assignments
+        assert noop.energy_j == base.energy_j
+        assert noop.makespan_s == base.makespan_s
+        assert noop.wan_j == 0.0 and noop.egress_bytes == 0.0
+        assert noop.regions == 1 and base.regions == 0
+
+
+def test_single_region_noop_clone_engine():
+    trace = synthetic_edp_workload(n_tasks=24, seed=0)
+    sim = TestbedSim(trace.endpoints, profiles=trace.profiles,
+                     signatures=trace.signatures, seed=0)
+    store = warm_store(sim, trace)
+    transfer = TransferModel(trace.endpoints)
+    solo = RegionRouter(
+        [RegionSpec("global", tuple(e.name for e in trace.endpoints))]
+    )
+    mask = solo.endpoint_mask("global", trace.endpoints)
+    assert mask is None
+    base = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                      engine="clone")
+    again = sched.mhra(trace.tasks, trace.endpoints, store, transfer, 0.5,
+                       engine="clone", alive=mask)
+    assert base.assignments == again.assignments
+    assert base.objective == again.objective
+
+
+def test_multi_region_delta_soa_parity():
+    geo = geo_edp_workload(n_tasks=48, seed=0)
+    specs = geo.meta["region_specs"]
+    sig = geo.meta["carbon_signal"]
+    for mode in ("caller", "agent"):
+        runs = {}
+        for engine in ("delta", "soa"):
+            router = RegionRouter(specs, mode=mode, home=specs[0].name)
+            runs[engine] = run_policy(geo, "mhra", engine=engine, seed=0,
+                                      carbon=sig, regions=router)
+        assert runs["delta"].assignments == runs["soa"].assignments, mode
+        assert runs["delta"].regions == len(specs)
+
+
+# ---------------------------------------------------------------------------
+# Caller-locality WAN billing through the engine
+# ---------------------------------------------------------------------------
+
+def _micro_engine(mode="fixed", home="rb"):
+    eps = synthetic_edp_workload(n_tasks=1).endpoints
+    ra = RegionSpec("ra", ("desktop", "theta"), callers=("alice",),
+                    wan_bw_bps={"rb": 1e6}, wan_latency_s={"rb": 0.5},
+                    wan_j_per_byte={"rb": 2e-7})
+    rb = RegionSpec("rb", ("ic", "faster"), callers=("bob",))
+    router = RegionRouter([ra, rb], mode=mode, home=home)
+    eng = OnlineEngine(eps, None, window_s=5.0, max_batch=512,
+                       regions=router)
+    return eng
+
+
+def test_engine_validates_region_fleet_coverage():
+    eps = synthetic_edp_workload(n_tasks=1).endpoints
+    with pytest.raises(ValueError, match="desktop"):
+        OnlineEngine(eps, None, regions=[
+            RegionSpec("r", ("theta", "ic", "faster"))])
+    with pytest.raises(ValueError, match="ghost"):
+        OnlineEngine(eps, None, regions=[
+            RegionSpec("r", ("desktop", "theta", "ic", "faster", "ghost"))])
+
+
+def test_cross_region_wan_billing_hand_computed():
+    eng = _micro_engine()     # fixed mode, home=rb: alice's work crosses
+    inputs = (("desktop", 1, 1e6, False), ("desktop", 2, 5e6, True))
+    eng.submit(TaskSpec(id="t0", fn="graph_bfs", user="alice",
+                        inputs=inputs), when=0.0)
+    w = eng.flush()
+    assert w is not None and len(w.tasks) == 1
+    # first crossing bills payload + private + the shared dataset
+    bill0 = INVOKE_BYTES + 1e6 + 5e6
+    assert eng.egress_bytes == pytest.approx(bill0)
+    assert eng.wan_j == pytest.approx(bill0 * 2e-7)
+    assert eng.wan_events == [
+        (0.0, "ra", "rb", pytest.approx(bill0), pytest.approx(bill0 * 2e-7))
+    ]
+    # the WAN delay pushes the task past link latency + serialization
+    (t0,) = w.tasks
+    assert t0.not_before == pytest.approx(0.5 + bill0 / 1e6)
+    assert w.schedule.timeline["t0"][0] >= t0.not_before - 1e-9
+    assert w.schedule.assignments["t0"] in ("ic", "faster")
+
+    # same shared dataset again: cached per destination region — only
+    # the invocation payload + private bytes cross the WAN
+    eng.submit(TaskSpec(id="t1", fn="graph_bfs", user="alice",
+                        inputs=inputs), when=10.0)
+    eng.flush()
+    bill1 = INVOKE_BYTES + 1e6
+    assert eng.egress_bytes == pytest.approx(bill0 + bill1)
+    assert eng.wan_j == pytest.approx((bill0 + bill1) * 2e-7)
+
+    # a caller homed in the destination region never touches the WAN
+    eng.submit(TaskSpec(id="t2", fn="graph_bfs", user="bob",
+                        inputs=inputs), when=20.0)
+    w2 = eng.flush()
+    assert eng.egress_bytes == pytest.approx(bill0 + bill1)
+    assert len(eng.wan_events) == 2
+    (t2,) = w2.tasks
+    assert t2.not_before == 0.0
+    assert eng.summary().wan_j == pytest.approx(eng.wan_j)
+    assert eng.summary().regions == 2
+    assert eng.region_tasks == {"rb": 3}
+
+
+def test_caller_mode_keeps_work_local_and_wan_free():
+    eng = _micro_engine(mode="caller")
+    inputs = (("desktop", 1, 1e6, False),)
+    eng.submit(TaskSpec(id="t0", fn="graph_bfs", user="alice",
+                        inputs=inputs), when=0.0)
+    w = eng.flush()
+    assert eng.wan_j == 0.0 and eng.egress_bytes == 0.0
+    assert w.schedule.assignments["t0"] in ("desktop", "theta")
+    assert eng.region_tasks == {"ra": 1}
