@@ -7,9 +7,12 @@ Three sections, all emitted into ``BENCH_scheduler.json``:
   table, now with three engine columns).
 * **scaling** — MHRA task-count sweep 1792 -> 100k on federated fleets
   that grow with the workload (4 -> 32 endpoints, heterogeneous replicas
-  via ``scaled_testbed``), delta vs soa, with clone at the smallest size
-  for reference.  Every row cross-checks engine parity: identical
-  assignments, objectives equal to ``rtol=1e-12`` (bitwise in practice).
+  via ``scaled_testbed``), delta vs soa vs jax (the fused ``lax.scan``
+  engine, warm: one untimed call per cell absorbs the XLA compile, which
+  is reported separately as ``compile_s``), with clone at the smallest
+  size for reference.  Every row cross-checks engine parity: identical
+  assignments, objectives equal to ``rtol=1e-12`` (bitwise in practice;
+  jax==soa is asserted bitwise on its own flag).
 * **attribution** — windowed attribution throughput (tasks/s) of the
   vectorized matrix pipeline vs the legacy per-task sample-object loop.
 * **wide_dag** — a barrier-style DAG campaign (stages of equal-width
@@ -22,9 +25,11 @@ Three sections, all emitted into ``BENCH_scheduler.json``:
   come from ``scheduler.MEMO_STATS``.
 
 Acceptance: soa >= 3x faster than delta at >= 16k tasks; delta remains
-bitwise-identical to the seed clone engine; on the wide-DAG campaign at
->= 32k tasks, soa under epoch promotion is >= 2x faster than delta
-(placement time) and assignment-identical to it.
+bitwise-identical to the seed clone engine; warm jax is strictly faster
+than soa at the 32k-task / 32-endpoint cell (the large-fleet regime the
+fused scan exists for); on the wide-DAG campaign at >= 32k tasks, soa
+under epoch promotion is >= 2x faster than delta (placement time) and
+assignment-identical to it.
 
 CLI::
 
@@ -57,6 +62,11 @@ from repro.core.scheduler import (
 )
 from repro.core.testbed import BASE_PROFILES, SEBS_FUNCTIONS, TestbedSim
 from repro.core.transfer import TransferModel
+
+try:  # the fused-scan engine needs jax; rows degrade gracefully without
+    from repro.kernels.placement import ops as placement_ops
+except Exception:  # pragma: no cover - jax-less environments
+    placement_ops = None
 
 # (n_tasks, testbed replicas): the fleet grows with the workload, the way
 # a federation serving more users runs more sites
@@ -158,6 +168,7 @@ def run_scaling(sweep=SCALING_SWEEP, repeats=2, clone_max=1792):
     rows = []
     parity_ok = True
     objectives_bitwise = True
+    jax_bitwise = True
     auto_ok = True
     for n, mult in sweep:
         eps = scaled_testbed(mult)
@@ -165,19 +176,28 @@ def run_scaling(sweep=SCALING_SWEEP, repeats=2, clone_max=1792):
         tm = TransferModel(eps)
         tasks = _tasks(n, src=eps[0].name)
         engines = (["delta", "soa", "auto"]
+                   + (["jax"] if placement_ops is not None else [])
                    + (["clone"] if n <= clone_max else []))
+        # jax is benchmarked warm: one untimed call absorbs the per-shape
+        # XLA compile (reported separately) and also warms the cache the
+        # auto rounds hit when they resolve to jax at large cells
+        compile_s = 0.0
+        if "jax" in engines:
+            c0 = placement_ops.COMPILE_STATS["seconds"]
+            mhra(tasks, eps, store, tm, alpha=0.5, engine="jax")
+            compile_s = placement_ops.COMPILE_STATS["seconds"] - c0
         # the auto gate compares engines at the 5% level, tighter than
         # back-to-back timing noise on a shared box — so repeats are
         # interleaved round-robin in snake order (monotone load drift
         # within a cell doesn't systematically favor earlier engines)
-        # and soa/auto, the two sides of the gate, get two extra rounds;
-        # reported time is the min over rounds per engine
+        # and soa/jax/auto, the sides of the speed gates, get two extra
+        # rounds; reported time is the min over rounds per engine
         base = repeats if n <= 16384 else 1
         scheds, samples = {}, {e: [] for e in engines}
         for r in range(base + 2):
             order = engines if r % 2 == 0 else list(reversed(engines))
             for engine in order:
-                if r >= base and engine not in ("soa", "auto"):
+                if r >= base and engine not in ("soa", "jax", "auto"):
                     continue
                 t0 = time.perf_counter()
                 scheds[engine] = mhra(tasks, eps, store, tm, alpha=0.5,
@@ -189,6 +209,10 @@ def run_scaling(sweep=SCALING_SWEEP, repeats=2, clone_max=1792):
         objectives_bitwise = objectives_bitwise and o_bit
         a_eq, o_ok, _ = _check_pair(scheds["auto"], scheds["delta"])
         parity_ok = parity_ok and a_eq and o_ok
+        if "jax" in scheds:
+            a_eq, _, o_bit = _check_pair(scheds["jax"], scheds["soa"])
+            parity_ok = parity_ok and a_eq
+            jax_bitwise = jax_bitwise and a_eq and o_bit
         if "clone" in scheds:
             a_eq, o_ok, _ = _check_pair(scheds["delta"], scheds["clone"])
             parity_ok = parity_ok and a_eq and o_ok
@@ -200,16 +224,22 @@ def run_scaling(sweep=SCALING_SWEEP, repeats=2, clone_max=1792):
         pair = []
         for r, t_auto in enumerate(samples["auto"]):
             t_delta = samples["delta"][min(r, len(samples["delta"]) - 1)]
-            pair.append(t_auto / min(t_delta, samples["soa"][r]))
+            t_best = min(t_delta, samples["soa"][r])
+            if "jax" in samples:
+                t_best = min(t_best, samples["jax"][r])
+            pair.append(t_auto / t_best)
         auto_ok = auto_ok and min(pair) <= 1.05
         for engine in engines:
-            rows.append(dict(
+            row = dict(
                 n_tasks=n, n_endpoints=len(eps), engine=engine,
                 seconds=times[engine],
                 ms_per_task=times[engine] / n * 1e3,
                 speedup_vs_delta=times["delta"] / max(times[engine], 1e-9),
-            ))
-    return rows, parity_ok, objectives_bitwise, auto_ok
+            )
+            if engine == "jax":
+                row["compile_s"] = compile_s
+            rows.append(row)
+    return rows, parity_ok, objectives_bitwise, auto_ok, jax_bitwise
 
 
 # ---------------------------------------------------------------------------
@@ -384,14 +414,15 @@ def _run_all(args):
     print(f"table4 parity (clone==delta, soa~delta): "
           f"{'OK' if t4_parity else 'FAILED'}\n")
 
-    sc_rows, sc_parity, sc_bitwise, sc_auto_ok = run_scaling(
+    sc_rows, sc_parity, sc_bitwise, sc_auto_ok, sc_jax_bitwise = run_scaling(
         sweep, repeats=args.repeats)
     print(f"{'n_tasks':>8}{'endpoints':>10}{'engine':>8}{'time_s':>10}"
-          f"{'ms/task':>9}{'vs delta':>9}")
+          f"{'ms/task':>9}{'vs delta':>9}{'compile_s':>11}")
     for r in sc_rows:
+        comp = f"{r['compile_s']:>11.2f}" if "compile_s" in r else ""
         print(f"{r['n_tasks']:>8}{r['n_endpoints']:>10}{r['engine']:>8}"
               f"{r['seconds']:>10.3f}{r['ms_per_task']:>9.3f}"
-              f"{r['speedup_vs_delta']:>8.2f}x")
+              f"{r['speedup_vs_delta']:>8.2f}x{comp}")
     big_soa = [r["speedup_vs_delta"] for r in sc_rows
                if r["engine"] == "soa" and r["n_tasks"] >= 16384]
     gate_ok = all(s >= 3.0 for s in big_soa) if big_soa else True
@@ -400,13 +431,25 @@ def _run_all(args):
     soa_4ep = [r["speedup_vs_delta"] for r in sc_rows
                if r["engine"] == "soa" and r["n_endpoints"] == 4]
     soa_4ep_ok = all(s >= 1.0 for s in soa_4ep) if soa_4ep else True
+    # the fused scan's reason to exist: warm jax strictly beats soa at the
+    # large-fleet deep-window cell (32 endpoints x 32768 tasks)
+    cell = {(r["n_tasks"], r["n_endpoints"], r["engine"]): r["seconds"]
+            for r in sc_rows}
+    jax_t = cell.get((32768, 32, "jax"))
+    soa_t = cell.get((32768, 32, "soa"))
+    jax_gate_ok = jax_t is None or jax_t < soa_t
+    jax_msg = ("n/a" if jax_t is None
+               else f"{'OK' if jax_gate_ok else 'FAILED'} "
+                    f"(jax {jax_t:.3f}s vs soa {soa_t:.3f}s)")
     print(f"scaling parity: {'OK' if sc_parity else 'FAILED'} "
-          f"(objectives bitwise: {sc_bitwise}); "
+          f"(objectives bitwise: {sc_bitwise}; jax==soa bitwise: "
+          f"{sc_jax_bitwise}); "
           f"soa>=3x at >=16k tasks: "
           f"{'OK' if gate_ok else 'FAILED'} {[f'{s:.1f}x' for s in big_soa]}; "
           f"soa>=delta at 4 endpoints: "
           f"{'OK' if soa_4ep_ok else 'FAILED'} "
           f"{[f'{s:.2f}x' for s in soa_4ep]}; "
+          f"jax<soa at 32k/32ep: {jax_msg}; "
           f"auto within 5% of best fixed: "
           f"{'OK' if sc_auto_ok else 'FAILED'}\n")
 
@@ -440,13 +483,16 @@ def _run_all(args):
         attribution=attr,
         parity=dict(
             table4_ok=t4_parity, scaling_ok=sc_parity,
-            scaling_objectives_bitwise=sc_bitwise, rtol=PARITY_RTOL,
+            scaling_objectives_bitwise=sc_bitwise,
+            jax_matches_soa_bitwise=sc_jax_bitwise, rtol=PARITY_RTOL,
             wide_dag_ok=wd_parity,
         ),
         gates=dict(soa_3x_at_16k=gate_ok,
                    soa_speedups_at_16k_plus=big_soa,
                    soa_ge_delta_at_4ep=soa_4ep_ok,
                    soa_4ep_speedups=soa_4ep,
+                   jax_faster_than_soa_at_32k_32ep=jax_gate_ok,
+                   jax_vs_soa_seconds_at_32k_32ep=[jax_t, soa_t],
                    auto_within_5pct_of_best_fixed=sc_auto_ok,
                    wide_dag_epoch_soa_2x_at_32k=wd_gate_ok,
                    wide_dag_epoch_soa_speedups=big_wd),
@@ -455,8 +501,9 @@ def _run_all(args):
     print(f"wrote {args.out}")
 
     # smoke cells are too small for the speedup gates; parity always counts
-    ok = (t4_parity and sc_parity and wd_parity
-          and ((gate_ok and wd_gate_ok and soa_4ep_ok and sc_auto_ok)
+    ok = (t4_parity and sc_parity and wd_parity and sc_jax_bitwise
+          and ((gate_ok and wd_gate_ok and soa_4ep_ok and sc_auto_ok
+                and jax_gate_ok)
                or args.tasks is not None))
     rows = []
     for r in t4_rows:

@@ -190,6 +190,17 @@ def main(argv=None) -> dict:
         f"{best_site.policy} {best_site.edp:.3e}"
     )
     assert mhra.edp < worst_site.edp, "MHRA must beat the worst single site"
+    # engine parity: the fused jax scan must place every synthetic task
+    # exactly where the soa greedy does
+    syn_soa = run_policy(syn, "mhra", engine="soa", alpha=args.alpha,
+                         seed=args.seed)
+    syn_jax = run_policy(syn, "mhra", engine="jax", alpha=args.alpha,
+                         seed=args.seed)
+    assert syn_soa.assignments == syn_jax.assignments, (
+        "soa and jax engines diverged on the synthetic workload"
+    )
+    print(f"synthetic engine parity: soa/jax agree on all "
+          f"{len(syn_jax.assignments)} assignments")
 
     # --- 2. molecular-design DAG --------------------------------------
     dag = moldesign_dag_workload(
@@ -224,8 +235,18 @@ def main(argv=None) -> dict:
     assert look_delta.assignments == look_soa.assignments, (
         "delta and soa engines diverged under lookahead scoring"
     )
+    jax_run = run_policy(dag, "mhra", engine="jax", alpha=0.3,
+                         seed=args.seed)
+    assert jax_run.assignments == soa_run.assignments, (
+        "soa and jax engines diverged on the DAG workload"
+    )
+    look_jax = run_policy(dag, "lookahead_mhra", engine="jax", alpha=0.3,
+                          seed=args.seed)
+    assert look_jax.assignments == look_soa.assignments, (
+        "soa and jax engines diverged under lookahead scoring"
+    )
     print(f"\nDAG: {edges} dependency edges honored ({look_edges} under "
-          f"lookahead); delta/soa engines agree on all "
+          f"lookahead); delta/soa/jax engines agree on all "
           f"{len(delta_run.assignments)} assignments for both policies")
 
     look_row = dag_res.row("lookahead_mhra")
@@ -248,6 +269,7 @@ def main(argv=None) -> dict:
         "size": size,
         "dag_edges_checked": edges,
         "dag_engine_parity": True,
+        "jax_engine_parity": True,
         "mhra_edp_vs_best_site": edp_vs_best,
         "lookahead_engine_parity": True,
         "lookahead_edp_vs_mhra": look_ratio,
@@ -301,7 +323,13 @@ def main(argv=None) -> dict:
         assert cm_delta.assignments == cm_soa.assignments, (
             "delta and soa engines diverged under carbon weighting"
         )
-        print(f"carbon engine parity: delta/soa agree on all "
+        cm_jax = run_policy(car, "carbon_mhra", engine="jax",
+                            alpha=args.alpha, seed=args.seed, carbon=sig,
+                            defer_horizon_s=DEFER_HORIZON_S)
+        assert cm_jax.assignments == cm_soa.assignments, (
+            "soa and jax engines diverged under carbon weighting"
+        )
+        print(f"carbon engine parity: delta/soa/jax agree on all "
               f"{len(cm_delta.assignments)} assignments")
         results.append(car_res)
         extra.update({
@@ -409,7 +437,13 @@ def main(argv=None) -> dict:
         assert aware.assignments == aware_soa.assignments, (
             "delta and soa engines diverged under the fault mask"
         )
-        print(f"fault engine parity: delta/soa agree on all "
+        aware_jax = run_policy(cha, "mhra", engine="jax", alpha=args.alpha,
+                               seed=args.seed, faults=ft, fault_aware=True,
+                               spec_factor=SPEC_FACTOR)
+        assert aware_jax.assignments == aware_soa.assignments, (
+            "soa and jax engines diverged under the fault mask"
+        )
+        print(f"fault engine parity: delta/soa/jax agree on all "
               f"{len(aware.assignments)} assignments")
         results.append(flt_res)
         extra.update({
@@ -490,7 +524,13 @@ def main(argv=None) -> dict:
         assert fair.assignments == fair_soa.assignments, (
             "delta and soa engines diverged under fairness weighting"
         )
-        print(f"fairness engine parity: delta/soa agree on all "
+        fair_jax = run_policy(mu, "mhra", engine="jax", alpha=args.alpha,
+                              seed=args.seed, fairness=share,
+                              admission="shed", label="fair_mhra")
+        assert fair_jax.assignments == fair_soa.assignments, (
+            "soa and jax engines diverged under fairness weighting"
+        )
+        print(f"fairness engine parity: delta/soa/jax agree on all "
               f"{len(fair.assignments)} assignments")
         results.append(mu_res)
         extra.update({
@@ -588,7 +628,11 @@ def main(argv=None) -> dict:
         assert agnt.assignments == agnt_soa.assignments, (
             "delta and soa engines diverged under the region layer"
         )
-        print(f"geo engine parity: delta/soa agree on all "
+        agnt_jax = geo_run("agent", engine="jax")
+        assert agnt_jax.assignments == agnt_soa.assignments, (
+            "soa and jax engines diverged under the region layer"
+        )
+        print(f"geo engine parity: delta/soa/jax agree on all "
               f"{len(agnt.assignments)} assignments")
         results.append(geo_res)
         extra.update({

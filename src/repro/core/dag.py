@@ -196,6 +196,10 @@ class DAGView:
         """((child id, edge bytes), ...) — the task's direct consumers."""
         return tuple(self._children.get(task_id, ()))
 
+    def fn(self, task_id: str) -> str | None:
+        """Function name of a live (retained) task, else None."""
+        return self._fn.get(task_id)
+
     def parents(self, task_id: str) -> tuple[str, ...]:
         return self._parents.get(task_id, ())
 
@@ -391,12 +395,21 @@ class LookaheadWeights:
 
     to every candidate score, so critical tasks chase early finishes and
     heavy producers park their outputs where children can pull cheaply.
+
+    ``hops_task`` (producer-aware mode) maps a producer task id to a
+    per-endpoint hop vector: the *byte-weighted* hop distance from each
+    candidate endpoint to the **predicted endpoints of that task's
+    children** (argmin-energy per child function), replacing the fleet
+    mean in the gravity term for exactly those tasks.  ``None`` (the
+    default) leaves every engine's float sequence bitwise-identical to
+    the fleet-mean build.
     """
 
     tail_w: Mapping[str, float]
     out_j: Mapping[str, float]
     hops_mean: tuple[float, ...]
     lam: float = 1.0
+    hops_task: Mapping[str, tuple[float, ...]] | None = None
 
     def __post_init__(self) -> None:
         if self.lam < 0:
@@ -410,6 +423,8 @@ class LookaheadWeights:
         endpoints: Sequence,
         transfer,
         lam: float = 1.0,
+        store=None,
+        producer_aware: bool = False,
     ) -> "LookaheadWeights | None":
         """Snapshot the lookahead terms for one batch; returns ``None``
         when no task in the batch has downstream structure (every weight
@@ -420,7 +435,17 @@ class LookaheadWeights:
         live graph's depth/width, so near-structureless DAGs (a 2-node
         chain) are steered proportionally less — full-strength shaping on
         a tiny graph was measured to over-steer placements.  The scale is
-        1.0 for every graph at least 3 levels deep and 2 wide."""
+        1.0 for every graph at least 3 levels deep and 2 wide.
+
+        With ``producer_aware=True`` (and a profile ``store``), each
+        batch task with registered children also gets a ``hops_task``
+        vector: instead of pricing its outputs' escape cost at the fleet
+        *mean* hop distance, every child edge's bytes are weighted by the
+        hop distance to the child's **predicted** endpoint — the
+        argmin-energy endpoint for the child's function under the current
+        profiles (first index on ties, cached per function).  Tasks
+        without registered children keep the fleet-mean vector (their
+        gravity weight is zero anyway)."""
         if not dag.has_edges():
             return None
         sscale = structure_scale(dag.live_depth, dag.live_width)
@@ -444,4 +469,37 @@ class LookaheadWeights:
         for a in names:
             others = [transfer.hops(a, b) for b in names if b != a]
             hm.append(sum(others) / len(others) if others else 0.0)
-        return cls(tail_w, out_j, tuple(hm), lam * sscale)
+        hops_task = None
+        if producer_aware and store is not None:
+            pred_i: dict[str, int] = {}
+
+            def _child_ep(fn: str) -> int:
+                i = pred_i.get(fn)
+                if i is None:
+                    best = None
+                    i = 0
+                    for j, nm in enumerate(names):
+                        e_j = store.predict(fn, nm).energy_j
+                        if best is None or e_j < best:   # first-index ties
+                            best, i = e_j, j
+                    pred_i[fn] = i
+                return i
+
+            ht: dict[str, tuple[float, ...]] = {}
+            for t in tasks:
+                if t.id not in dag:
+                    continue
+                ob = 0.0
+                acc = [0.0] * len(names)
+                for child, nbytes in dag.children(t.id):
+                    cfn = dag.fn(child)
+                    if cfn is None or nbytes <= 0.0:
+                        continue
+                    dst = names[_child_ep(cfn)]
+                    for ai, a in enumerate(names):
+                        acc[ai] += nbytes * transfer.hops(a, dst)
+                    ob += nbytes
+                if ob > 0.0:
+                    ht[t.id] = tuple(v / ob for v in acc)
+            hops_task = ht or None
+        return cls(tail_w, out_j, tuple(hm), lam * sscale, hops_task)

@@ -319,9 +319,9 @@ class OnlineEngine:
             self.engine = engine
         if self.engine == "clone":
             raise ValueError(
-                "OnlineEngine requires a live-state engine ('delta' or "
-                "'soa'); engine='clone' cannot place against the state "
-                "carried across arrival windows"
+                "OnlineEngine requires a live-state engine ('delta', "
+                "'soa' or 'jax'); engine='clone' cannot place against the "
+                "state carried across arrival windows"
             )
         self.alpha = alpha
         self.window_s = window_s
@@ -336,7 +336,8 @@ class OnlineEngine:
             # self.engine then becomes the concrete choice
             self.state = None
         else:
-            state_cls = SoAState if self.engine == "soa" else SchedulerState
+            state_cls = (SoAState if self.engine in ("soa", "jax")
+                         else SchedulerState)
             self.state = state_cls(self.endpoints, self.transfer)
         self.prune = prune
         self.retain_windows = retain_windows
@@ -772,7 +773,8 @@ class OnlineEngine:
             # engine="auto": first window — resolve the crossover on the
             # actual fleet and window size, then keep that layout for life
             self.engine = auto_engine(len(self.endpoints), len(tasks))
-            state_cls = SoAState if self.engine == "soa" else SchedulerState
+            state_cls = (SoAState if self.engine in ("soa", "jax")
+                         else SchedulerState)
             self.state = state_cls(self.endpoints, self.transfer)
         alive = warm = None
         if self.fault_aware:

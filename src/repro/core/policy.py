@@ -34,7 +34,7 @@ from repro.core.predictor import TaskProfileStore
 from repro.core.scheduler import Schedule, SchedulerState, TaskSpec
 from repro.core.transfer import TransferModel
 
-ENGINES = ("delta", "clone", "soa", "auto")
+ENGINES = ("delta", "clone", "soa", "jax", "auto")
 
 
 def _check_engine(engine: str) -> str:
@@ -245,18 +245,24 @@ class LookaheadMHRAPolicy(PlacementPolicy):
     name = "lookahead_mhra"
 
     def __init__(self, heuristics: Sequence[str] = sched.HEURISTICS,
-                 engine: str = "delta", lam: float = 1.0):
+                 engine: str = "delta", lam: float = 1.0,
+                 producer_aware: bool = False):
         self.heuristics = tuple(heuristics)
         self.engine = _check_engine(engine)
         if lam < 0:
             raise ValueError(f"lam must be non-negative, got {lam}")
         self.lam = lam
+        # producer-aware gravity: weight each producer's outbound bytes by
+        # the hop distance to its children's *predicted* endpoints instead
+        # of the fleet mean (False keeps the fleet-mean build bit-exact)
+        self.producer_aware = producer_aware
 
     def place(self, tasks, ctx, state=None):
         lookahead = None
         if ctx.dag is not None:
             lookahead = LookaheadWeights.from_dag(
-                ctx.dag, tasks, ctx.endpoints, ctx.transfer, self.lam
+                ctx.dag, tasks, ctx.endpoints, ctx.transfer, self.lam,
+                store=ctx.store, producer_aware=self.producer_aware,
             )
         return sched.mhra(
             tasks, ctx.endpoints, ctx.store, ctx.transfer, ctx.alpha,

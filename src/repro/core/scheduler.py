@@ -75,6 +75,32 @@ def reset_memo_stats() -> None:
 AUTO_SOA_MIN_ENDPOINTS = 16
 AUTO_SOA_MIN_CELLS = 256
 
+#: ``engine="jax"`` crossover (measured on the scaled SeBS testbed, warm
+#: timings with the one-off JIT compile accounted separately — see
+#: BENCH_scheduler.json): the fused lax.scan greedy beats soa once the
+#: window is deep enough to amortize host array prep and device
+#: round-trips — measured from 8 endpoints at 8k-task windows (2^16
+#: score cells; jax 0.18s vs soa 0.30s there, and the margin only grows
+#: with the fleet).  Smaller windows stay on soa; tiny fleets never
+#: switch (the vector passes don't pay for the scan's fixed overhead).
+AUTO_JAX_MIN_ENDPOINTS = 8
+AUTO_JAX_MIN_CELLS = 1 << 16
+
+_JAX_OK: bool | None = None
+
+
+def _jax_available() -> bool:
+    """Lazy probe: is the jax placement backend importable?  ``auto``
+    must never resolve to an engine that cannot run."""
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            import repro.kernels.placement.ops  # noqa: F401
+            _JAX_OK = True
+        except Exception:
+            _JAX_OK = False
+    return _JAX_OK
+
 
 def auto_engine(n_endpoints: int, n_tasks: int | None = None) -> str:
     """Resolve ``engine="auto"`` to a concrete greedy backend.
@@ -85,7 +111,14 @@ def auto_engine(n_endpoints: int, n_tasks: int | None = None) -> str:
     amortize its per-call array setup.  ``n_tasks=None`` (streaming:
     window sizes are unknown up front) decides on fleet size alone,
     conservatively — delta is never worse than soa by much at small
-    fleets, while soa's setup can triple a tiny window's latency."""
+    fleets, while soa's setup can triple a tiny window's latency.  Above
+    the jax crossover (large fleet *and* a deep window to scan over) the
+    fused ``engine="jax"`` backend takes over — batch-size-aware only,
+    and only when jax is importable."""
+    if (n_tasks is not None and n_endpoints >= AUTO_JAX_MIN_ENDPOINTS
+            and n_endpoints * n_tasks >= AUTO_JAX_MIN_CELLS
+            and _jax_available()):
+        return "jax"
     if n_endpoints >= AUTO_SOA_MIN_ENDPOINTS:
         return "soa"
     if n_tasks is None:
@@ -851,11 +884,19 @@ def mhra(
     if engine == "auto":
         if state is not None:
             # online mode: match the live state's layout so no window ever
-            # pays a from_heap/write_back conversion round-trip
-            engine = "soa" if isinstance(state, SoAState) else "delta"
+            # pays a from_heap/write_back conversion round-trip.  SoA-backed
+            # states may still escalate to the jax scan per window — it
+            # reads/writes the SoA layout directly, so the escalation is
+            # conversion-free and reverts to soa on small windows.
+            if isinstance(state, SoAState):
+                engine = auto_engine(len(endpoints), len(tasks))
+                if engine == "delta":
+                    engine = "soa"
+            else:
+                engine = "delta"
         else:
             engine = auto_engine(len(endpoints), len(tasks))
-    if engine not in ("delta", "soa"):
+    if engine not in ("delta", "soa", "jax"):
         raise ValueError(f"unknown engine {engine!r}")
 
     tasks = list(tasks)
@@ -867,6 +908,10 @@ def mhra(
     sf1, sf2, sf3 = _normalizers_fast(tasks, endpoints, table, transfer, carbon)
 
     unit_indices = [[table.index[t.id] for t in u] for u in units]
+    if engine == "jax":
+        return _mhra_jax(units, unit_indices, endpoints, table, transfer,
+                         alpha, heuristics, sf1, sf2, state, carbon, sf3,
+                         lookahead, alive, warm, fairness)
     if engine == "soa":
         return _mhra_soa(units, unit_indices, endpoints, table, transfer,
                          alpha, heuristics, sf1, sf2, state, carbon, sf3,
@@ -929,6 +974,362 @@ def _mhra_soa(units, unit_indices, endpoints, table, transfer, alpha,
     return best
 
 
+def _mhra_jax(units, unit_indices, endpoints, table, transfer, alpha,
+              heuristics, sf1, sf2, state, carbon=None, sf3=1.0,
+              lookahead=None, alive=None, warm=None, fairness=None):
+    """jax-engine heuristic search: one fused ``lax.scan`` greedy per
+    window (all heuristics vmapped into a single device call), committing
+    the winner into ``state`` exactly like :func:`_mhra_soa`.
+
+    Parity-locked to the SoA engine: the scan reproduces ``_greedy_soa``'s
+    float sequences double for double (see ``repro.kernels.placement``),
+    the winning objective is recomputed from ``SoAState.metrics()`` on the
+    final registers — the same authoritative accumulation soa reports —
+    and first-min argmins break ties like ``np.argmin``.  Windows the fast
+    path can't express (clustered units, multi-input tasks — e.g. DAG
+    join stages whose promoted children carry several parent transfers)
+    fall back to :func:`_mhra_soa`, which is assignment-identical by the
+    existing contract.  The live ``SoAState`` is read into device arrays
+    at the window boundary and only the winner's registers are written
+    back — no per-decision host/device chatter.
+    """
+    if (not units) or any(len(u) != 1 or len(u[0].inputs) > 1 for u in units):
+        return _mhra_soa(units, unit_indices, endpoints, table, transfer,
+                         alpha, heuristics, sf1, sf2, state, carbon, sf3,
+                         lookahead, alive, warm, fairness)
+    try:
+        from repro.kernels.placement import ops as pops
+    except Exception:
+        return _mhra_soa(units, unit_indices, endpoints, table, transfer,
+                         alpha, heuristics, sf1, sf2, state, carbon, sf3,
+                         lookahead, alive, warm, fairness)
+
+    heap_state: SchedulerState | None = None
+    if isinstance(state, SchedulerState):
+        heap_state, state = state, SoAState.from_heap(state)
+    base = state if state is not None else SoAState(endpoints, transfer)
+    n_ep = len(endpoints)
+    names = base.names
+
+    # per-endpoint constants — same host numpy expressions as _greedy_soa,
+    # so every scalar entering the scan is the same double
+    idle = np.array([ep.idle_power_w for ep in endpoints])
+    bt_mask = np.array([ep.has_batch_scheduler for ep in endpoints])
+    su = np.array([ep.startup_energy_j for ep in endpoints])
+    qd_vec = np.where(bt_mask, [ep.queue_delay_s for ep in endpoints], 0.0)
+    idle_bt = np.where(bt_mask, idle, 0.0)
+    su_bt = np.where(bt_mask, su, 0.0)
+    idle_on_sum = float(idle[~bt_mask].sum())
+    c_cur0 = float(max(base.last.max(initial=0.0), 0.0))
+    used = base.first < np.inf
+    span0 = np.where(used, base.last - base.first, 0.0)
+    const0 = np.where(bt_mask & used, idle * span0 + su, 0.0) + base.dyn
+    a1 = alpha / sf1
+    b1 = (1.0 - alpha) / sf2
+    if carbon is not None:
+        rates_v = np.asarray(carbon.rates, dtype=float)
+        g1 = carbon.gamma / sf3
+        w_idle_on = float((rates_v * idle)[~bt_mask].sum())
+    else:
+        rates_v = np.zeros(n_ep)
+        g1 = 0.0
+        w_idle_on = 0.0
+    const_g0 = rates_v * const0
+    if lookahead is not None:
+        lk_tail, lk_out = lookahead.tail_w, lookahead.out_j
+        lk_ht = lookahead.hops_task
+        hm_vec = np.asarray(lookahead.hops_mean, dtype=float)
+        lam = lookahead.lam
+    else:
+        lk_tail = lk_out = lk_ht = None
+        hm_vec = np.zeros(n_ep)
+        lam = 0.0
+    lam_b1 = lam * b1   # lk_c1 = (lam*b1)*u_tw, soa's left-assoc grouping
+    lam_a1 = lam * a1
+    fdebt = fairness.debt if fairness is not None else None
+    f_mu = fairness.mu if fairness is not None else 0.0
+    f_beta = 1.0 - alpha
+    wt_v = (np.asarray(_warm_terms(warm, alpha, sf1, sf2))
+            if warm is not None else np.zeros(n_ep))
+    alive_v = (np.ones(n_ep, dtype=bool) if alive is None
+               else np.asarray(alive, dtype=bool))
+
+    # padded shapes: endpoint lanes / cores / tasks / input signatures
+    E = pops.lane_bucket(n_ep)
+    C = pops.bucket_pow2(max(ep.cores for ep in endpoints))
+    n_units = len(units)
+    T = pops.bucket_pow2(n_units)
+    H = len(heuristics)
+
+    def padv(v, fill=0.0):
+        out = np.full(E, fill, dtype=float)
+        out[:n_ep] = v
+        return out
+
+    # per-input-signature transfer table (slot 0 = the no-input dummy row:
+    # zero adds, zero ready, staged everywhere — bitwise-inert)
+    sig_index: dict[tuple, int] = {}
+    add_rows = [np.zeros(E)]
+    ready_list = [0.0]
+    shared_list = [False]
+    staged_rows = [np.ones(E, dtype=bool)]
+    keys_list: list[list] = [[None] * n_ep]
+    for u in units:
+        t0 = u[0]
+        if not t0.inputs:
+            continue
+        inp = t0.inputs[0]
+        if inp in sig_index:
+            continue
+        src, n_files, nbytes, shared = inp
+        ks = f"{src}:{n_files}:{nbytes}"
+        keys = [None if n == src else (n, ks) for n in names]
+        add = np.array([
+            0.0 if k is None
+            else transfer.hops(src, n) * nbytes * E_INC_J_PER_BYTE
+            for n, k in zip(names, keys)
+        ])
+        staged = np.array([
+            k is None or (shared and k in base.cached) for k in keys
+        ])
+        sig_index[inp] = len(add_rows)
+        add_rows.append(padv(add))
+        ready_list.append(transfer.predict_seconds(n_files, nbytes))
+        shared_list.append(bool(shared))
+        staged_rows.append(np.concatenate(
+            [staged, np.ones(E - n_ep, dtype=bool)]))
+        keys_list.append(keys)
+    n_sigs = len(add_rows)
+    S = pops.bucket_pow2(n_sigs)
+    staged0 = np.ones((S, E), dtype=bool)
+    staged0[:n_sigs] = np.stack(staged_rows)
+
+    # carry seeds from the live state (pad lanes: fresh-endpoint registers
+    # with zero slots — finite scores, masked dead before the argmin)
+    slots0 = np.full((E, C), np.inf)
+    slots0[n_ep:] = 0.0
+    for ei in range(n_ep):
+        sv = base.slot_view(ei)
+        slots0[ei, :len(sv)] = sv
+    mins0 = slots0.min(axis=1)
+    first0 = padv(base.first, fill=np.inf)
+    last0 = padv(base.last)
+    dyn0 = padv(base.dyn)
+
+    hm_p = padv(hm_vec)
+    rtT, enT = table.transposed()
+    en_mean, rt_mean = table.en_mean, table.rt_mean
+
+    def tile(a):
+        return np.broadcast_to(a, (H,) + a.shape).copy()
+
+    xs = {
+        "ti": np.zeros((H, T), dtype=np.int32),
+        "hv_id": np.zeros((H, T), dtype=np.int32),
+        "sig": np.zeros((H, T), dtype=np.int32),
+        "ready_s": np.zeros((H, T)),
+        "shared_s": np.zeros((H, T), dtype=bool),
+        "nb": np.zeros((H, T)),
+        "new_run": np.zeros((H, T), dtype=bool),
+        "u_tw": np.zeros((H, T)),
+        "u_oj": np.zeros((H, T)),
+        "u_fd": np.zeros((H, T)),
+        "valid": np.zeros((H, T), dtype=bool),
+    }
+    # one pass over the units computes every order-independent per-task
+    # quantity; each heuristic then just permutes the shared arrays with
+    # fancy indexing (the ordering is the only thing heuristics change)
+    ti_all = np.fromiter((ui[0] for ui in unit_indices), dtype=np.intp,
+                         count=n_units)
+    nb_all = np.empty(n_units)
+    sig_all = np.zeros(n_units, dtype=np.int32)
+    u_tw_all = np.zeros(n_units)
+    u_oj_all = np.zeros(n_units)
+    u_fd_all = np.zeros(n_units)
+    gid_all = np.empty(n_units, dtype=np.int64)
+    key_ids: dict = {}
+    # hop-vector table: row 0 is the fleet mean; producer-aware tasks get
+    # their own (deduplicated) rows, indexed per task by ``hv_id``
+    hv_rows = [hm_p]
+    hv_ids: dict = {}
+    hv_id_all = np.zeros(n_units, dtype=np.int32)
+    tasks0 = [u[0] for u in units]
+    if lk_tail is None and fdebt is None:
+        # common case (no lookahead, no fairness): tight listcomp path —
+        # the same (fn, inputs, not_before) run keys, far fewer dispatches
+        key_list = [(t.fn, t.inputs, t.not_before) for t in tasks0]
+        nb_all[:] = [k[2] for k in key_list]
+        kid = key_ids.setdefault
+        gid_all[:] = [kid(k, len(key_ids)) for k in key_list]
+        if sig_index:
+            sidx = sig_index.get
+            sig_all[:] = [sidx(t.inputs[0], 0) if t.inputs else 0
+                          for t in tasks0]
+    else:
+        for i, t0 in enumerate(tasks0):
+            nb0 = t0.not_before
+            nb_all[i] = nb0
+            if lk_tail is not None:
+                u_tw = lk_tail.get(t0.id, 0.0)
+                u_oj = lk_out.get(t0.id, 0.0)
+                u_tw_all[i] = u_tw
+                u_oj_all[i] = u_oj
+                key = (t0.fn, t0.inputs, nb0, u_tw, u_oj)
+                if lk_ht is not None:
+                    # same run-key split as the SoA engine: tasks with
+                    # different consumer-hop vectors never share a run
+                    hv_t = lk_ht.get(t0.id)
+                    key = key + (hv_t,)
+                    if hv_t is not None:
+                        hid = hv_ids.get(hv_t)
+                        if hid is None:
+                            hid = hv_ids[hv_t] = len(hv_rows)
+                            hv_rows.append(padv(np.asarray(hv_t)))
+                        hv_id_all[i] = hid
+            else:
+                key = (t0.fn, t0.inputs, nb0)
+            if fdebt is not None:
+                u_fd = fdebt.get(t0.user, 0.0)
+                u_fd_all[i] = u_fd
+                key = key + (u_fd,)
+            if t0.inputs:
+                sig_all[i] = sig_index[t0.inputs[0]]
+            gid_all[i] = key_ids.setdefault(key, len(key_ids))
+    ready_arr = np.asarray(ready_list)
+    shared_arr = np.asarray(shared_list, dtype=bool)
+
+    orders: list[np.ndarray] = []
+    memo_misses = 0
+    for hi, h in enumerate(heuristics):
+        order = np.asarray(_sort_order(h, table, unit_indices),
+                           dtype=np.intp)
+        orders.append(order)
+        xs["ti"][hi, :n_units] = ti_all[order]
+        xs["hv_id"][hi, :n_units] = hv_id_all[order]
+        xs["valid"][hi, :n_units] = True
+        g = gid_all[order]
+        nr = xs["new_run"][hi, :n_units]
+        nr[0] = True
+        np.not_equal(g[1:], g[:-1], out=nr[1:])
+        memo_misses += int(nr.sum())
+        s = sig_all[order]
+        xs["sig"][hi, :n_units] = s
+        xs["ready_s"][hi, :n_units] = ready_arr[s]
+        xs["shared_s"][hi, :n_units] = shared_arr[s]
+        xs["nb"][hi, :n_units] = nb_all[order]
+        xs["u_tw"][hi, :n_units] = u_tw_all[order]
+        xs["u_oj"][hi, :n_units] = u_oj_all[order]
+        xs["u_fd"][hi, :n_units] = u_fd_all[order]
+    MEMO_STATS["misses"] += memo_misses
+    MEMO_STATS["hits"] += H * n_units - memo_misses
+
+    # per-task (E,) rows enter the scan as gathers into these small
+    # constant tables (profile rows / transfer signatures / hop vectors)
+    # rather than as (H, T, E) streams — same doubles, ~E× less traffic
+    P = pops.bucket_pow2(rtT.shape[0], minimum=1)
+    rt_tab = np.zeros((P, E))
+    en_tab = np.zeros((P, E))
+    rt_tab[:rtT.shape[0], :n_ep] = rtT
+    en_tab[:enT.shape[0], :n_ep] = enT
+    fen_tab = np.zeros(P)
+    frt_tab = np.zeros(P)
+    fen_tab[:len(en_mean)] = en_mean
+    frt_tab[:len(rt_mean)] = rt_mean
+    add_tab = np.zeros((S, E))
+    add_tab[:n_sigs] = np.stack(add_rows)
+    V = pops.bucket_pow2(len(hv_rows))
+    hv_tab = np.zeros((V, E))
+    hv_tab[:len(hv_rows)] = np.stack(hv_rows)
+
+    f64 = np.float64
+    consts = {
+        "idle_bt": padv(idle_bt),
+        "su_bt": padv(su_bt),
+        "qd": padv(qd_vec),
+        "rates": padv(rates_v),
+        "wt": padv(wt_v),
+        "alive": np.concatenate([alive_v, np.zeros(E - n_ep, dtype=bool)]),
+        "rt_tab": rt_tab, "en_tab": en_tab,
+        "fen_tab": fen_tab, "frt_tab": frt_tab,
+        "add_tab": add_tab, "hv_tab": hv_tab,
+        "scalars": {
+            "a1": f64(a1), "b1": f64(b1), "g1": f64(g1),
+            "idle_on_sum": f64(idle_on_sum), "w_idle_on": f64(w_idle_on),
+            "lam_b1": f64(lam_b1), "lam_a1": f64(lam_a1),
+            "alpha": f64(alpha), "sf1": f64(sf1), "sf2": f64(sf2),
+            "f_beta": f64(f_beta), "f_mu": f64(f_mu),
+        },
+    }
+    init = {
+        "mins": tile(mins0), "slots": tile(slots0), "first": tile(first0),
+        "last": tile(last0), "dyn": tile(dyn0), "const": tile(padv(const0)),
+        "const_g": tile(padv(const_g0)),
+        "e_base": np.zeros((H, E)), "nl_r": np.zeros((H, E)),
+        "g_base_r": np.zeros((H, E)), "lk_r": np.zeros((H, E)),
+        "fw_r": np.zeros((H, E)), "staged": tile(staged0),
+        "c_cur": np.full(H, c_cur0), "tj": np.full(H, base.transfer_j),
+        "c_sum_b": np.zeros(H), "tj_b": np.zeros(H),
+        "cg_sum_b": np.zeros(H),
+    }
+
+    out, (ei_y, s_y, e_y) = pops.greedy_window(n_ep, consts, init, xs)
+
+    # winner: objective recomputed from SoAState.metrics() per heuristic —
+    # the same authoritative float sequence _greedy_soa reports
+    best_hi = -1
+    best_obj = None
+    best_rec = None
+    for hi, h in enumerate(heuristics):
+        st_h = base.clone(keep_timeline=False)
+        free, offsets = st_h.free, st_h.offsets
+        for ei in range(n_ep):
+            cores = offsets[ei + 1] - offsets[ei]
+            free[offsets[ei]:offsets[ei + 1]] = out["slots"][hi, ei, :cores]
+        st_h.first = out["first"][hi, :n_ep].copy()
+        st_h.last = out["last"][hi, :n_ep].copy()
+        st_h.dyn = out["dyn"][hi, :n_ep].copy()
+        st_h.transfer_j = float(out["tj"][hi])
+        e_tot, c_max, tjv = st_h.metrics()
+        obj_f = alpha * e_tot / sf1 + (1 - alpha) * c_max / sf2
+        carbon_g = None
+        if carbon is not None:
+            carbon_g = state_carbon_g(st_h, carbon.rates)
+            obj_f = obj_f + carbon.gamma * carbon_g / sf3
+        if best_obj is None or obj_f < best_obj:
+            best_hi, best_obj = hi, obj_f
+            best_rec = (st_h, obj_f, e_tot, c_max, tjv, carbon_g)
+
+    st_w, obj_f, e_tot, c_max, tjv, carbon_g = best_rec
+    h_name = heuristics[best_hi]
+    assignments: dict[str, str] = {}
+    timeline = dict(base.timeline)
+    for t0, ei_v, s_v, e_v in zip(
+        (units[i][0] for i in orders[best_hi]), ei_y[best_hi, :n_units],
+        s_y[best_hi, :n_units], e_y[best_hi, :n_units],
+    ):
+        assignments[t0.id] = names[int(ei_v)]
+        timeline[t0.id] = (float(s_v), float(e_v))
+    st_w.timeline = timeline
+    st_w.cached = set(base.cached)
+    staged_out = out["staged"][best_hi]
+    for si in range(1, n_sigs):
+        if not shared_list[si]:
+            continue
+        row0, rowf, keys = staged_rows[si], staged_out[si], keys_list[si]
+        for ei in range(n_ep):
+            if rowf[ei] and not row0[ei] and keys[ei] is not None:
+                st_w.cached.add(keys[ei])
+    sched = Schedule(assignments, obj_f, e_tot, c_max, tjv, h_name,
+                     timeline, carbon_g=carbon_g)
+    if heap_state is not None:
+        st_w.write_back(heap_state)
+        sched.timeline = dict(sched.timeline)
+    elif state is not None:
+        state.replace_with(st_w)
+        sched.timeline = dict(sched.timeline)
+    return sched
+
+
 def _greedy_delta(
     units, endpoints, table: PredictionTable, transfer, alpha, sf1, sf2,
     heuristic, base_state: SchedulerState | None = None,
@@ -988,6 +1389,7 @@ def _greedy_delta(
     lw = lookahead
     if lw is not None:
         lk_tail, lk_out, lk_hm, lam = lw.tail_w, lw.out_j, lw.hops_mean, lw.lam
+        lk_ht = lw.hops_task    # producer-aware per-task hop vectors (or None)
     wt = _warm_terms(warm, alpha, sf1, sf2) if warm is not None else None
     fw = fairness
     if fw is not None:
@@ -1049,10 +1451,15 @@ def _greedy_delta(
             if single:
                 u_tw = lk_tail.get(t0.id, 0.0)
                 u_oj = lk_out.get(t0.id, 0.0)
+                if lk_ht is not None:
+                    hv_u = lk_ht.get(t0.id, lk_hm)
             else:
                 u_oj = 0.0
                 for t in unit:
                     u_oj += lk_out.get(t.id, 0.0)
+                if lk_ht is not None:
+                    lk_rows = [(lk_out.get(t.id, 0.0),
+                                lk_ht.get(t.id, lk_hm)) for t in unit]
         if fw is not None:
             if single:
                 u_fd = fdebt.get(t0.user, 0.0)
@@ -1208,7 +1615,17 @@ def _greedy_delta(
                     lk_tail_sum = 0.0
                     for _tid, _s, _e in entries:
                         lk_tail_sum += lk_tail.get(_tid, 0.0) * _e
-                obj = obj + lam * (alpha * (u_oj * lk_hm[ei]) / sf1
+                if lk_ht is None:
+                    grav = u_oj * lk_hm[ei]
+                elif single:
+                    grav = u_oj * hv_u[ei]
+                else:
+                    # producer-aware: each task's bytes priced at *its*
+                    # predicted-consumer hop vector
+                    grav = 0.0
+                    for _oj, _hv in lk_rows:
+                        grav += _oj * _hv[ei]
+                obj = obj + lam * (alpha * grav / sf1
                                    + beta * lk_tail_sum / sf2)
             if fw is not None:
                 # advantage tax: each in-debt task pays mu*debt times the
@@ -1410,8 +1827,15 @@ def _greedy_soa(
         lk_tailv = np.empty(n_ep)
         lk_c1 = lk_c2 = 0.0
         u_tw = u_oj = 0.0
+        # producer-aware gravity: per-run hop vector (fleet mean unless the
+        # task carries its own predicted-consumer vector); the per-task
+        # choice joins the memo key so runs never mix vectors
+        lk_ht = lookahead.hops_task
+        run_hv = hm_vec
+        run_hv_l = hm_l
     else:
         lk = None
+        lk_ht = None
     # warm-pool term: one extra vector register, constant over the whole
     # call (the WarmWeights snapshot is per-placement-call), added as the
     # final term of every candidate score — same doubles as the delta
@@ -1527,6 +1951,11 @@ def _greedy_soa(
                 u_tw = lk_tail.get(t0.id, 0.0)
                 u_oj = lk_out.get(t0.id, 0.0)
                 key = (t0.fn, t0.inputs, nb0, u_tw, u_oj)
+                if lk_ht is not None:
+                    # tasks with different consumer-hop vectors must not
+                    # share a run (the gravity register differs)
+                    hv_t = lk_ht.get(t0.id)
+                    key = key + (hv_t,)
             if fdebt is not None:
                 # tasks taxed differently must not share a run
                 u_fd = fdebt.get(t0.user, 0.0)
@@ -1582,10 +2011,16 @@ def _greedy_soa(
                     np.multiply(gbuf, g1, out=gbuf)
                     np.add(obj, gbuf, out=obj)
                 if lk is not None:
+                    if lk_ht is not None:
+                        if hv_t is None:
+                            run_hv, run_hv_l = hm_vec, hm_l
+                        else:
+                            run_hv = np.asarray(hv_t, dtype=float)
+                            run_hv_l = run_hv.tolist()
                     lk_c1 = lam * b1 * u_tw
                     lk_c2 = lam * a1 * u_oj
                     np.multiply(end, lk_c1, out=lk)
-                    np.multiply(hm_vec, lk_c2, out=tmp)
+                    np.multiply(run_hv, lk_c2, out=tmp)
                     np.add(lk, tmp, out=lk)
                     np.add(obj, lk, out=obj)
                 if fdebt is not None:
@@ -1706,7 +2141,7 @@ def _greedy_soa(
                 g_base_l[ei] = g_b
             if lk is not None:
                 # same scalar op order as the vectorized lk pass
-                lk_e = e2 * lk_c1 + hm_l[ei] * lk_c2
+                lk_e = e2 * lk_c1 + run_hv_l[ei] * lk_c2
                 lk_l[ei] = lk_e
             if end_v > c_cur:
                 # C_max advanced: refresh every candidate's makespan terms
@@ -1838,7 +2273,23 @@ def _greedy_soa(
             for t in unit:
                 u_oj += lk_out.get(t.id, 0.0)
             np.multiply(lk_tailv, lam * b1, out=lk)
-            np.multiply(hm_vec, lam * a1 * u_oj, out=tmp)
+            if lk_ht is None:
+                np.multiply(hm_vec, lam * a1 * u_oj, out=tmp)
+            else:
+                # producer-aware: gravity accumulates per task at each
+                # task's own consumer-hop vector
+                tmp.fill(0.0)
+                for t in unit:
+                    _oj = lk_out.get(t.id, 0.0)
+                    if _oj != 0.0:
+                        _hv = lk_ht.get(t.id)
+                        np.add(tmp,
+                               np.multiply(
+                                   hm_vec if _hv is None
+                                   else np.asarray(_hv, dtype=float),
+                                   _oj),
+                               out=tmp)
+                np.multiply(tmp, lam * a1, out=tmp)
             np.add(lk, tmp, out=lk)
             np.add(obj, lk, out=obj)
         if fdebt is not None:
@@ -1968,6 +2419,7 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
             for t in tasks
         }
 
+    lk_ht = lookahead.hops_task if lookahead is not None else None
     state = SchedulerState(endpoints, transfer)
     assignments: dict[str, str] = {}
     for unit in units:
@@ -1975,6 +2427,10 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
         if lookahead is not None:
             for t in unit:
                 u_oj += lookahead.out_j.get(t.id, 0.0)
+            if lk_ht is not None:
+                lk_rows = [(lookahead.out_j.get(t.id, 0.0),
+                            lk_ht.get(t.id, lookahead.hops_mean))
+                           for t in unit]
         best_obj, best_ep = np.inf, None
         for ei, ep in enumerate(endpoints):
             if alive is not None and not alive[ei]:
@@ -1993,8 +2449,16 @@ def _greedy_multi_ep(units, endpoints, per_ep, transfer, alpha, tasks,
                 for t in unit:
                     lk_tail_sum += (lookahead.tail_w.get(t.id, 0.0)
                                     * trial.timeline[t.id][1])
+                if lk_ht is None:
+                    grav = u_oj * lookahead.hops_mean[ei]
+                else:
+                    # producer-aware: price each task's bytes at the hop
+                    # distance of its children's predicted endpoints
+                    grav = 0.0
+                    for _oj, _hv in lk_rows:
+                        grav += _oj * _hv[ei]
                 obj = obj + lookahead.lam * (
-                    alpha * (u_oj * lookahead.hops_mean[ei]) / sf1
+                    alpha * grav / sf1
                     + (1 - alpha) * lk_tail_sum / sf2
                 )
             if fairness is not None:

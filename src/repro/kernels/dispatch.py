@@ -29,3 +29,30 @@ def use_pallas() -> bool:
 
 def interpret() -> bool:
     return backend() == "pallas_interpret"
+
+
+_P_VALID = ("pallas", "pallas_interpret", "xla", "ref")
+
+
+def placement_backend() -> str:
+    """Backend for the placement score+argmin pass.
+
+    Honors REPRO_PLACEMENT_BACKEND=pallas|xla|ref; "pallas" off-TPU is
+    coerced to interpret mode so the kernel path stays testable in CI.
+    Falls back to the generic kernel backend() default when unset.
+    """
+    env = os.environ.get("REPRO_PLACEMENT_BACKEND")
+    if env:
+        assert env in _P_VALID, env
+        if env == "pallas" and jax.default_backend() != "tpu":
+            return "pallas_interpret"
+        return env
+    return backend()
+
+
+def placement_use_pallas() -> bool:
+    return placement_backend() in ("pallas", "pallas_interpret")
+
+
+def placement_interpret() -> bool:
+    return placement_backend() == "pallas_interpret"

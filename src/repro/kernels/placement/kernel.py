@@ -1,0 +1,95 @@
+"""Pallas tiled score+argmin for the placement pass.
+
+One grid step scores a 128-lane tile of candidate endpoints with the
+fused objective (same op order as ``ref.score_fleet``) and folds it into
+a running first-min (value, index) pair held in the scalar outputs —
+TPU grids execute sequentially, so the strict ``<`` update preserves
+``np.argmin``'s first-occurrence tie-breaking across tiles, and the
+masked-iota reduction preserves it within a tile.  ``interpret=True``
+emulates the kernel on CPU (the CI path; see
+``dispatch.placement_backend``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE_TILE = 128
+
+
+def _score_kernel(sc_ref, e_base_ref, nl_ref, g_base_ref, lk_ref, fw_ref,
+                  wt_ref, alive_ref, obj_ref, min_ref, idx_ref):
+    j = pl.program_id(0)
+    c_cur = sc_ref[0]
+    idle_on_sum = sc_ref[1]
+    a1 = sc_ref[2]
+    b1 = sc_ref[3]
+    g1 = sc_ref[4]
+    w_idle_on = sc_ref[5]
+    nl = nl_ref[...]
+    c2 = jnp.maximum(nl, c_cur)
+    e_s = idle_on_sum * c2 + e_base_ref[...]
+    obj = a1 * e_s + b1 * c2
+    obj = obj + g1 * (w_idle_on * c2 + g_base_ref[...])
+    obj = obj + lk_ref[...]
+    obj = obj + fw_ref[...]
+    obj = obj + wt_ref[...]
+    obj = jnp.where(alive_ref[...] != 0.0, obj, jnp.inf)
+    obj_ref[...] = obj
+    t_min = jnp.min(obj)
+    # first-min within the tile: smallest lane index attaining the min
+    lanes = jax.lax.broadcasted_iota(jnp.int32, obj.shape, 1)
+    t_idx = jnp.min(jnp.where(obj == t_min, lanes, LANE_TILE))
+    t_idx = t_idx + j * LANE_TILE
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[0, 0] = t_min
+        idx_ref[0, 0] = t_idx
+
+    @pl.when(j > 0)
+    def _fold():
+        better = t_min < min_ref[0, 0]   # strict: earlier tile wins ties
+        min_ref[0, 0] = jnp.where(better, t_min, min_ref[0, 0])
+        idx_ref[0, 0] = jnp.where(better, t_idx, idx_ref[0, 0])
+
+
+def score_fleet(scalars, e_base, nl, g_base, lk, fw, wt, alive_f, *,
+                interpret: bool = False):
+    """Tiled fused score+argmin over ``lanes`` candidate endpoints.
+
+    ``scalars`` is the packed ``(6,)`` float64 vector ``[c_cur,
+    idle_on_sum, a1, b1, g1, w_idle_on]`` (SMEM); the registers are
+    ``(lanes,)`` float64 with ``lanes`` a multiple of 128; ``alive_f`` is
+    the liveness mask as floats (0.0 = dead/pad).  Returns ``(obj,
+    min_val, min_idx)`` — ``obj`` shaped ``(lanes,)``, the scalars 0-d.
+    """
+    (lanes,) = e_base.shape
+    assert lanes % LANE_TILE == 0, lanes
+    grid = (lanes // LANE_TILE,)
+
+    def vec():
+        return pl.BlockSpec((1, LANE_TILE), lambda j: (0, j))
+
+    def scalar_out():
+        return pl.BlockSpec((1, 1), lambda j: (0, 0))
+
+    obj, mn, idx = pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            vec(), vec(), vec(), vec(), vec(), vec(), vec(),
+        ],
+        out_specs=(vec(), scalar_out(), scalar_out()),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, lanes), e_base.dtype),
+            jax.ShapeDtypeStruct((1, 1), e_base.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(scalars, e_base[None, :], nl[None, :], g_base[None, :], lk[None, :],
+      fw[None, :], wt[None, :], alive_f[None, :])
+    return obj[0], mn[0, 0], idx[0, 0]

@@ -1,0 +1,98 @@
+"""NumPy oracle for the fused placement score+argmin pass.
+
+This is ``_greedy_soa``'s candidate-scoring math extracted into a pure
+function of the engine's carry registers.  The SoA engine keeps a cached
+objective vector and refreshes entries selectively (committed lane, or
+every lane when C_max advances); this oracle instead *recomputes* every
+lane's score from the same registers.  The two are bitwise-identical
+lane by lane: multiplication commutes bitwise, and the per-element
+operation order here matches both the SoA miss pass and its scalar
+refresh paths exactly (see the parity notes in
+``docs/ARCHITECTURE.md``).  The jax engine's scan step, the Pallas
+kernel, and the XLA path all implement this op sequence.
+
+Every term register is always present; disabled registers are passed as
+zeros with zero scalar weights.  Adding ``+0.0`` is bitwise-inert here
+(no score is ever ``-0.0``: the makespan term ``b1*c2`` is ``>= +0.0``),
+so the single unconditional op sequence reproduces the SoA engine's
+conditional term adds double for double.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pairwise_sum(x, n: int, base: int = 0):
+    """``np.sum(x[base:base+n])`` with numpy's exact pairwise association.
+
+    The SoA engine freezes its run basis with ``float(const.sum())``; the
+    jax engine recomputes that scalar inside the scan, so it must
+    reproduce numpy's summation tree bitwise.  This replicates numpy's
+    ``pairwise_sum`` (sequential under 8 elements, 8-way unrolled blocks
+    to 128, halved recursion above) and works on any indexable — numpy
+    arrays here, traced jax values when called at trace time with static
+    ``n``.  Asserted bitwise-equal to ``np.sum`` in
+    ``tests/test_kernels.py``.
+    """
+    if n < 8:
+        res = 0.0
+        for i in range(n):
+            res = res + x[base + i]
+        return res
+    if n <= 128:
+        r = [x[base + j] for j in range(8)]
+        i = 8
+        while i < n - (n % 8):
+            for j in range(8):
+                r[j] = r[j] + x[base + i + j]
+            i += 8
+        res = ((r[0] + r[1]) + (r[2] + r[3])) + ((r[4] + r[5]) + (r[6] + r[7]))
+        while i < n:
+            res = res + x[base + i]
+            i += 1
+        return res
+    n2 = n // 2
+    n2 -= n2 % 8
+    return pairwise_sum(x, n2, base) + pairwise_sum(x, n - n2, base + n2)
+
+
+def score_fleet(
+    e_base: np.ndarray,
+    nl: np.ndarray,
+    g_base: np.ndarray,
+    lk: np.ndarray,
+    fw: np.ndarray,
+    wt: np.ndarray,
+    alive: np.ndarray,
+    c_cur: float,
+    idle_on_sum: float,
+    a1: float,
+    b1: float,
+    g1: float,
+    w_idle_on: float,
+) -> tuple[np.ndarray, int]:
+    """Score every candidate endpoint, return ``(obj, first-min argmin)``.
+
+    Registers (all per-endpoint vectors over the padded fleet):
+
+    - ``e_base``: candidate energy minus its C_max-dependent terms —
+      ``static + nd + span_term (+ transfer add) + tj_basis``
+    - ``nl``: candidate new last-end (the makespan the lane would post)
+    - ``g_base``/``lk``/``fw``/``wt``: carbon, lookahead, fairness-tax
+      and warm-pool term registers (zeros when the run is term-free)
+    - ``alive``: liveness mask — dead and pad lanes score ``+inf``
+
+    Scalars: ``c_cur`` the committed C_max, ``idle_on_sum`` the total
+    always-on idle draw, ``a1 = alpha/SF1``, ``b1 = (1-alpha)/SF2``,
+    ``g1 = gamma/SF3``, ``w_idle_on`` the rate-weighted always-on idle
+    draw.
+    """
+    c2 = np.maximum(nl, c_cur)
+    e_s = idle_on_sum * c2 + e_base
+    obj = a1 * e_s + b1 * c2
+    obj = obj + g1 * (w_idle_on * c2 + g_base)
+    obj = obj + lk
+    obj = obj + fw
+    obj = obj + wt
+    obj = np.where(alive, obj, np.inf)
+    return obj, int(np.argmin(obj))

@@ -329,3 +329,81 @@ def test_cp_speedup_reported_and_bounded():
     r = run_policy(trace, "mhra", alpha=0.3, seed=0)
     assert r.cp_speedup is not None
     assert 0.0 < r.cp_speedup <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Producer-aware gravity (hops_task)
+# ---------------------------------------------------------------------------
+
+
+class _PinnedStore:
+    """predict() stub whose argmin-energy endpoint is pinned per fn."""
+
+    def __init__(self, best):
+        self.best = best   # fn -> endpoint name
+
+    def predict(self, fn, ep_name):
+        import types
+        e = 1.0 if ep_name == self.best.get(fn) else 2.0
+        return types.SimpleNamespace(energy_j=e, runtime_s=1.0, observed=True)
+
+
+def test_producer_aware_hops_task_hand_checked():
+    dag = _diamond()
+    eps = table1_testbed()
+    tm = TransferModel(eps)
+    names = [e.name for e in eps]
+    tasks = [TaskSpec(id=i, fn=f"f{i}") for i in "abcd"]
+    best = {"fb": "theta", "fc": "ic", "fd": "faster"}
+    lw = LookaheadWeights.from_dag(dag, tasks, eps, tm, lam=1.0,
+                                   store=_PinnedStore(best),
+                                   producer_aware=True)
+    ht = lw.hops_task
+    assert ht is not None
+    # d has no children -> no vector (its gravity weight is zero anyway)
+    assert set(ht) == {"a", "b", "c"}
+    for e, nm in enumerate(names):
+        # a: 10 B to b (predicted theta) + 5 B to c (predicted ic)
+        exp_a = (10.0 * tm.hops(nm, "theta") + 5.0 * tm.hops(nm, "ic")) / 15.0
+        assert ht["a"][e] == pytest.approx(exp_a)
+        # b and c: all 7 B flow to d (predicted faster)
+        assert ht["b"][e] == pytest.approx(tm.hops(nm, "faster"))
+        assert ht["c"][e] == pytest.approx(tm.hops(nm, "faster"))
+    # default / store-less builds stay inert (hops_task never set)
+    assert LookaheadWeights.from_dag(dag, tasks, eps, tm).hops_task is None
+    assert LookaheadWeights.from_dag(
+        dag, tasks, eps, tm, producer_aware=True).hops_task is None
+
+
+def test_producer_aware_engine_parity_all_engines():
+    """clone/delta/soa/jax place a producer-aware batch identically."""
+    eps = table1_testbed()
+    store = _store(eps)
+    tm = TransferModel(eps)
+    dag = DAGView(runtime=lambda fn: 1.0)
+    batch = []
+    # stage-1 producers (the placeable batch: singleton units) ...
+    for i in range(24):
+        t = TaskSpec(id=f"p{i}", fn=SEBS_FUNCTIONS[i % len(SEBS_FUNCTIONS)])
+        dag.add_task(t)
+        batch.append(t)
+    # ... with stage-2/3 consumers still parked in the planning graph
+    for j in range(36):
+        dag.add_task(TaskSpec(
+            id=f"c{j}", fn=SEBS_FUNCTIONS[(j + 3) % len(SEBS_FUNCTIONS)],
+            deps=(f"p{j % 24}",), dep_bytes=float(1000 + 40 * j)))
+    for j in range(6):
+        dag.add_task(TaskSpec(
+            id=f"g{j}", fn=SEBS_FUNCTIONS[j % len(SEBS_FUNCTIONS)],
+            deps=(f"c{j}",), dep_bytes=512.0))
+    lw = LookaheadWeights.from_dag(dag, batch, eps, tm, lam=1.5,
+                                   store=store, producer_aware=True)
+    assert lw is not None and lw.hops_task
+    # the predicted-consumer vectors genuinely leave the fleet mean
+    assert any(tuple(v) != tuple(lw.hops_mean)
+               for v in lw.hops_task.values())
+    runs = {}
+    for engine in ("clone", "delta", "soa", "jax"):
+        s = mhra(batch, eps, store, tm, 0.3, engine=engine, lookahead=lw)
+        runs[engine] = (s.assignments, s.heuristic)
+    assert runs["clone"] == runs["delta"] == runs["soa"] == runs["jax"]

@@ -204,3 +204,46 @@ def test_zero_debt_fairness_is_identity(seed, n_eps, n_tasks):
         assert bare.assignments == taxed.assignments
         assert bare.objective == taxed.objective
         assert bare.energy_j == taxed.energy_j
+
+
+def _jax_ready() -> bool:
+    try:
+        import repro.kernels.placement.ops  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+@pytest.mark.skipif(not _jax_ready(), reason="jax placement backend "
+                    "unavailable (no jax in this environment)")
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_eps=st.integers(2, 12),
+    n_tasks=st.integers(1, 64),
+    alpha=st.sampled_from([0.0, 0.2, 0.5, 0.8, 1.0]),
+    with_fair=st.booleans(),
+    with_carbon=st.booleans(),
+    with_warm=st.booleans(),
+    with_alive=st.booleans(),
+)
+def test_soa_jax_bitwise_parity(seed, n_eps, n_tasks, alpha, with_fair,
+                                with_carbon, with_warm, with_alive):
+    """The fused jax scan replays soa's float sequence double for double:
+    same assignments AND bitwise-equal objective/energy/makespan, any
+    register combination.  (Compile cost is amortized by the pow-2 shape
+    buckets — 15 examples share a handful of traced programs.)"""
+    rng = np.random.default_rng(seed)
+    tasks, eps, store, tm = _fleet(rng, n_eps, n_tasks, io_share=0.3)
+    regs = _registers(rng, n_eps, with_fair, with_carbon, with_warm,
+                      with_alive)
+    fairness, carbon, warm, alive = regs
+    a = mhra(tasks, eps, store, tm, alpha=alpha, engine="soa",
+             carbon=carbon, alive=alive, warm=warm, fairness=fairness)
+    b = mhra(tasks, eps, store, tm, alpha=alpha, engine="jax",
+             carbon=carbon, alive=alive, warm=warm, fairness=fairness)
+    assert a.assignments == b.assignments
+    assert a.objective == b.objective          # bitwise, not approx
+    assert a.energy_j == b.energy_j
+    assert a.makespan_s == b.makespan_s
+    assert a.heuristic == b.heuristic
